@@ -1,0 +1,18 @@
+import time
+
+import numpy as np
+
+
+def timeit(fn, *, repeat=3, number=1):
+    """Median wall time per call in microseconds."""
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        for _ in range(number):
+            fn()
+        times.append((time.perf_counter() - t0) / number)
+    return float(np.median(times)) * 1e6
+
+
+def row(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,63 @@
+"""Paper figure: query cost across index variants + the materialization
+trade-off (space vs time, paper §2)."""
+import numpy as np
+
+from repro.core import (
+    ADSConfig, ADSIndex, CTree, CTreeConfig, DiskModel, RawStore,
+    SummarizationConfig,
+)
+from repro.data.synthetic import random_walk
+
+from .common import row, timeit
+
+N, LEN, NQ = 40_000, 128, 16
+CFG = SummarizationConfig(series_len=LEN, n_segments=16, card_bits=8)
+
+
+def main():
+    X = random_walk(N, LEN, seed=0)
+    Q = random_walk(NQ, LEN, seed=42)
+
+    variants = {}
+    for mat in (False, True):
+        disk = DiskModel()
+        raw = RawStore(LEN, disk)
+        ids = raw.append(X)
+        ct = CTree(CTreeConfig(summarization=CFG, block_size=1024,
+                               materialized=mat), disk)
+        ct.bulk_build(X, ids)
+        variants[f"ctree_{'mat' if mat else 'nonmat'}"] = (ct, raw, disk)
+    disk = DiskModel()
+    raw = RawStore(LEN, disk)
+    ids = raw.append(X)
+    ads = ADSIndex(ADSConfig(summarization=CFG, leaf_size=1024), disk)
+    ads.insert_batch(X, ids)
+    variants["adsfull"] = (ads, raw, disk)
+
+    for name, (idx, raw, disk) in variants.items():
+        def exact():
+            for q in Q:
+                idx.knn_exact(q, k=10, raw=raw)
+
+        def approx():
+            for q in Q:
+                idx.knn_approx(q, k=10, raw=raw) if name == "adsfull" else \
+                    idx.knn_approx(q, k=10, n_blocks=2, raw=raw)
+
+        disk.reset()
+        us = timeit(exact, repeat=2) / NQ
+        _, st = idx.knn_exact(Q[0], k=10, raw=raw)
+        io = disk.modeled_seconds() / (NQ * 2 + 1)
+        row(f"query/{name}_exact", us,
+            f"modeled_io_s={io:.4f};blocks_visited={st.blocks_visited};"
+            f"verified={st.entries_verified}")
+        disk.reset()
+        us = timeit(approx, repeat=2) / NQ
+        row(f"query/{name}_approx", us,
+            f"modeled_io_s={disk.modeled_seconds() / (NQ * 2):.5f}")
+
+    # space: the materialization trade-off
+    ct_n = variants["ctree_nonmat"][0].index_bytes()
+    ct_m = variants["ctree_mat"][0].index_bytes()
+    row("query/index_bytes_nonmat", 0.0, f"bytes={ct_n}")
+    row("query/index_bytes_mat", 0.0, f"bytes={ct_m};ratio={ct_m / max(ct_n, 1):.1f}")

@@ -1,0 +1,41 @@
+"""Aggregate the dry-run JSONs into the roofline table (EXPERIMENTS.md
+§Roofline reads this output). One CSV row per (arch x shape x mesh)."""
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_cells(pattern="*.json"):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, pattern))):
+        with open(f) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def main():
+    cells = load_cells()
+    if not cells:
+        print("roofline/no_dryrun_results,0.0,run repro.launch.dryrun first")
+        return
+    for c in cells:
+        r = c["roofline_s"]
+        dom = c["bottleneck"]
+        step_s = max(r.values())
+        mfu = r["compute"] / step_s if step_s else 0.0
+        derived = (
+            f"mesh={c['mesh']};compute_s={r['compute']:.4f};memory_s={r['memory']:.4f};"
+            f"collective_s={r['collective']:.4f};bottleneck={dom};"
+            f"mem_gb={c['mem_per_device']['total_gb']};roofline_frac={mfu:.3f}"
+        )
+        if "useful_flops_ratio" in c:
+            derived += f";useful_ratio={c['useful_flops_ratio']}"
+        variant = c.get("variant", "baseline")
+        row = f"roofline/{c['arch']}__{c.get('shape','')}__{c['mesh']}__{variant}"
+        print(f"{row},{step_s * 1e6:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

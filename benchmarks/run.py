@@ -1,0 +1,20 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import construction, kernels_bench, memory, query, roofline, streaming
+
+    print("name,us_per_call,derived")
+    for mod in (construction, query, streaming, memory, kernels_bench, roofline):
+        try:
+            mod.main()
+        except Exception:  # noqa: BLE001 — keep the harness running
+            name = mod.__name__.split(".")[-1]
+            print(f"{name}/ERROR,0.0,", file=sys.stdout)
+            traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Train a (reduced) LM end-to-end on this host: loss goes down, checkpoints
+are written atomically, and a simulated crash + resume continues exactly.
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+import shutil
+import subprocess
+import sys
+import tempfile
+
+TRAIN = [sys.executable, "-m", "repro.launch.train", "--arch", "smollm-360m",
+         "--smoke", "--global-batch", "8", "--seq-len", "64", "--lr", "1e-3",
+         "--warmup", "10", "--log-every", "20"]
+
+
+def main():
+    ckpt = tempfile.mkdtemp(prefix="coconut_ck_")
+    try:
+        print("== phase 1: train to step 120, crash at 90 (simulated failure) ==")
+        r = subprocess.run(TRAIN + ["--steps", "120", "--ckpt-dir", ckpt,
+                                    "--ckpt-every", "40", "--crash-at", "90"],
+                           env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+                           capture_output=True, text=True)
+        print(r.stdout)
+        assert r.returncode == 17, f"expected simulated crash, got {r.returncode}"
+
+        print("== phase 2: relaunch — auto-resumes from the last checkpoint ==")
+        r = subprocess.run(TRAIN + ["--steps", "120", "--ckpt-dir", ckpt,
+                                    "--ckpt-every", "40"],
+                           env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+                           capture_output=True, text=True)
+        print(r.stdout)
+        assert r.returncode == 0, r.stderr[-1000:]
+        assert "resumed from step 80" in r.stdout
+        losses = [float(l.split("loss=")[1].split()[0])
+                  for l in r.stdout.splitlines() if "loss=" in l]
+        print(f"loss trajectory after resume: {losses}")
+        # random init gives ~ln(49152) ~ 10.8; trained loss must be well below
+        assert losses[-1] < 6.0, "loss should be well below random-init level"
+        print("OK: crash/resume training works; loss far below init")
+    finally:
+        shutil.rmtree(ckpt, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,282 @@
+"""ADSFull / ADS+ baseline — the state of the art the paper demos against.
+
+A top-down-inserted iSAX tree: the root fans out on the first bit of every
+segment; an overflowing leaf splits by promoting the cardinality of one
+segment (round-robin). Every insert descends to a leaf — one random page
+read + one random page write per entry (the cost profile Coconut removes).
+
+Modes:
+  * ``full``      — ADSFull: leaves store the raw series (materialized).
+  * ``adaptive``  — ADS+: construction stores only summarizations with a
+    large leaf threshold (fast, skeletal build); queries adaptively split
+    the leaves they touch down to ``query_leaf_size`` and fetch raw series
+    lazily from the RawStore (random reads at query time).
+
+Implementation note: inserts are batched and partitioned vectorially for
+host speed, but the I/O accounting matches per-entry top-down insertion.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Optional
+
+import numpy as np
+
+from .ctree import QueryStats, RawStore, heap_to_sorted
+from .io_model import DiskModel
+from .lower_bounds import ed2, mindist_paa_sax2, mindist_region2
+from .summarization import SummarizationConfig, paa, sax_from_paa
+
+
+@dataclasses.dataclass
+class ADSConfig:
+    summarization: SummarizationConfig = dataclasses.field(default_factory=SummarizationConfig)
+    leaf_size: int = 1024
+    mode: str = "full"  # full | adaptive
+    query_leaf_size: int = 128  # adaptive-split target during queries
+
+
+class _Node:
+    __slots__ = ("card", "prefix", "children", "split_seg", "sax", "ids", "ts", "series", "n")
+
+    def __init__(self, card: np.ndarray, prefix: np.ndarray):
+        self.card = card  # (w,) bits used per segment at this node
+        self.prefix = prefix  # (w,) symbol prefix (card bits per segment)
+        self.children: Optional[dict] = None  # split bit -> node
+        self.split_seg: int = -1
+        self.sax: Optional[np.ndarray] = None
+        self.ids: Optional[np.ndarray] = None
+        self.ts: Optional[np.ndarray] = None
+        self.series: Optional[np.ndarray] = None
+        self.n = 0
+
+    @property
+    def is_leaf(self) -> bool:
+        return self.children is None
+
+
+class ADSIndex:
+    def __init__(self, cfg: ADSConfig, disk: Optional[DiskModel] = None):
+        self.cfg = cfg
+        self.disk = disk or DiskModel()
+        w = cfg.summarization.n_segments
+        self.root_children: dict[tuple, _Node] = {}
+        self._w = w
+        self._c = cfg.summarization.card_bits
+        self.n = 0
+        self.n_splits = 0
+
+    # ---------------------------------------------------------------- build
+    def insert_batch(
+        self,
+        series: np.ndarray,
+        ids: np.ndarray,
+        ts: Optional[np.ndarray] = None,
+    ) -> None:
+        scfg = self.cfg.summarization
+        series = np.asarray(series, np.float32)
+        syms = sax_from_paa(paa(series, scfg), scfg).astype(np.int16)
+        ids = np.asarray(ids, np.int64)
+        ts = np.asarray(ts, np.int64) if ts is not None else np.zeros(len(ids), np.int64)
+        keep_series = series if self.cfg.mode == "full" else None
+        # per-entry top-down insertion cost: descend (read) + leaf write
+        self.disk.read_rand(len(ids) * self.disk.page_bytes)
+        self.disk.write_rand(len(ids) * self.disk.page_bytes)
+        # root fan-out on the MSB of each segment
+        msb = (syms >> (self._c - 1)).astype(np.int8)  # (B, w) in {0,1}
+        groups: dict[tuple, np.ndarray] = {}
+        view = [tuple(row) for row in msb]
+        for i, key in enumerate(view):
+            groups.setdefault(key, []).append(i)
+        for key, idxs in groups.items():
+            idxs = np.asarray(idxs)
+            node = self.root_children.get(key)
+            if node is None:
+                card = np.ones(self._w, np.int8)
+                prefix = np.asarray(key, np.int16)
+                node = _Node(card, prefix)
+                self.root_children[key] = node
+            self._node_insert(
+                node,
+                syms[idxs],
+                ids[idxs],
+                ts[idxs],
+                keep_series[idxs] if keep_series is not None else None,
+            )
+        self.n += len(ids)
+
+    def _leaf_limit(self) -> int:
+        return self.cfg.leaf_size
+
+    def _node_insert(self, node: _Node, syms, ids, ts, series) -> None:
+        if node.is_leaf:
+            node.sax = syms if node.sax is None else np.concatenate([node.sax, syms])
+            node.ids = ids if node.ids is None else np.concatenate([node.ids, ids])
+            node.ts = ts if node.ts is None else np.concatenate([node.ts, ts])
+            if series is not None:
+                node.series = (
+                    series if node.series is None else np.concatenate([node.series, series])
+                )
+            node.n = len(node.ids)
+            if node.n > self._leaf_limit():
+                self._split(node)
+            return
+        self._route_to_children(node, syms, ids, ts, series)
+
+    def _route_to_children(self, node: _Node, syms, ids, ts, series) -> None:
+        seg = node.split_seg
+        depth = int(node.card[seg]) + 1  # bit position (1-based from MSB) used by children
+        bit = (syms[:, seg] >> (self._c - depth)) & 1
+        for b in (0, 1):
+            m = bit == b
+            if not m.any():
+                continue
+            child = node.children[b]
+            self._node_insert(
+                child, syms[m], ids[m], ts[m], series[m] if series is not None else None
+            )
+
+    def _split(self, node: _Node) -> None:
+        # choose split segment round-robin: least-used cardinality first
+        cands = np.where(node.card < self._c)[0]
+        if cands.size == 0:
+            return  # cannot split further; oversized leaf allowed
+        seg = int(cands[np.argmin(node.card[cands])])
+        node.split_seg = seg
+        node.children = {}
+        newbits = int(node.card[seg]) + 1
+        for b in (0, 1):
+            card = node.card.copy()
+            card[seg] = newbits
+            prefix = node.prefix.copy()
+            prefix[seg] = (prefix[seg] << 1) | b
+            node.children[b] = _Node(card, prefix)
+        syms, ids, ts, series = node.sax, node.ids, node.ts, node.series
+        node.sax = node.ids = node.ts = node.series = None
+        node.n = 0
+        self.n_splits += 1
+        # split rewrites both child pages
+        self.disk.read_rand(self.disk.page_bytes)
+        self.disk.write_rand(2 * self.disk.page_bytes)
+        self._route_to_children(node, syms, ids, ts, series)
+
+    # ---------------------------------------------------------------- query
+    def _node_bounds(self, node: _Node):
+        """(min_sym, max_sym) full-cardinality range covered by the node."""
+        shift = self._c - node.card.astype(np.int32)
+        min_sym = (node.prefix.astype(np.int32) << shift)
+        max_sym = ((node.prefix.astype(np.int32) + 1) << shift) - 1
+        return min_sym, max_sym
+
+    def _leaf_verify(self, node: _Node, q, qp, k, bsf, raw, window, stats, worst_fn):
+        stats.blocks_visited += 1
+        self.disk.read_rand(max(1, node.n) * (self._w + 8))
+        elb = mindist_paa_sax2(qp, node.sax.astype(np.int64), self.cfg.summarization)
+        mask = elb < worst_fn()
+        if window is not None:
+            mask &= (node.ts >= window[0]) & (node.ts <= window[1])
+        stats.entries_pruned += int((~mask).sum())
+        cand = np.nonzero(mask)[0]
+        if cand.size == 0:
+            return bsf
+        if node.series is not None:
+            data = node.series[cand]
+            self.disk.read_rand(data.nbytes)
+        else:
+            if raw is None:
+                raise ValueError("adaptive ADS+ requires a RawStore")
+            data = raw.fetch(node.ids[cand])
+        d2 = ed2(np.asarray(q, np.float32), data)
+        stats.entries_verified += cand.size
+        for dist, pos in zip(d2, cand):
+            item = (-float(dist), int(node.ids[pos]))
+            if len(bsf) < k:
+                heapq.heappush(bsf, item)
+            elif item[0] > bsf[0][0]:
+                heapq.heapreplace(bsf, item)
+        return bsf
+
+    def _maybe_adaptive_split(self, node: _Node) -> None:
+        """ADS+ hardening: split a touched oversized leaf once; the PQ search
+        re-pushes its children, which re-split on pop until within target."""
+        if self.cfg.mode != "adaptive":
+            return
+        if node.is_leaf and node.n > self.cfg.query_leaf_size:
+            self._split(node)
+
+    def knn_exact(self, q, k=1, *, raw: Optional[RawStore] = None, window=None):
+        scfg = self.cfg.summarization
+        qp = np.asarray(paa(np.asarray(q, np.float32), scfg))
+        stats = QueryStats()
+        bsf: list = []
+
+        def worst():
+            return -bsf[0][0] if len(bsf) >= k else np.inf
+
+        pq: list = []
+        counter = 0
+        for node in self.root_children.values():
+            mn, mx = self._node_bounds(node)
+            lb = float(mindist_region2(qp, mn, mx, scfg))
+            counter += 1
+            heapq.heappush(pq, (lb, counter, node))
+        while pq:
+            lb, _, node = heapq.heappop(pq)
+            if lb >= worst():
+                stats.blocks_pruned += 1 + len(pq)
+                break
+            self.disk.read_rand(self.disk.page_bytes)  # node page touch
+            if node.is_leaf:
+                if node.n == 0:
+                    continue
+                if self.cfg.mode == "adaptive" and node.n > self.cfg.query_leaf_size:
+                    self._maybe_adaptive_split(node)
+                    if not node.is_leaf:
+                        for child in node.children.values():
+                            mn, mx = self._node_bounds(child)
+                            clb = float(mindist_region2(qp, mn, mx, scfg))
+                            counter += 1
+                            heapq.heappush(pq, (clb, counter, child))
+                        continue
+                bsf = self._leaf_verify(node, q, qp, k, bsf, raw, window, stats, worst)
+            else:
+                for child in node.children.values():
+                    mn, mx = self._node_bounds(child)
+                    clb = float(mindist_region2(qp, mn, mx, scfg))
+                    counter += 1
+                    heapq.heappush(pq, (clb, counter, child))
+        return heap_to_sorted(bsf), stats
+
+    def knn_approx(self, q, k=1, *, raw=None, window=None):
+        """Descend to the single leaf the query maps to and verify it."""
+        scfg = self.cfg.summarization
+        qp = np.asarray(paa(np.asarray(q, np.float32), scfg))
+        qsym = sax_from_paa(qp, scfg).astype(np.int16)
+        stats = QueryStats()
+        bsf: list = []
+        key = tuple((qsym >> (self._c - 1)).tolist())
+        node = self.root_children.get(key)
+        while node is not None and not node.is_leaf:
+            self.disk.read_rand(self.disk.page_bytes)
+            depth = int(node.card[node.split_seg]) + 1
+            b = int((qsym[node.split_seg] >> (self._c - depth)) & 1)
+            node = node.children[b]
+        if node is None or node.n == 0:
+            return [], stats
+        bsf = self._leaf_verify(node, q, qp, k, bsf, raw, window, stats, lambda: np.inf)
+        return heap_to_sorted(bsf), stats
+
+    def index_bytes(self) -> int:
+        total = 0
+        stack = list(self.root_children.values())
+        while stack:
+            node = stack.pop()
+            if node.is_leaf:
+                if node.sax is not None:
+                    total += node.sax.nbytes + node.ids.nbytes + node.ts.nbytes
+                    if node.series is not None:
+                        total += node.series.nbytes
+            else:
+                stack.extend(node.children.values())
+        return total

@@ -1,0 +1,201 @@
+"""CoconutLSM — the write-optimized log-structured Coconut index.
+
+Incoming series accumulate in an in-memory buffer; each flush external-sorts
+the buffer into a level-0 :class:`SortedRun` (sequential write). When a level
+collects ``growth_factor`` runs they are sort-merged into one run at the next
+level (tiering). Every run carries its time range, which is contiguous in
+stream order — this is exactly what Bounded Temporal Partitioning (BTP)
+needs: newer data in small recent runs, older data in large merged runs, and
+window queries skip runs whose time range misses the window.
+
+The ``growth_factor`` knob trades writes (merge work) against reads (number
+of runs a query must probe) — paper §2 "Better Read vs. Write Trade-Offs".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .ctree import QueryStats, RawStore, SortedRun, heap_to_sorted
+from .io_model import DiskModel
+from .summarization import SummarizationConfig, paa, sax_from_paa
+
+
+@dataclasses.dataclass
+class CLSMConfig:
+    summarization: SummarizationConfig = dataclasses.field(default_factory=SummarizationConfig)
+    buffer_entries: int = 4096
+    growth_factor: int = 4
+    block_size: int = 512
+    materialized: bool = False
+    merge: bool = True  # False => TP (flush-only temporal partitions)
+
+
+class CLSM:
+    def __init__(self, cfg: CLSMConfig, disk: Optional[DiskModel] = None):
+        self.cfg = cfg
+        self.disk = disk or DiskModel()
+        self.levels: dict[int, list[SortedRun]] = {}
+        self._buf_series: list[np.ndarray] = []
+        self._buf_ids: list[np.ndarray] = []
+        self._buf_ts: list[np.ndarray] = []
+        self._buf_n = 0
+        self.n_flushes = 0
+        self.n_merges = 0
+        self.merged_bytes = 0
+
+    # ---------------------------------------------------------------- ingest
+    def insert(self, series: np.ndarray, ids: np.ndarray, ts: np.ndarray) -> None:
+        series = np.asarray(series, np.float32)
+        self._buf_series.append(series)
+        self._buf_ids.append(np.asarray(ids, np.int64))
+        self._buf_ts.append(np.asarray(ts, np.int64))
+        self._buf_n += series.shape[0]
+        while self._buf_n >= self.cfg.buffer_entries:
+            self._flush()
+
+    def _take_buffer(self, n: int):
+        series = np.concatenate(self._buf_series)
+        ids = np.concatenate(self._buf_ids)
+        ts = np.concatenate(self._buf_ts)
+        take = slice(0, n)
+        rest = slice(n, None)
+        out = (series[take], ids[take], ts[take])
+        self._buf_series = [series[rest]] if series.shape[0] > n else []
+        self._buf_ids = [ids[rest]] if series.shape[0] > n else []
+        self._buf_ts = [ts[rest]] if series.shape[0] > n else []
+        self._buf_n = max(0, self._buf_n - n)
+        return out
+
+    def _flush(self) -> None:
+        n = min(self.cfg.buffer_entries, self._buf_n)
+        if n == 0:
+            return
+        series, ids, ts = self._take_buffer(n)
+        run, _ = SortedRun.build(
+            series,
+            ids,
+            self.cfg.summarization,
+            block_size=self.cfg.block_size,
+            materialized=self.cfg.materialized,
+            ts=ts,
+            disk=self.disk,
+            mem_budget_entries=self.cfg.buffer_entries,
+        )
+        self.levels.setdefault(0, []).append(run)
+        self.n_flushes += 1
+        if self.cfg.merge:
+            self._maybe_merge(0)
+
+    def flush_all(self) -> None:
+        while self._buf_n > 0:
+            self._flush()
+
+    def _maybe_merge(self, level: int) -> None:
+        runs = self.levels.get(level, [])
+        while len(runs) >= self.cfg.growth_factor:
+            merged = self._merge_runs(runs[: self.cfg.growth_factor])
+            del runs[: self.cfg.growth_factor]
+            self.levels.setdefault(level + 1, []).append(merged)
+            self._maybe_merge(level + 1)
+            runs = self.levels.get(level, [])
+
+    def _merge_runs(self, runs: list[SortedRun]) -> SortedRun:
+        """Sort-merge runs (sequential read of inputs + sequential write)."""
+        scfg = self.cfg.summarization
+        syms = np.concatenate([r.sax for r in runs])
+        ids = np.concatenate([r.ids for r in runs])
+        ts = np.concatenate([r.ts for r in runs]) if runs[0].ts is not None else None
+        series = (
+            np.concatenate([r.series for r in runs]) if runs[0].materialized else None
+        )
+        in_bytes = sum(r.index_bytes() for r in runs)
+        self.disk.read_seq(in_bytes)
+        merged, _ = SortedRun.from_arrays(
+            scfg,
+            syms,
+            ids,
+            block_size=self.cfg.block_size,
+            series=series,
+            ts=ts,
+            disk=None,  # accounted below as one sequential write
+            mem_budget_entries=max(1, self.cfg.buffer_entries),
+        )
+        self.disk.write_seq(merged.index_bytes())
+        self.n_merges += 1
+        self.merged_bytes += in_bytes
+        return merged
+
+    # ---------------------------------------------------------------- query
+    def runs_newest_first(self) -> list[SortedRun]:
+        out: list[SortedRun] = []
+        for level in sorted(self.levels):
+            out.extend(reversed(self.levels[level]))
+        return out
+
+    def _buffer_scan(self, q, k, bsf, window):
+        import heapq
+
+        from .lower_bounds import ed2
+
+        if self._buf_n == 0:
+            return bsf
+        series = np.concatenate(self._buf_series)
+        ids = np.concatenate(self._buf_ids)
+        ts = np.concatenate(self._buf_ts)
+        m = np.ones(series.shape[0], bool)
+        if window is not None:
+            m = (ts >= window[0]) & (ts <= window[1])
+        if m.any():
+            d2 = ed2(np.asarray(q, np.float32), series[m])
+            for dist, i in zip(d2, ids[m]):
+                item = (-float(dist), int(i))
+                if len(bsf) < k:
+                    heapq.heappush(bsf, item)
+                elif item[0] > bsf[0][0]:
+                    heapq.heapreplace(bsf, item)
+        return bsf
+
+    def knn_exact(self, q, k=1, *, raw: Optional[RawStore] = None, window=None):
+        bsf: list = []
+        stats = QueryStats()
+        bsf = self._buffer_scan(q, k, bsf, window)
+        for run in self.runs_newest_first():
+            bsf, stats = run.knn_exact(
+                q, k, raw=raw, disk=self.disk, bsf=bsf, window=window, stats=stats
+            )
+        return heap_to_sorted(bsf), stats
+
+    def knn_approx(self, q, k=1, *, n_blocks=1, raw=None, window=None):
+        """Approximate search probes the adjacent blocks of every live run
+        (BTP bounds the run count, so this is a bounded number of I/Os)."""
+        import heapq
+
+        bsf: list = []
+        stats = QueryStats()
+        bsf = self._buffer_scan(q, k, bsf, window)
+        for run in self.runs_newest_first():
+            if window is not None and run.ts is not None and (
+                run.t_max < window[0] or run.t_min > window[1]
+            ):
+                continue
+            part, st = run.knn_approx(
+                q, k, n_blocks=n_blocks, raw=raw, disk=self.disk, window=window
+            )
+            stats = stats.merge(st)
+            for nd, i in part:
+                item = (nd, i)
+                if len(bsf) < k:
+                    heapq.heappush(bsf, item)
+                elif item[0] > bsf[0][0]:
+                    heapq.heapreplace(bsf, item)
+        return heap_to_sorted(bsf), stats
+
+    @property
+    def n_runs(self) -> int:
+        return sum(len(v) for v in self.levels.values())
+
+    def index_bytes(self) -> int:
+        return sum(r.index_bytes() for rs in self.levels.values() for r in rs)

@@ -1,0 +1,490 @@
+"""CoconutTree — the compact & contiguous read-optimized sorted index.
+
+A CTree is a single :class:`SortedRun`: entries sorted by the bit-interleaved
+sortable key, stored contiguously in fixed-size blocks with per-block zone
+maps (min/max SAX symbol per segment) for block-level lower-bound pruning.
+It is built bottom-up with a memory-budgeted external sort (sequential I/O
+only) — the paper's headline capability.
+
+Variants (paper §2):
+  * materialized:     raw series stored inline in sorted order (bigger,
+                      slower to build, fastest to query);
+  * non-materialized: only summaries + ids; verification fetches raw series
+                      from the RawStore (random I/O at query time).
+  * fill_factor < 1:  leaves leave gaps so point inserts can be absorbed
+                      without rebuilding (read/write trade-off knob).
+
+``SortedRun`` is shared with CoconutLSM (a CLSM level run is the same
+structure plus a time range).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Optional
+
+import numpy as np
+
+from .external_sort import SortReport, external_sort_order
+from .io_model import DiskModel
+from .lower_bounds import ed2, mindist_paa_sax2, mindist_region2
+from .sortable import interleave, searchsorted_keys
+from .summarization import SummarizationConfig, paa, sax_from_paa
+
+
+@dataclasses.dataclass
+class QueryStats:
+    blocks_pruned: int = 0
+    blocks_visited: int = 0
+    entries_pruned: int = 0
+    entries_verified: int = 0
+
+    def merge(self, o: "QueryStats") -> "QueryStats":
+        return QueryStats(
+            self.blocks_pruned + o.blocks_pruned,
+            self.blocks_visited + o.blocks_visited,
+            self.entries_pruned + o.entries_pruned,
+            self.entries_verified + o.entries_verified,
+        )
+
+
+class RawStore:
+    """The raw data-series file. Append-only; random reads are accounted."""
+
+    def __init__(self, series_len: int, disk: Optional[DiskModel] = None):
+        self.series_len = series_len
+        self.disk = disk or DiskModel()
+        self._chunks: list[np.ndarray] = []
+        self._data: Optional[np.ndarray] = None
+        self.n = 0
+
+    def append(self, series: np.ndarray) -> np.ndarray:
+        """Append (B, n) series; returns their ids. Sequential write."""
+        series = np.asarray(series, dtype=np.float32)
+        ids = np.arange(self.n, self.n + series.shape[0], dtype=np.int64)
+        self._chunks.append(series)
+        self._data = None
+        self.n += series.shape[0]
+        self.disk.write_seq(series.nbytes, offset=int(ids[0]) * self.series_len * 4)
+        return ids
+
+    def _all(self) -> np.ndarray:
+        if self._data is None:
+            self._data = (
+                np.concatenate(self._chunks, axis=0)
+                if self._chunks
+                else np.zeros((0, self.series_len), np.float32)
+            )
+        return self._data
+
+    def fetch(self, ids: np.ndarray) -> np.ndarray:
+        """Random fetch by id (the non-materialized query path)."""
+        ids = np.asarray(ids)
+        row = self.series_len * 4
+        if self.disk.keep_log and ids.size:
+            for i in ids:  # scattered page touches for the heat map
+                self.disk.read_rand(row, offset=int(i) * row)
+        else:
+            self.disk.read_rand(ids.size * row)
+        return self._all()[ids]
+
+    def scan(self) -> np.ndarray:
+        """Full sequential scan (used by builds)."""
+        data = self._all()
+        self.disk.read_seq(data.nbytes)
+        return data
+
+
+@dataclasses.dataclass
+class SortedRun:
+    """A contiguous sorted-by-key array of summarized entries + zone maps."""
+
+    cfg: SummarizationConfig
+    keys: np.ndarray  # (N, nw) uint32, lexicographically sorted
+    sax: np.ndarray  # (N, w) uint8
+    ids: np.ndarray  # (N,) int64 position in RawStore
+    block_size: int
+    bmin: np.ndarray  # (nb, w) uint8 zone maps
+    bmax: np.ndarray  # (nb, w) uint8
+    series: Optional[np.ndarray] = None  # (N, n) f32 if materialized
+    ts: Optional[np.ndarray] = None  # (N,) int64 timestamps
+    t_min: int = 0
+    t_max: int = 0
+
+    @property
+    def n(self) -> int:
+        return self.keys.shape[0]
+
+    @property
+    def n_blocks(self) -> int:
+        return self.bmin.shape[0]
+
+    @property
+    def materialized(self) -> bool:
+        return self.series is not None
+
+    def index_bytes(self) -> int:
+        b = self.keys.nbytes + self.sax.nbytes + self.ids.nbytes
+        b += self.bmin.nbytes + self.bmax.nbytes
+        if self.series is not None:
+            b += self.series.nbytes
+        if self.ts is not None:
+            b += self.ts.nbytes
+        return b
+
+    # ------------------------------------------------------------------ build
+    @staticmethod
+    def from_arrays(
+        cfg: SummarizationConfig,
+        sax_syms: np.ndarray,
+        ids: np.ndarray,
+        *,
+        block_size: int = 1024,
+        series: Optional[np.ndarray] = None,
+        ts: Optional[np.ndarray] = None,
+        disk: Optional[DiskModel] = None,
+        mem_budget_entries: Optional[int] = None,
+        presorted: bool = False,
+    ) -> tuple["SortedRun", SortReport]:
+        """Build a run from unsorted summarized entries via external sort."""
+        keys = interleave(sax_syms.astype(np.int32), cfg).reshape(-1, cfg.key_words)
+        n = keys.shape[0]
+        payload = cfg.series_len * 4 if series is not None else 0
+        if presorted:
+            order = np.arange(n)
+            report = SortReport(n, 1, 0, n or 1)
+        else:
+            order, report = external_sort_order(
+                keys, mem_budget_entries or max(1, n), disk, payload_bytes_per_entry=payload
+            )
+        keys = keys[order]
+        sax_sorted = sax_syms[order].astype(np.uint8)
+        run = SortedRun(
+            cfg=cfg,
+            keys=keys,
+            sax=sax_sorted,
+            ids=np.asarray(ids)[order].astype(np.int64),
+            block_size=block_size,
+            bmin=np.zeros((0, cfg.n_segments), np.uint8),
+            bmax=np.zeros((0, cfg.n_segments), np.uint8),
+            series=None if series is None else np.asarray(series, np.float32)[order],
+            ts=None if ts is None else np.asarray(ts, np.int64)[order],
+        )
+        run._rebuild_zone_maps()
+        if run.ts is not None and run.n:
+            run.t_min = int(run.ts.min())
+            run.t_max = int(run.ts.max())
+        return run, report
+
+    @staticmethod
+    def build(
+        series: np.ndarray,
+        ids: np.ndarray,
+        cfg: SummarizationConfig,
+        *,
+        block_size: int = 1024,
+        materialized: bool = False,
+        ts: Optional[np.ndarray] = None,
+        disk: Optional[DiskModel] = None,
+        mem_budget_entries: Optional[int] = None,
+    ) -> tuple["SortedRun", SortReport]:
+        p = paa(np.asarray(series, np.float32), cfg)
+        syms = sax_from_paa(p, cfg)
+        return SortedRun.from_arrays(
+            cfg,
+            syms,
+            ids,
+            block_size=block_size,
+            series=series if materialized else None,
+            ts=ts,
+            disk=disk,
+            mem_budget_entries=mem_budget_entries,
+        )
+
+    def _rebuild_zone_maps(self) -> None:
+        n, w = self.n, self.cfg.n_segments
+        bs = self.block_size
+        nb = max(1, -(-n // bs)) if n else 0
+        bmin = np.full((nb, w), 255, np.uint8)
+        bmax = np.zeros((nb, w), np.uint8)
+        for b in range(nb):
+            blk = self.sax[b * bs : (b + 1) * bs]
+            bmin[b] = blk.min(axis=0)
+            bmax[b] = blk.max(axis=0)
+        self.bmin, self.bmax = bmin, bmax
+
+    # ------------------------------------------------------------------ query
+    def _entry_bytes(self) -> int:
+        per = self.cfg.key_words * 4 + self.cfg.n_segments + 8
+        if self.materialized:
+            per += self.cfg.series_len * 4
+        if self.ts is not None:
+            per += 8
+        return per
+
+    def _verify_entries(
+        self,
+        idx: np.ndarray,
+        q: np.ndarray,
+        raw: Optional[RawStore],
+        disk: Optional[DiskModel],
+        sequential: bool,
+    ) -> np.ndarray:
+        """True squared ED for entries at positions ``idx``."""
+        if idx.size == 0:
+            return np.zeros((0,), np.float32)
+        if self.materialized:
+            data = self.series[idx]
+            if disk is not None:
+                nbytes = idx.size * self.cfg.series_len * 4
+                (disk.read_seq if sequential else disk.read_rand)(nbytes)
+        else:
+            if raw is None:
+                raise ValueError("non-materialized run queried without a RawStore")
+            data = raw.fetch(self.ids[idx])
+        return ed2(q, data).astype(np.float32)
+
+    def knn_exact(
+        self,
+        q: np.ndarray,
+        k: int = 1,
+        *,
+        raw: Optional[RawStore] = None,
+        disk: Optional[DiskModel] = None,
+        bsf: Optional[list] = None,
+        window: Optional[tuple[int, int]] = None,
+        stats: Optional[QueryStats] = None,
+    ) -> tuple[list, QueryStats]:
+        """Exact kNN within this run, sharing a best-so-far heap across runs.
+
+        ``bsf`` is a max-heap of (-dist2, id) of current best k. Returns the
+        updated heap. ``window=(t0, t1)`` filters by timestamp (inclusive).
+        """
+        stats = stats or QueryStats()
+        bsf = bsf if bsf is not None else []
+        if self.n == 0:
+            return bsf, stats
+        if window is not None and self.ts is not None:
+            if self.t_max < window[0] or self.t_min > window[1]:
+                stats.blocks_pruned += self.n_blocks
+                return bsf, stats
+        qp = np.asarray(paa(np.asarray(q, np.float32), self.cfg))
+
+        # block-level lower bounds from zone maps (vectorized)
+        blb = mindist_region2(qp, self.bmin.astype(np.int64), self.bmax.astype(np.int64), self.cfg)
+        order = np.argsort(blb, kind="stable")
+        bs = self.block_size
+        for oi, b in enumerate(order):
+            worst = -bsf[0][0] if len(bsf) >= k else np.inf
+            if blb[b] >= worst:
+                stats.blocks_pruned += len(order) - oi
+                break
+            stats.blocks_visited += 1
+            lo, hi = b * bs, min(self.n, (b + 1) * bs)
+            sl = slice(lo, hi)
+            if disk is not None:
+                disk.read_rand(
+                    (hi - lo) * (self.cfg.key_words * 4 + self.cfg.n_segments),
+                    offset=lo * self._entry_bytes(),
+                )
+            mask = np.ones(hi - lo, bool)
+            if window is not None and self.ts is not None:
+                mask &= (self.ts[sl] >= window[0]) & (self.ts[sl] <= window[1])
+            elb = mindist_paa_sax2(qp, self.sax[sl].astype(np.int64), self.cfg)
+            keep = mask & (elb < worst)
+            stats.entries_pruned += int((~keep).sum())
+            cand = np.nonzero(keep)[0]
+            if cand.size == 0:
+                continue
+            d2 = self._verify_entries(cand + lo, q, raw, disk, sequential=self.materialized)
+            stats.entries_verified += cand.size
+            for dist, pos in zip(d2, cand + lo):
+                item = (-float(dist), int(self.ids[pos]))
+                if len(bsf) < k:
+                    heapq.heappush(bsf, item)
+                elif item[0] > bsf[0][0]:
+                    heapq.heapreplace(bsf, item)
+        return bsf, stats
+
+    def knn_approx(
+        self,
+        q: np.ndarray,
+        k: int = 1,
+        *,
+        n_blocks: int = 1,
+        raw: Optional[RawStore] = None,
+        disk: Optional[DiskModel] = None,
+        window: Optional[tuple[int, int]] = None,
+    ) -> tuple[list, QueryStats]:
+        """Approximate kNN: verify only the blocks adjacent to the query key
+        position (one sequential read — the sortable-summarization payoff)."""
+        stats = QueryStats()
+        if self.n == 0:
+            return [], stats
+        qp = np.asarray(paa(np.asarray(q, np.float32), self.cfg))
+        qsym = sax_from_paa(qp, self.cfg).astype(np.int32)
+        qkey = interleave(qsym, self.cfg).reshape(-1)
+        pos = searchsorted_keys(self.keys, qkey)
+        bs = self.block_size
+        bc = pos // bs
+        b0 = max(0, bc - (n_blocks - 1) // 2)
+        b1 = min(self.n_blocks, b0 + n_blocks)
+        lo, hi = b0 * bs, min(self.n, b1 * bs)
+        stats.blocks_visited += b1 - b0
+        if disk is not None:
+            disk.read_seq((hi - lo) * self._entry_bytes(), offset=lo * self._entry_bytes())
+        idx = np.arange(lo, hi)
+        if window is not None and self.ts is not None:
+            idx = idx[(self.ts[idx] >= window[0]) & (self.ts[idx] <= window[1])]
+        d2 = self._verify_entries(idx, q, raw, disk, sequential=True)
+        stats.entries_verified += idx.size
+        bsf: list = []
+        for dist, pos_i in zip(d2, idx):
+            item = (-float(dist), int(self.ids[pos_i]))
+            if len(bsf) < k:
+                heapq.heappush(bsf, item)
+            elif item[0] > bsf[0][0]:
+                heapq.heapreplace(bsf, item)
+        return bsf, stats
+
+
+def heap_to_sorted(bsf: list) -> list[tuple[float, int]]:
+    """Convert a (-d2, id) max-heap into [(d2, id)] ascending by distance."""
+    return sorted(((-nd, i) for nd, i in bsf))
+
+
+@dataclasses.dataclass
+class CTreeConfig:
+    summarization: SummarizationConfig = dataclasses.field(default_factory=SummarizationConfig)
+    block_size: int = 1024
+    materialized: bool = False
+    fill_factor: float = 1.0  # <1 leaves insert gaps (update-tolerant)
+    mem_budget_entries: int = 1 << 20
+
+
+class CTree:
+    """The read-optimized Coconut index: one SortedRun + insert gaps."""
+
+    def __init__(self, cfg: CTreeConfig, disk: Optional[DiskModel] = None):
+        self.cfg = cfg
+        self.disk = disk or DiskModel()
+        self.run: Optional[SortedRun] = None
+        # overflow entries absorbed by gaps (kept summarized + optionally raw)
+        self._pending: list[tuple[np.ndarray, np.ndarray, Optional[np.ndarray], Optional[np.ndarray]]] = []
+        self._pending_n = 0
+        self.build_report: Optional[SortReport] = None
+
+    # ---------------------------------------------------------------- build
+    def bulk_build(
+        self,
+        series: np.ndarray,
+        ids: np.ndarray,
+        ts: Optional[np.ndarray] = None,
+    ) -> SortReport:
+        scfg = self.cfg.summarization
+        eff_block = max(8, int(self.cfg.block_size * self.cfg.fill_factor))
+        self.run, report = SortedRun.build(
+            series,
+            ids,
+            scfg,
+            block_size=eff_block,
+            materialized=self.cfg.materialized,
+            ts=ts,
+            disk=self.disk,
+            mem_budget_entries=self.cfg.mem_budget_entries,
+        )
+        self.build_report = report
+        return report
+
+    @property
+    def gap_capacity(self) -> int:
+        if self.run is None:
+            return 0
+        full = self.cfg.block_size
+        eff = self.run.block_size
+        return (full - eff) * self.run.n_blocks
+
+    def insert(
+        self,
+        series: np.ndarray,
+        ids: np.ndarray,
+        ts: Optional[np.ndarray] = None,
+    ) -> bool:
+        """Absorb inserts into leaf gaps (random writes); returns True if a
+        rebuild was triggered (gaps exhausted)."""
+        series = np.asarray(series, np.float32)
+        scfg = self.cfg.summarization
+        syms = sax_from_paa(paa(series, scfg), scfg).astype(np.uint8)
+        self._pending.append((syms, np.asarray(ids, np.int64), series if self.cfg.materialized else None, ts))
+        self._pending_n += series.shape[0]
+        # each absorbed insert costs one random page read + write (find leaf, write gap)
+        self.disk.read_rand(series.shape[0] * self.disk.page_bytes)
+        self.disk.write_rand(series.shape[0] * self.disk.page_bytes)
+        if self._pending_n > self.gap_capacity:
+            self._rebuild_with_pending()
+            return True
+        return False
+
+    def _rebuild_with_pending(self) -> None:
+        assert self.run is not None
+        scfg = self.cfg.summarization
+        syms = np.concatenate([self.run.sax] + [p[0] for p in self._pending])
+        ids = np.concatenate([self.run.ids] + [p[1] for p in self._pending])
+        series = None
+        if self.cfg.materialized:
+            series = np.concatenate([self.run.series] + [p[2] for p in self._pending])
+        ts = None
+        if self.run.ts is not None:
+            ts = np.concatenate(
+                [self.run.ts] + [p[3] if p[3] is not None else np.zeros(len(p[1]), np.int64) for p in self._pending]
+            )
+        eff_block = max(8, int(self.cfg.block_size * self.cfg.fill_factor))
+        self.run, self.build_report = SortedRun.from_arrays(
+            scfg,
+            syms,
+            ids,
+            block_size=eff_block,
+            series=series,
+            ts=ts,
+            disk=self.disk,
+            mem_budget_entries=self.cfg.mem_budget_entries,
+        )
+        self._pending, self._pending_n = [], 0
+
+    # ---------------------------------------------------------------- query
+    def _pending_scan(self, q, k, bsf, raw, window):
+        """Brute-force the (small) gap-absorbed set."""
+        scfg = self.cfg.summarization
+        for syms, ids, series, ts in self._pending:
+            if window is not None and ts is not None:
+                m = (ts >= window[0]) & (ts <= window[1])
+            else:
+                m = np.ones(len(ids), bool)
+            if not m.any():
+                continue
+            data = series[m] if series is not None else raw.fetch(ids[m])
+            d2 = ed2(np.asarray(q, np.float32), data)
+            for dist, i in zip(d2, ids[m]):
+                item = (-float(dist), int(i))
+                if len(bsf) < k:
+                    heapq.heappush(bsf, item)
+                elif item[0] > bsf[0][0]:
+                    heapq.heapreplace(bsf, item)
+        return bsf
+
+    def knn_exact(self, q, k=1, *, raw=None, window=None):
+        if self.run is None:
+            return [], QueryStats()
+        bsf, stats = self.run.knn_exact(q, k, raw=raw, disk=self.disk, window=window)
+        bsf = self._pending_scan(q, k, bsf, raw, window)
+        return heap_to_sorted(bsf), stats
+
+    def knn_approx(self, q, k=1, *, n_blocks=1, raw=None, window=None):
+        if self.run is None:
+            return [], QueryStats()
+        bsf, stats = self.run.knn_approx(q, k, n_blocks=n_blocks, raw=raw, disk=self.disk, window=window)
+        bsf = self._pending_scan(q, k, bsf, raw, window)
+        return heap_to_sorted(bsf), stats
+
+    def index_bytes(self) -> int:
+        return 0 if self.run is None else self.run.index_bytes()

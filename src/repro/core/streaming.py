@@ -1,0 +1,123 @@
+"""Streaming window-query schemes: PP, TP, BTP (paper §3).
+
+All three answer ``window_knn(q, t0, t1, k)`` — nearest neighbors among
+series whose timestamp falls in [t0, t1] — over a continuously ingested
+stream. They differ in how the temporal dimension is physically organized:
+
+* **PP (Post-Processing)** — one aggressively-merged index; every entry's
+  timestamp is examined during verification and out-of-window entries are
+  discarded. No partition can be skipped by time.
+* **TP (Temporal Partitioning)** — a new immutable partition per buffer
+  flush, never merged. Window queries only touch partitions whose creation
+  range intersects the window, but partition count grows without bound and
+  small partitions prune poorly.
+* **BTP (Bounded Temporal Partitioning)** — the paper's contribution,
+  enabled by sortable summarizations: flushed partitions are sort-merged
+  with similar-sized ones (LSM tiering), so newer data lives in small runs
+  and older data in large contiguous runs. Small windows skip big runs (like
+  TP); large windows benefit from the strong spatial pruning of big sorted
+  runs (like PP); the number of partitions any query touches is bounded by
+  growth_factor * log(N).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .clsm import CLSM, CLSMConfig
+from .ctree import QueryStats, RawStore, heap_to_sorted
+from .summarization import SummarizationConfig
+
+
+@dataclasses.dataclass
+class StreamConfig:
+    scheme: str = "BTP"  # PP | TP | BTP
+    summarization: SummarizationConfig = dataclasses.field(default_factory=SummarizationConfig)
+    buffer_entries: int = 4096
+    growth_factor: int = 4
+    block_size: int = 512
+    materialized: bool = False
+
+
+class StreamingIndex:
+    """A streaming Coconut index with a pluggable temporal scheme."""
+
+    def __init__(self, cfg: StreamConfig, raw: Optional[RawStore] = None):
+        if cfg.scheme not in ("PP", "TP", "BTP"):
+            raise ValueError(f"unknown scheme {cfg.scheme}")
+        self.cfg = cfg
+        self.raw = raw or RawStore(cfg.summarization.series_len)
+        lsm_cfg = CLSMConfig(
+            summarization=cfg.summarization,
+            buffer_entries=cfg.buffer_entries,
+            # PP merges eagerly into one big structure (growth factor 2 keeps
+            # run count minimal); TP never merges; BTP uses the tunable factor.
+            growth_factor=2 if cfg.scheme == "PP" else cfg.growth_factor,
+            block_size=cfg.block_size,
+            materialized=cfg.materialized,
+            merge=cfg.scheme != "TP",
+        )
+        self.lsm = CLSM(lsm_cfg, disk=self.raw.disk)
+        self._window_skip = cfg.scheme in ("TP", "BTP")
+
+    # ---------------------------------------------------------------- ingest
+    def ingest(self, series: np.ndarray, ts: np.ndarray) -> np.ndarray:
+        """Append a stream batch; returns assigned ids."""
+        ids = self.raw.append(series)
+        self.lsm.insert(series, ids, ts)
+        return ids
+
+    # ---------------------------------------------------------------- query
+    def window_knn(self, q, t0: int, t1: int, k: int = 1, exact: bool = True):
+        window = (int(t0), int(t1))
+        if not self._window_skip:
+            # PP: disable run-level temporal skipping but keep entry filtering
+            bsf: list = []
+            stats = QueryStats()
+            bsf = self.lsm._buffer_scan(q, k, bsf, window)
+            for run in self.lsm.runs_newest_first():
+                saved = (run.t_min, run.t_max)
+                run.t_min, run.t_max = window  # force overlap => no skip
+                try:
+                    if exact:
+                        bsf, stats = run.knn_exact(
+                            q, k, raw=self.raw, disk=self.lsm.disk, bsf=bsf,
+                            window=window, stats=stats,
+                        )
+                    else:
+                        import heapq
+
+                        part, st = run.knn_approx(
+                            q, k, raw=self.raw, disk=self.lsm.disk, window=window
+                        )
+                        stats = stats.merge(st)
+                        for item in part:
+                            if len(bsf) < k:
+                                heapq.heappush(bsf, item)
+                            elif item[0] > bsf[0][0]:
+                                heapq.heapreplace(bsf, item)
+                finally:
+                    run.t_min, run.t_max = saved
+            return heap_to_sorted(bsf), stats
+        if exact:
+            return self.lsm.knn_exact(q, k, raw=self.raw, window=window)
+        return self.lsm.knn_approx(q, k, raw=self.raw, window=window)
+
+    def knn(self, q, k: int = 1, exact: bool = True):
+        """Whole-history query (no window)."""
+        if exact:
+            return self.lsm.knn_exact(q, k, raw=self.raw)
+        return self.lsm.knn_approx(q, k, raw=self.raw)
+
+    # ---------------------------------------------------------------- stats
+    @property
+    def n_partitions(self) -> int:
+        return self.lsm.n_runs
+
+    def io_stats(self):
+        return self.raw.disk.stats
+
+    def index_bytes(self) -> int:
+        return self.lsm.index_bytes()

@@ -1,0 +1,4 @@
+# Pallas TPU kernels for the Coconut hot paths (validated interpret=True on
+# CPU): PAA summarize, SAX quantize + bit-interleave (sortable keys), blocked
+# min-ED scan (MXU form), and the MINDIST lower-bound filter.
+from . import ops, ref

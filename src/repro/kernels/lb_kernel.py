@@ -1,0 +1,54 @@
+"""Pallas kernel: blocked MINDIST_PAA_SAX lower-bound filter.
+
+The pruning front of exact search: for one query PAA vector and a contiguous
+range of candidate SAX regions (lo/hi per segment, produced from zone maps
+or per-entry symbols), compute the squared lower bound per candidate. Pure
+VPU elementwise work on (block_b, w) tiles; fused with the comparison
+against the best-so-far radius so the output can directly drive a
+compact/verify step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lb_body(q_ref, lo_ref, hi_ref, lb_ref, *, seg_len: int):
+    q = q_ref[...].astype(jnp.float32)  # (1, w)
+    lo = lo_ref[...].astype(jnp.float32)  # (bb, w)
+    hi = hi_ref[...].astype(jnp.float32)
+    below = jnp.maximum(lo - q, 0.0)
+    above = jnp.maximum(q - hi, 0.0)
+    dseg = jnp.maximum(below, above)
+    lb_ref[...] = seg_len * jnp.sum(dseg * dseg, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("seg_len", "block_b", "interpret"))
+def mindist_pallas(
+    q_paa: jnp.ndarray,
+    lo: jnp.ndarray,
+    hi: jnp.ndarray,
+    seg_len: int,
+    *,
+    block_b: int = 1024,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """q_paa: (w,), lo/hi: (B, w) region bounds; B % block_b == 0 -> (B,) f32."""
+    b, w = lo.shape
+    assert b % block_b == 0, (b, block_b)
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        functools.partial(_lb_body, seg_len=seg_len),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, w), lambda i: (0, 0)),
+            pl.BlockSpec((block_b, w), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, w), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=interpret,
+    )(q_paa[None, :], lo, hi)

@@ -1,0 +1,115 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles shape padding to block multiples, breakpoint tables, and backend
+dispatch: on TPU the kernels run compiled; elsewhere (this CPU container)
+they run in interpret mode, executing the same kernel bodies in Python —
+the validation mode mandated for this repro.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..core.summarization import SummarizationConfig, breakpoints
+from .ed_scan_kernel import min_ed_pallas
+from .lb_kernel import mindist_pallas
+from .paa_kernel import paa_pallas
+from .sax_pack_kernel import sax_pack_pallas
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def _pad_rows(x: jnp.ndarray, mult: int, fill=0.0) -> tuple[jnp.ndarray, int]:
+    b = x.shape[0]
+    pad = (-b) % mult
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)], axis=0
+        )
+    return x, b
+
+
+def paa(x: jnp.ndarray, cfg: SummarizationConfig, *, block_b: int = 256) -> jnp.ndarray:
+    """(B, n) -> (B, w) PAA summaries via the Pallas kernel."""
+    x = jnp.asarray(x, jnp.float32)
+    block_b = min(block_b, max(8, x.shape[0]))
+    xp, b = _pad_rows(x, block_b)
+    out = paa_pallas(xp, cfg.n_segments, block_b=block_b, interpret=INTERPRET)
+    return out[:b]
+
+
+def sax_and_keys(
+    p: jnp.ndarray, cfg: SummarizationConfig, *, block_b: int = 256
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """PAA (B, w) -> (symbols (B, w) int32, sortable keys (B, nw) uint32)."""
+    p = jnp.asarray(p, jnp.float32)
+    block_b = min(block_b, max(8, p.shape[0]))
+    pp, b = _pad_rows(p, block_b)
+    bps = jnp.asarray(breakpoints(cfg.card_bits))
+    sym, keys = sax_pack_pallas(
+        pp, bps, cfg.card_bits, n_words=cfg.key_words, block_b=block_b,
+        interpret=INTERPRET,
+    )
+    return sym[:b], keys[:b]
+
+
+def summarize(
+    x: jnp.ndarray, cfg: SummarizationConfig
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full device ingest front: series -> (paa, symbols, sortable keys)."""
+    p = paa(x, cfg)
+    sym, keys = sax_and_keys(p, cfg)
+    return p, sym, keys
+
+
+def min_ed(
+    q: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    block_m: int = 128,
+    block_n: int = 512,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-query (min squared ED, argmin) over candidate series.
+
+    q: (m, d), x: (n, d). Pads m/n with sentinels; d to a lane multiple."""
+    q = jnp.asarray(q, jnp.float32)
+    x = jnp.asarray(x, jnp.float32)
+    m, d = q.shape
+    n = x.shape[0]
+    block_m = min(block_m, max(8, m))
+    block_n = min(block_n, max(8, n))
+    dp = (-d) % 128
+    if dp:  # zero-pad the contraction dim: adds 0 to every distance
+        q = jnp.concatenate([q, jnp.zeros((m, dp), q.dtype)], axis=1)
+        x = jnp.concatenate([x, jnp.zeros((n, dp), x.dtype)], axis=1)
+    qp, _ = _pad_rows(q, block_m)
+    # pad candidates with +large rows so they never win the min
+    xp, _ = _pad_rows(x, block_n, fill=1e15)
+    md, am = min_ed_pallas(qp, xp, block_m=block_m, block_n=block_n, interpret=INTERPRET)
+    return md[:m], am[:m]
+
+
+def mindist(
+    q_paa: jnp.ndarray,
+    lo: jnp.ndarray,
+    hi: jnp.ndarray,
+    cfg: SummarizationConfig,
+    *,
+    block_b: int = 1024,
+) -> jnp.ndarray:
+    """Blocked MINDIST_PAA_SAX lower bounds. lo/hi: (B, w) -> (B,) f32."""
+    lo = jnp.asarray(lo, jnp.float32)
+    hi = jnp.asarray(hi, jnp.float32)
+    b = lo.shape[0]
+    block_b = min(block_b, max(8, b))
+    lop, _ = _pad_rows(lo, block_b, fill=0.0)
+    hip, _ = _pad_rows(hi, block_b, fill=0.0)
+    out = mindist_pallas(
+        jnp.asarray(q_paa, jnp.float32), lop, hip, cfg.segment_len,
+        block_b=block_b, interpret=INTERPRET,
+    )
+    return out[:b]

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Each function is the semantic ground truth its kernel twin is tested against
+(tests/test_kernels.py sweeps shapes/dtypes with assert_allclose).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def paa_ref(x: jnp.ndarray, n_segments: int) -> jnp.ndarray:
+    """PAA segment means. x: (B, n) -> (B, w) float32."""
+    b, n = x.shape
+    seg = n // n_segments
+    return x.reshape(b, n_segments, seg).mean(axis=-1).astype(jnp.float32)
+
+
+def sax_ref(p: jnp.ndarray, bps: jnp.ndarray) -> jnp.ndarray:
+    """Quantize PAA values against sorted breakpoints. (B, w) -> (B, w) int32."""
+    return jnp.sum(p[..., None] >= bps, axis=-1).astype(jnp.int32)
+
+
+def pack_keys_ref(sym: jnp.ndarray, card_bits: int, n_words: int = 4) -> jnp.ndarray:
+    """Bit-interleave SAX symbols into big-endian uint32 key words.
+
+    sym: (B, w) int32 -> (B, n_words) uint32. Key bit p = b*w + s (b = bit
+    index from MSB of each symbol, s = segment); bit 0 is the MSB of word 0.
+    """
+    b_, w = sym.shape
+    c = card_bits
+    shifts = jnp.arange(c - 1, -1, -1, dtype=sym.dtype)
+    bits = (sym[:, None, :] >> shifts[:, None]) & 1  # (B, c, w)
+    flat = bits.reshape(b_, c * w)
+    pad = n_words * 32 - c * w
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((b_, pad), flat.dtype)], axis=-1)
+    words = flat.reshape(b_, n_words, 32).astype(jnp.uint32)
+    weights = jnp.uint32(1) << jnp.arange(31, -1, -1, dtype=jnp.uint32)
+    return (words * weights).sum(axis=-1).astype(jnp.uint32)
+
+
+def min_ed_ref(q: jnp.ndarray, x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-query min squared-ED and argmin over candidates.
+
+    q: (m, d), x: (n, d) -> ((m,) f32, (m,) int32)."""
+    q = q.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    d2 = (
+        jnp.sum(q * q, -1)[:, None]
+        + jnp.sum(x * x, -1)[None, :]
+        - 2.0 * q @ x.T
+    )
+    return jnp.min(d2, axis=1), jnp.argmin(d2, axis=1).astype(jnp.int32)
+
+
+def mindist_ref(q_paa: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray, seg_len: int) -> jnp.ndarray:
+    """Squared MINDIST between a query PAA (w,) and candidate regions (B, w)."""
+    below = jnp.maximum(lo - q_paa[None, :], 0.0)
+    above = jnp.maximum(q_paa[None, :] - hi, 0.0)
+    d = jnp.maximum(below, above)
+    return (seg_len * jnp.sum(d * d, axis=-1)).astype(jnp.float32)

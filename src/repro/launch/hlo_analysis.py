@@ -1,0 +1,281 @@
+"""Honest cost accounting for scanned programs.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified
+by probe: scan(n=16) reports the same flops as scan(n=1)), which would make
+every scanned transformer look 10-500x cheaper than it is. Two fixes:
+
+* **FLOPs** are counted on the *jaxpr* (pre-SPMD, global): exact
+  2*B*M*N*K for every dot_general / conv, recursing into scan bodies
+  multiplied by their static trip count, plus 1 flop/element for
+  elementwise work. Per-device = global / n_devices (the SPMD partitioner
+  divides dense work evenly under our shardings).
+
+* **Collective + HBM traffic bytes** are parsed from the partitioned HLO
+  per *computation*, then multiplied by each computation's execution
+  multiplicity, derived from the while-op call graph (trip counts are
+  recovered from the loop-condition constants that jax's scan lowering
+  emits). Traffic model: every top-level op's output buffer is written
+  once and read once (2x output bytes); entry parameters read once.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Any
+
+import numpy as np
+
+from jax.extend import core as jcore
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+
+# ---------------------------------------------------------------------------
+# jaxpr FLOP counting (global, exact matmuls, scan-aware)
+# ---------------------------------------------------------------------------
+def _dot_flops(eqn) -> float:
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    batch = math.prod(lhs.shape[i] for i in lb) if lb else 1
+    k = math.prod(lhs.shape[i] for i in lc) if lc else 1
+    m = math.prod(
+        lhs.shape[i] for i in range(len(lhs.shape)) if i not in lc and i not in lb
+    )
+    n = math.prod(
+        rhs.shape[i] for i in range(len(rhs.shape)) if i not in rc and i not in rb
+    )
+    return 2.0 * batch * m * n * k
+
+
+def _conv_flops(eqn) -> float:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval
+    # 2 * output elements * kernel reduction size
+    red = math.prod(rhs.shape[:-1]) if rhs.shape else 1
+    return 2.0 * math.prod(out.shape) * red
+
+
+_VIEW_PRIMS = {
+    # fused/aliased in practice: no HBM round trip of their own
+    "broadcast_in_dim", "convert_element_type", "reshape", "squeeze",
+    "expand_dims", "bitcast_convert_type", "copy", "stop_gradient",
+    "tuple", "get_tuple_element", "pvary",
+}
+
+
+def _aval_bytes(aval) -> float:
+    if not hasattr(aval, "shape") or not hasattr(aval, "dtype"):
+        return 0.0
+    return float(math.prod(aval.shape)) * aval.dtype.itemsize
+
+
+def _jaxpr_stores(jaxpr) -> float:
+    if hasattr(jaxpr, "jaxpr"):
+        jaxpr = jaxpr.jaxpr
+    stores = 0.0
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim == "scan":
+            stores += eqn.params["length"] * _jaxpr_stores(eqn.params["jaxpr"])
+            continue
+        if prim == "while":
+            stores += _jaxpr_stores(eqn.params["body_jaxpr"])
+            continue
+        if prim == "cond":
+            stores += max(_jaxpr_stores(b) for b in eqn.params["branches"])
+            continue
+        subs = list(_sub_jaxprs(eqn.params))
+        if subs:
+            stores += sum(_jaxpr_stores(s) for s in subs)
+            continue
+        if prim in _VIEW_PRIMS:
+            continue
+        if prim in ("dynamic_update_slice", "scatter", "scatter-add", "scatter_add"):
+            stores += _aval_bytes(eqn.invars[1].aval)
+            continue
+        stores += sum(_aval_bytes(v.aval) for v in eqn.outvars)
+    return stores
+
+
+def count_jaxpr_bytes(jaxpr) -> float:
+    """Analytic HBM traffic of a (Closed)Jaxpr, scan-trip-aware.
+
+    Model: every primitive writes its outputs once (views/casts are fused
+    and free; dynamic_update_slice and scatter write only their update
+    operand). Total HBM traffic = 2x stores (every tensor written once is
+    read once downstream) + arguments read once.
+    """
+    if hasattr(jaxpr, "jaxpr"):
+        jaxpr = jaxpr.jaxpr
+    return 2.0 * _jaxpr_stores(jaxpr) + sum(
+        _aval_bytes(v.aval) for v in jaxpr.invars
+    )
+
+
+def _sub_jaxprs(params: dict):
+    """All Jaxpr/ClosedJaxpr values nested in an eqn's params."""
+    for v in params.values():
+        if isinstance(v, (jcore.Jaxpr, jcore.ClosedJaxpr)):
+            yield v
+        elif isinstance(v, (tuple, list)):
+            for x in v:
+                if isinstance(x, (jcore.Jaxpr, jcore.ClosedJaxpr)):
+                    yield x
+
+
+def count_jaxpr_flops(jaxpr) -> float:
+    """Global FLOPs of a (Closed)Jaxpr, scan trip counts included."""
+    if hasattr(jaxpr, "jaxpr"):
+        jaxpr = jaxpr.jaxpr
+    total = 0.0
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim == "dot_general":
+            total += _dot_flops(eqn)
+        elif prim == "conv_general_dilated":
+            total += _conv_flops(eqn)
+        elif prim == "scan":
+            total += eqn.params["length"] * count_jaxpr_flops(eqn.params["jaxpr"])
+        elif prim == "while":
+            total += count_jaxpr_flops(eqn.params["body_jaxpr"])  # lower bound
+        elif prim == "cond":
+            total += max(count_jaxpr_flops(b) for b in eqn.params["branches"])
+        else:
+            subs = list(_sub_jaxprs(eqn.params))
+            if subs:  # pjit / remat2 / custom_vjp / shard_map / ...
+                total += sum(count_jaxpr_flops(s) for s in subs)
+            else:
+                outs = sum(
+                    math.prod(v.aval.shape) for v in eqn.outvars
+                    if hasattr(v.aval, "shape")
+                )
+                total += float(outs)  # ~1 flop per output element
+    return total
+
+
+# ---------------------------------------------------------------------------
+# partitioned-HLO traffic / collective analysis with loop multiplicity
+# ---------------------------------------------------------------------------
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\{\s*$")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)"
+)
+_CALL_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_TRIP_RE = re.compile(r"known_trip_count[^}]*?\"n\"\s*:\s*\"(\d+)\"")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    entry = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        m = _COMP_RE.match(line if line.startswith(("ENTRY", "%")) else stripped)
+        if m and (line.startswith(("ENTRY", "%")) or stripped.endswith("{")):
+            cur = m.group(1)
+            comps[cur] = []
+            if line.startswith("ENTRY"):
+                entry = cur
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(stripped)
+    comps["__entry__"] = [entry or ""]
+    return comps
+
+
+def analyze_hlo(text: str) -> dict:
+    comps = _split_computations(text)
+    entry = comps.pop("__entry__")[0]
+
+    # per-computation while edges: (cond, body, trip_count)
+    edges: dict[str, list[tuple[str, int]]] = {}
+    for name, lines in comps.items():
+        edges[name] = []
+        for ln in lines:
+            m = _WHILE_RE.search(ln)
+            if m:
+                cond, body = m.group(1), m.group(2)
+                tm = _TRIP_RE.search(ln)  # XLA's known_trip_count annotation
+                if tm:
+                    trip = int(tm.group(1))
+                else:
+                    consts = _CONST_RE.findall(" ".join(comps.get(cond, [])))
+                    trip = max((int(c) for c in consts), default=1)
+                edges[name].append((body, trip))
+                edges[name].append((cond, trip + 1))
+
+    # multiplicity via DFS from entry through while edges only (fusion
+    # bodies are accounted at their call sites, not walked)
+    mult: dict[str, float] = {}
+
+    def visit(name: str, m: float):
+        mult[name] = mult.get(name, 0.0) + m
+        for child, trip in edges.get(name, []):
+            visit(child, m * trip)
+
+    if entry:
+        visit(entry, 1.0)
+
+    op_re = re.compile(
+        r"^(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\]\S*))\s+"
+        r"([a-z][\w\-]*)\("
+    )
+    no_traffic = {
+        "parameter", "tuple", "get-tuple-element", "bitcast", "constant",
+        "after-all", "iota",
+    }
+    colls: dict[str, dict] = {}
+    traffic = 0.0
+    param_bytes = 0.0
+    for name, m in mult.items():
+        for ln in comps.get(name, []):
+            om = op_re.match(ln)
+            if not om:
+                continue
+            out_b = _type_bytes(om.group(1))
+            opname = om.group(2)
+            for coll in _COLL_OPS:
+                if opname.startswith(coll):
+                    d = colls.setdefault(coll, {"count": 0, "bytes": 0.0})
+                    d["count"] += int(m)
+                    d["bytes"] += out_b * m
+            if opname == "parameter":
+                if name == entry:
+                    param_bytes += out_b
+                continue
+            if opname in no_traffic:
+                continue
+            traffic += 2.0 * out_b * m  # write + read
+    coll_bytes = sum(v["bytes"] for v in colls.values())
+    return {
+        "collectives": {k: {"count": v["count"], "bytes": float(v["bytes"])}
+                        for k, v in colls.items()},
+        "collective_bytes": float(coll_bytes),
+        "traffic_bytes": float(traffic + param_bytes),
+        "n_computations": len(comps),
+    }

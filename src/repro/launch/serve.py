@@ -1,0 +1,102 @@
+"""Serving driver — the end-to-end application, matching the paper's kind
+(an exploration/query system): serve batched nearest-neighbor requests over
+a live Coconut index while the stream keeps ingesting.
+
+    PYTHONPATH=src python -m repro.launch.serve --scheme BTP --batches 40 \
+        --batch-size 500 --query-batch 32
+
+Also supports --mode lm for a toy LM decode-serving loop (smoke config) to
+exercise the transformer serving path on this host.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from ..core import (
+    DiskModel, StreamConfig, StreamingIndex, SummarizationConfig, render_heatmap,
+)
+from ..data.synthetic import seismic
+
+
+def serve_coconut(args):
+    scfg = SummarizationConfig(series_len=args.series_len, n_segments=16,
+                               card_bits=8)
+    idx = StreamingIndex(StreamConfig(scheme=args.scheme, summarization=scfg,
+                                      buffer_entries=4096, growth_factor=4,
+                                      block_size=512))
+    idx.raw.disk.keep_log = True
+    lat = []
+    for b in range(args.batches):
+        x = seismic(args.batch_size, args.series_len, seed=b)
+        idx.ingest(x, np.full(args.batch_size, b, np.int64))
+        if (b + 1) % 5 == 0:  # serve a query batch every 5 ingest batches
+            qs = seismic(args.query_batch, args.series_len, seed=10_000 + b)
+            t0 = time.time()
+            for q in qs:
+                idx.window_knn(q, max(0, b - args.window), b, k=args.k,
+                               exact=not args.approx)
+            dt = (time.time() - t0) / args.query_batch
+            lat.append(dt)
+            print(f"[serve] batch {b+1}: {args.query_batch} queries, "
+                  f"{dt*1e3:.2f} ms/query, partitions={idx.n_partitions}", flush=True)
+    lat = np.array(lat) * 1e3
+    print(f"[serve] latency ms p50={np.percentile(lat,50):.2f} "
+          f"p95={np.percentile(lat,95):.2f} max={lat.max():.2f}")
+    print(f"[serve] ingested {args.batches*args.batch_size} series, "
+          f"{idx.n_partitions} partitions, "
+          f"index={idx.index_bytes()>>20} MiB, modeled io={idx.raw.disk.modeled_seconds():.2f}s")
+    print("[serve] access heat map:", render_heatmap(idx.raw.disk.heatmap()))
+
+
+def serve_lm(args):
+    import jax
+    import jax.numpy as jnp
+
+    from ..configs import get_config
+    from ..models.transformer import decode_step, init_params, prefill
+
+    cfg = get_config(args.arch, smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    B, P = args.query_batch, 32
+    toks = rng.integers(0, cfg.vocab, (B, P)).astype(np.int32)
+    logits, cache = prefill(params, cfg, {"tokens": jnp.asarray(toks)},
+                            cache_len=P + args.decode_tokens)
+    step = jax.jit(lambda p, c, t: decode_step(p, cfg, c, t))
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    t0 = time.time()
+    for _ in range(args.decode_tokens):
+        logits, cache = step(params, cache, tok)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    print(f"[serve-lm] {args.decode_tokens} tokens x batch {B}: "
+          f"{dt/args.decode_tokens*1e3:.1f} ms/step, "
+          f"{B*args.decode_tokens/dt:.0f} tok/s")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="coconut", choices=["coconut", "lm"])
+    ap.add_argument("--scheme", default="BTP", choices=["PP", "TP", "BTP"])
+    ap.add_argument("--batches", type=int, default=40)
+    ap.add_argument("--batch-size", type=int, default=500)
+    ap.add_argument("--series-len", type=int, default=128)
+    ap.add_argument("--query-batch", type=int, default=16)
+    ap.add_argument("--window", type=int, default=5)
+    ap.add_argument("--k", type=int, default=5)
+    ap.add_argument("--approx", action="store_true")
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--decode-tokens", type=int, default=32)
+    args = ap.parse_args()
+    if args.mode == "coconut":
+        serve_coconut(args)
+    else:
+        serve_lm(args)
+
+
+if __name__ == "__main__":
+    main()

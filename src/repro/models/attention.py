@@ -1,0 +1,283 @@
+"""Attention variants: GQA (full/causal/bidirectional), sliding-window
+(block-banded, sub-quadratic), MLA (latent compressed, with the absorbed
+matmul form for decode), and single-token decode paths over KV caches.
+
+Shapes follow (B, S, H, hd); KV caches are (B, S_max, kv, hd) for global
+attention and (B, W, kv, hd) ring buffers for sliding windows.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import COMPUTE_DTYPE, dense_init, rms_norm, rope
+
+NEG_INF = -2.0e38
+
+
+def _gqa_scores(q, k):
+    """q: (B, Sq, H, hd), k: (B, Sk, kv, hd) -> (B, kv, H/kv, Sq, Sk)."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    q = q.reshape(b, sq, kvh, h // kvh, hd)
+    return jnp.einsum("bqkgh,bskh->bkgqs", q, k) / (hd ** 0.5)
+
+
+def _gqa_out(p, v):
+    """p: (B, kv, H/kv, Sq, Sk), v: (B, Sk, kv, hd) -> (B, Sq, H*hd)."""
+    b, kvh, g, sq, sk = p.shape
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v)
+    return o.reshape(b, sq, kvh * g * v.shape[-1])
+
+
+def _softmax(s):
+    return jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(COMPUTE_DTYPE)
+
+
+def naive_attention(q, k, v, *, causal: bool = True) -> jnp.ndarray:
+    """Reference full attention: materializes the (Sq, Sk) score matrix.
+    Kept as the §Perf baseline; unusable at 32k (O(S^2) f32 in HBM)."""
+    sq, sk = q.shape[1], k.shape[1]
+    s = _gqa_scores(q, k)
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        s = jnp.where(mask, s, NEG_INF)
+    return _gqa_out(_softmax(s), v)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, q_chunk: int = 1024,
+                    k_chunk: int = 1024) -> jnp.ndarray:
+    """Chunked attention with running softmax (flash-style, TPU-native).
+
+    Queries are processed in a static python loop of q-chunks; for a causal
+    mask, chunk i only reads keys [0, (i+1)*qc) — a *static* slice, so the
+    causal FLOPs are exact (no masked-out block compute). Keys stream
+    through an inner lax.scan with the (m, l, acc) running-softmax carry,
+    so peak memory is O(qc * kc) instead of O(S^2).
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    kvh = k.shape[2]
+    hd_v = v.shape[-1]  # may differ from hd (MLA: qk 96, v 64)
+    g = h // kvh
+    scale = hd ** -0.5
+    qc = min(q_chunk, sq)
+    assert sq % qc == 0 and sq == sk, (sq, sk, qc)
+    nq = sq // qc
+
+    out_chunks = []
+    for i in range(nq):
+        qi = q[:, i * qc : (i + 1) * qc].reshape(b, qc, kvh, g, hd)
+        klen = (i + 1) * qc if causal else sk
+        kc = min(k_chunk, klen)
+        nk = klen // kc
+        kb = k[:, :klen].reshape(b, nk, kc, kvh, hd)
+        vb = v[:, :klen].reshape(b, nk, kc, kvh, hd_v)
+        q_pos = i * qc + jnp.arange(qc)
+
+        def body(carry, xs):
+            m, l, acc = carry
+            kj, vj, j = xs
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qi, kj).astype(jnp.float32) * scale
+            if causal:
+                k_pos = j * kc + jnp.arange(kc)
+                mask = k_pos[None, :] <= q_pos[:, None]  # (qc, kc)
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p.astype(COMPUTE_DTYPE), vj
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((b, kvh, g, qc), -jnp.inf, jnp.float32),
+            jnp.zeros((b, kvh, g, qc), jnp.float32),
+            jnp.zeros((b, kvh, g, qc, hd_v), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(
+            body, init,
+            (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), jnp.arange(nk)),
+        )
+        o = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(COMPUTE_DTYPE)
+        # (b, kvh, g, qc, hd_v) -> (b, qc, H*hd_v)
+        out_chunks.append(jnp.moveaxis(o, 3, 1).reshape(b, qc, h * hd_v))
+    return jnp.concatenate(out_chunks, axis=1)
+
+
+FLASH_MIN_SEQ = 2048
+
+
+def gqa_attention(q, k, v, *, causal: bool = True, impl: str = "auto") -> jnp.ndarray:
+    """Full attention; bidirectional when causal=False. impl: auto routes
+    long sequences through the chunked flash path (exact same math)."""
+    sq, sk = q.shape[1], k.shape[1]
+    use_flash = (
+        impl == "flash"
+        or (impl == "auto" and sq == sk and sq >= FLASH_MIN_SEQ and sq % 1024 == 0)
+    )
+    if use_flash:
+        return flash_attention(q, k, v, causal=causal)
+    return naive_attention(q, k, v, causal=causal)
+
+
+def sliding_attention(q, k, v, window: int) -> jnp.ndarray:
+    """Causal sliding-window attention, block-banded formulation.
+
+    Token t attends to keys in (t - window, t]. Sequences are chunked into
+    window-sized blocks; each query block attends to its own block (causal)
+    and the previous block (banded) — 2*W*S score work instead of S^2.
+    """
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    w = window
+    pad = (-s) % w
+    if pad:
+        zq = jnp.zeros((b, pad, h, hd), q.dtype)
+        zk = jnp.zeros((b, pad, kvh, hd), k.dtype)
+        q = jnp.concatenate([q, zq], 1)
+        k = jnp.concatenate([k, zk], 1)
+        v = jnp.concatenate([v, zk], 1)
+    sp = s + pad
+    nb = sp // w
+    qb = q.reshape(b, nb, w, h, hd)
+    kb = k.reshape(b, nb, w, kvh, hd)
+    vb = v.reshape(b, nb, w, kvh, hd)
+    # keys for block i: [block i-1, block i]
+    k_prev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    kcat = jnp.concatenate([k_prev, kb], axis=2)  # (b, nb, 2w, kv, hd)
+    v_prev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    vcat = jnp.concatenate([v_prev, vb], axis=2)
+    qg = qb.reshape(b, nb, w, kvh, h // kvh, hd)
+    scores = jnp.einsum("bnqkgh,bnskh->bnkgqs", qg, kcat) / (hd ** 0.5)
+    # mask: query local pos i (global w*n + i) sees key local pos j
+    # (global w*(n-1) + j): need 0 < (w + i - j) <= window  [strict causal]
+    qi = jnp.arange(w)[:, None]
+    kj = jnp.arange(2 * w)[None, :]
+    rel = qi + w - kj  # how far key is behind query (0 = self)
+    mask = (rel >= 0) & (rel < w)
+    # first block's "previous block" is padding: mask out j < w at n == 0
+    nidx = jnp.arange(nb)[:, None, None]
+    valid_prev = (nidx > 0) | (kj[None] >= w)
+    full_mask = mask[None] & valid_prev  # (nb, w, 2w)
+    scores = jnp.where(full_mask[None, :, None, None], scores, NEG_INF)
+    p = _softmax(scores)
+    o = jnp.einsum("bnkgqs,bnskh->bnqkgh", p, vcat)
+    o = o.reshape(b, sp, h * hd)
+    return o[:, :s]
+
+
+def decode_attention(q, k_cache, v_cache, pos) -> jnp.ndarray:
+    """One-token decode over a (B, S_max, kv, hd) cache; pos = #valid tokens
+    *after* writing the current token (attends to [0, pos))."""
+    s = _gqa_scores(q, k_cache)  # (B, kv, g, 1, S_max)
+    valid = jnp.arange(k_cache.shape[1])[None, None, None, None, :] < pos
+    s = jnp.where(valid, s, NEG_INF)
+    return _gqa_out(_softmax(s), v_cache)
+
+
+def decode_sliding_attention(q, k_ring, v_ring, pos, window: int) -> jnp.ndarray:
+    """One-token decode over a (B, W, kv, hd) ring buffer (slot = t % W)."""
+    s = _gqa_scores(q, k_ring)  # (B, kv, g, 1, W)
+    slot_t = jnp.arange(window)
+    # global time of ring slot j given current count `pos` (token t = pos-1
+    # lives at slot (pos-1) % W): time = pos-1 - ((pos-1 - j) % W)
+    t_of_slot = (pos - 1) - jnp.mod(pos - 1 - slot_t, window)
+    valid = (t_of_slot >= 0) & (t_of_slot >= pos - window)
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    return _gqa_out(_softmax(s), v_ring)
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (MiniCPM3 / DeepSeek-V2 style)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MLADims:
+    q_lora: int = 768
+    kv_lora: int = 256
+    rope_dim: int = 32
+    nope_dim: int = 64
+    v_dim: int = 64
+
+
+def mla_init(keygen, d_model: int, n_heads: int, dims: MLADims):
+    h = n_heads
+    return {
+        "q_down": dense_init(keygen(), (d_model, dims.q_lora)),
+        "q_norm": jnp.zeros((dims.q_lora,), jnp.float32),
+        "q_up": dense_init(keygen(), (dims.q_lora, h * (dims.nope_dim + dims.rope_dim))),
+        "kv_down": dense_init(keygen(), (d_model, dims.kv_lora + dims.rope_dim)),
+        "kv_norm": jnp.zeros((dims.kv_lora,), jnp.float32),
+        "kv_up": dense_init(keygen(), (dims.kv_lora, h * (dims.nope_dim + dims.v_dim))),
+        "wo": dense_init(keygen(), (h * dims.v_dim, d_model)),
+    }
+
+
+def mla_qkv(p, x, positions, dims: MLADims, n_heads: int, theta: float):
+    """Project x -> (q_nope, q_rope, c_kv, k_rope). Shapes:
+    q_*: (B, S, H, *), c_kv: (B, S, kv_lora), k_rope: (B, S, rope_dim)."""
+    b, s, _ = x.shape
+    h = n_heads
+    q = rms_norm(jnp.dot(x, p["q_down"]), p["q_norm"])
+    q = jnp.dot(q, p["q_up"]).reshape(b, s, h, dims.nope_dim + dims.rope_dim)
+    q_nope, q_rope = q[..., : dims.nope_dim], q[..., dims.nope_dim:]
+    q_rope = rope(q_rope, positions, theta)
+    ckv = jnp.dot(x, p["kv_down"])
+    c_kv, k_rope = ckv[..., : dims.kv_lora], ckv[..., dims.kv_lora:]
+    c_kv = rms_norm(c_kv, p["kv_norm"])
+    k_rope = rope(k_rope[:, :, None, :], positions, theta)[:, :, 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_attention(p, x, positions, dims: MLADims, n_heads: int, theta: float,
+                  impl: str = "auto"):
+    """Training/prefill MLA (non-absorbed: materialize k, v per head)."""
+    b, s, _ = x.shape
+    h = n_heads
+    q_nope, q_rope, c_kv, k_rope = mla_qkv(p, x, positions, dims, n_heads, theta)
+    kv = jnp.dot(c_kv, p["kv_up"]).reshape(b, s, h, dims.nope_dim + dims.v_dim)
+    k_nope, v = kv[..., : dims.nope_dim], kv[..., dims.nope_dim:]
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, dims.rope_dim))
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope, k_rope_h], -1)
+    o = gqa_attention(q, k, v, causal=True, impl=impl)  # kv == h heads here
+    return jnp.dot(o, p["wo"]), (c_kv, k_rope)
+
+
+def mla_decode(p, x, positions, cache_ckv, cache_krope, pos, dims: MLADims,
+               n_heads: int, theta: float):
+    """Absorbed-form decode: attention runs in the compressed kv_lora space,
+    so the cache is (B, S, kv_lora) + (B, S, rope_dim) — the MLA memory win.
+
+    scores = q_nope @ W_uk . c_kv  +  q_rope . k_rope
+    ctx    = softmax @ c_kv ; out = (ctx @ W_uv) @ wo
+    """
+    b, s1, _ = x.shape  # s1 == 1
+    h = n_heads
+    q_nope, q_rope, c_kv_new, k_rope_new = mla_qkv(p, x, positions, dims, n_heads, theta)
+    # write the new token into the caches at pos-1
+    cache_ckv = jax.lax.dynamic_update_slice(
+        cache_ckv, c_kv_new.astype(cache_ckv.dtype), (0, pos - 1, 0)
+    )
+    cache_krope = jax.lax.dynamic_update_slice(
+        cache_krope, k_rope_new.astype(cache_krope.dtype), (0, pos - 1, 0)
+    )
+    # kv_up columns are head-major [nope | v] blocks: reshape before splitting
+    w_u = p["kv_up"].reshape(dims.kv_lora, h, dims.nope_dim + dims.v_dim)
+    w_uk = w_u[..., : dims.nope_dim]
+    w_uv = w_u[..., dims.nope_dim :]
+    q_abs = jnp.einsum("bqhn,chn->bqhc", q_nope, w_uk)  # (B, 1, H, kv_lora)
+    s_nope = jnp.einsum("bqhc,bsc->bhqs", q_abs, cache_ckv)
+    s_rope = jnp.einsum("bqhr,bsr->bhqs", q_rope, cache_krope)
+    scale = (dims.nope_dim + dims.rope_dim) ** -0.5
+    scores = (s_nope + s_rope) * scale  # (B, H, 1, S)
+    valid = jnp.arange(cache_ckv.shape[1])[None, None, None, :] < pos
+    scores = jnp.where(valid, scores, NEG_INF)
+    pr = _softmax(scores)
+    ctx = jnp.einsum("bhqs,bsc->bqhc", pr, cache_ckv)  # (B, 1, H, kv_lora)
+    o = jnp.einsum("bqhc,chv->bqhv", ctx, w_uv).reshape(b, s1, h * dims.v_dim)
+    return jnp.dot(o, p["wo"]), cache_ckv, cache_krope

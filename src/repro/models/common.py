@@ -1,0 +1,66 @@
+"""Shared model building blocks: norms, RoPE, init, dtype policy."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+PARAM_DTYPE = jnp.bfloat16
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    # variance in f32 for stability, but the normalize/scale multiplies stay
+    # in x.dtype so backward cotangents remain bf16 — keeping every
+    # activation collective in the backward pass at half volume (§Perf).
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * (1.0 + scale).astype(x.dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 1e6) -> jnp.ndarray:
+    """Rotary embedding. x: (..., S, H, hd) with hd even; positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * freqs[None, :]  # (S, half)
+        ang = ang[None, :, None, :]  # (1, S, 1, half)
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+        ang = ang[:, :, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=PARAM_DTYPE) -> jnp.ndarray:
+    fan_in = shape[in_axis]
+    std = fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=PARAM_DTYPE) -> jnp.ndarray:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def zeros(shape, dtype=jnp.float32) -> jnp.ndarray:
+    return jnp.zeros(shape, dtype)
+
+
+class KeyGen:
+    """Deterministic PRNG key splitter for param init."""
+
+    def __init__(self, key):
+        self._key = key
+
+    def __call__(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+def swiglu(x: jnp.ndarray, w1, w3, w2) -> jnp.ndarray:
+    """SwiGLU MLP: (x@w1).silu * (x@w3) @ w2."""
+    h = jax.nn.silu(jnp.dot(x, w1)) * jnp.dot(x, w3)
+    return jnp.dot(h, w2)

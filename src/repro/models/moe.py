@@ -1,0 +1,97 @@
+"""Mixture-of-Experts MLP with capacity-based dispatch (expert-parallel).
+
+Router: softmax top-k with renormalized gates. Dispatch: tokens are sorted
+by expert id, each expert processes up to C = ceil(T*K/E * capacity_factor)
+tokens (overflow dropped — counted in aux), computed as one grouped einsum
+(E, C, D) x (E, D, F) that shards cleanly with experts on the "model" mesh
+axis. Optional shared experts (DeepSeek-MoE) run densely on every token.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEDims:
+    n_experts: int
+    top_k: int
+    d_expert: int
+    n_shared: int = 0
+    capacity_factor: float = 1.5
+
+
+def moe_init(keygen, d_model: int, dims: MoEDims):
+    e, fe = dims.n_experts, dims.d_expert
+    p = {
+        "router": dense_init(keygen(), (d_model, e), dtype=jnp.float32),
+        "w1": dense_init(keygen(), (e, d_model, fe)),
+        "w3": dense_init(keygen(), (e, d_model, fe)),
+        "w2": dense_init(keygen(), (e, fe, d_model)),
+    }
+    if dims.n_shared:
+        fs = dims.n_shared * fe
+        p["shared_w1"] = dense_init(keygen(), (d_model, fs))
+        p["shared_w3"] = dense_init(keygen(), (d_model, fs))
+        p["shared_w2"] = dense_init(keygen(), (fs, d_model))
+    return p
+
+
+def moe_mlp(p, x: jnp.ndarray, dims: MoEDims) -> tuple[jnp.ndarray, dict]:
+    """x: (B, S, D) -> (B, S, D). Returns (out, aux) with load-balance loss."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = dims.n_experts, dims.top_k
+    xf = x.reshape(t, d)
+    logits = jnp.dot(xf.astype(jnp.float32), p["router"])  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (T, K)
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+    # capacity floor min(t, 8) keeps tiny decode batches drop-free
+    cap = max(math.ceil(t * k / e * dims.capacity_factor), min(t, 8))
+    # flatten (token, k) assignments and sort by expert
+    flat_e = gate_idx.reshape(-1)  # (T*K,)
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    flat_g = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st_, sg = flat_e[order], flat_t[order], flat_g[order]
+    start = jnp.searchsorted(se, jnp.arange(e), side="left")
+    pos = jnp.arange(t * k) - start[se]
+    keep = pos < cap
+    slot = jnp.minimum(pos, cap)  # slot `cap` is trash
+    # dispatch indices (E, C): token feeding each expert slot (t = dummy row)
+    disp = jnp.full((e, cap + 1), t, jnp.int32)
+    disp = disp.at[se, slot].set(jnp.where(keep, st_, t).astype(jnp.int32))[:, :cap]
+    gates = jnp.zeros((e, cap + 1), jnp.float32)
+    gates = gates.at[se, slot].set(jnp.where(keep, sg, 0.0))[:, :cap]
+
+    xpad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], axis=0)
+    xin = xpad[disp]  # (E, C, D)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, p["w1"])) * jnp.einsum(
+        "ecd,edf->ecf", xin, p["w3"]
+    )
+    eo = jnp.einsum("ecf,efd->ecd", h, p["w2"])  # (E, C, D)
+    eo = eo * gates[..., None].astype(eo.dtype)
+    # combine: scatter-add expert outputs back to tokens
+    out = jnp.zeros((t + 1, d), eo.dtype).at[disp.reshape(-1)].add(
+        eo.reshape(e * cap, d)
+    )[:t]
+
+    if dims.n_shared:
+        sh = jax.nn.silu(jnp.dot(xf, p["shared_w1"])) * jnp.dot(xf, p["shared_w3"])
+        out = out + jnp.dot(sh, p["shared_w2"])
+
+    # load-balance aux (Switch-style) + overflow fraction
+    me = probs.mean(0)  # (E,)
+    ce = jnp.zeros((e,), jnp.float32).at[flat_e].add(1.0) / (t * k)
+    aux = {
+        "lb_loss": e * jnp.sum(me * ce),
+        "overflow_frac": 1.0 - keep.mean(),
+    }
+    return out.reshape(b, s, d), aux

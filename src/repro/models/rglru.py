@@ -1,0 +1,91 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+    r_t = sigmoid(W_a a_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x a_t + b_x)          (input gate)
+    log a_t = -c * softplus(Lambda) * r_t  (c = 8)
+    h_t = exp(log a_t) * h_{t-1} + sqrt(1 - exp(2 log a_t)) * (i_t * a_t)
+
+The elementwise linear recurrence is evaluated with jax.lax.associative_scan
+over time (parallel prefix — the TPU-native alternative to the sequential
+CUDA linear-recurrence kernel). The block is: in-proj (x + gate branches),
+causal depthwise conv1d(width 4), RG-LRU, gated out-proj.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init
+
+RGLRU_C = 8.0
+CONV_W = 4
+
+
+def rglru_init(keygen, d_model: int, d_rnn: int):
+    return {
+        "w_in": dense_init(keygen(), (d_model, d_rnn)),
+        "w_gate": dense_init(keygen(), (d_model, d_rnn)),
+        "conv_w": (jax.random.normal(keygen(), (CONV_W, d_rnn), jnp.float32) * 0.1),
+        "conv_b": jnp.zeros((d_rnn,), jnp.float32),
+        "w_a": dense_init(keygen(), (d_rnn, d_rnn)),
+        "b_a": jnp.zeros((d_rnn,), jnp.float32),
+        "w_x": dense_init(keygen(), (d_rnn, d_rnn)),
+        "b_x": jnp.zeros((d_rnn,), jnp.float32),
+        "lam": jnp.full((d_rnn,), 0.7, jnp.float32),  # softplus^-1 target ~ a=0.95
+        "w_out": dense_init(keygen(), (d_rnn, d_model)),
+    }
+
+
+def _causal_conv(x, w, b, tail):
+    """Depthwise causal conv1d. x: (B, S, R); tail: (B, CONV_W-1, R) history."""
+    xc = jnp.concatenate([tail.astype(x.dtype), x], axis=1)  # (B, S+3, R)
+    out = sum(
+        xc[:, i : i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+        for i in range(CONV_W)
+    )
+    return out + b[None, None, :].astype(x.dtype), xc[:, -(CONV_W - 1) :, :]
+
+
+def _rglru_gates(p, a):
+    af = a.astype(jnp.float32)
+    r = jax.nn.sigmoid(af @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(af @ p["w_x"].astype(jnp.float32) + p["b_x"])
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"])[None, None, :] * r
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * af)
+    return log_a, gated
+
+
+def rglru_block(p, x, h0, conv_tail):
+    """x: (B, S, D); h0: (B, R) f32; conv_tail: (B, 3, R).
+
+    Returns (out (B, S, D), h_last, new_conv_tail)."""
+    a = x @ p["w_in"]  # (B, S, R)
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    a, new_tail = _causal_conv(a, p["conv_w"], p["conv_b"], conv_tail)
+    log_a, gated = _rglru_gates(p, a)
+
+    # h_t = exp(log_a_t) h_{t-1} + gated_t, with h_{-1} = h0:
+    # fold h0 into the first element, then associative-scan the recurrence.
+    coef = jnp.exp(log_a)  # (B, S, R) f32
+    first = gated[:, 0, :] + coef[:, 0, :] * h0.astype(jnp.float32)
+    gated = jnp.concatenate([first[:, None], gated[:, 1:]], axis=1)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (coef, gated), axis=1)
+    out = (h.astype(x.dtype) * gate) @ p["w_out"]
+    return out, h[:, -1, :], new_tail
+
+
+def rglru_decode(p, x, h0, conv_tail):
+    """Single-token step. x: (B, 1, D)."""
+    a = x @ p["w_in"]
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    a, new_tail = _causal_conv(a, p["conv_w"], p["conv_b"], conv_tail)
+    log_a, gated = _rglru_gates(p, a)
+    h = jnp.exp(log_a[:, 0]) * h0.astype(jnp.float32) + gated[:, 0]
+    out = (h[:, None].astype(x.dtype) * gate) @ p["w_out"]
+    return out, h, new_tail

@@ -1,0 +1,173 @@
+"""RWKV6 "Finch" — attention-free time mixing with data-dependent decay.
+
+TPU-native *chunked* formulation: the per-token recurrence
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+is evaluated in chunks of length C: within a chunk the pairwise decay
+factorizes per channel, exp(cum_{i-1} - cum_j) = exp(cum_{i-1}) * exp(-cum_j),
+so intra-chunk work becomes two (C x C x hd) matmuls on the MXU, and the
+inter-chunk state propagates with a lax.scan of (hd x hd) updates. Log-decay
+is clamped to >= LOG_DECAY_MIN per step so exp(-cum_j) stays inside float32
+at C=16 (|cum| <= 56 < 88); a documented numerical simplification vs the
+exact CUDA kernel.
+
+Simplifications vs the reference implementation (documented in DESIGN.md):
+static token-shift mixing coefficients (no ddlerp LoRA on the mix weights);
+decay LoRA retained (the data-dependent part that defines Finch).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, rms_norm
+
+CHUNK = 16
+LOG_DECAY_MIN = -3.5
+DECAY_LORA = 64
+
+
+def rwkv6_init(keygen, d_model: int, head_dim: int, d_ff: int):
+    h = d_model // head_dim
+    return {
+        "ln_tm": jnp.zeros((d_model,), jnp.float32),
+        "mu": (jax.random.uniform(keygen(), (5, d_model), jnp.float32) * 0.1).astype(jnp.float32),
+        "wr": dense_init(keygen(), (d_model, d_model)),
+        "wk": dense_init(keygen(), (d_model, d_model)),
+        "wv": dense_init(keygen(), (d_model, d_model)),
+        "wg": dense_init(keygen(), (d_model, d_model)),
+        "w0": jnp.zeros((d_model,), jnp.float32) - 0.6,  # base log-log decay
+        "w_lora_a": dense_init(keygen(), (d_model, DECAY_LORA), dtype=jnp.float32),
+        "w_lora_b": (jax.random.normal(keygen(), (DECAY_LORA, d_model), jnp.float32) * 0.01),
+        "u": jnp.zeros((h, head_dim), jnp.float32),
+        "gn_scale": jnp.zeros((d_model,), jnp.float32),
+        "wo": dense_init(keygen(), (d_model, d_model)),
+        "ln_cm": jnp.zeros((d_model,), jnp.float32),
+        "mu_cm": (jax.random.uniform(keygen(), (2, d_model), jnp.float32) * 0.1).astype(jnp.float32),
+        "cm_k": dense_init(keygen(), (d_model, d_ff)),
+        "cm_v": dense_init(keygen(), (d_ff, d_model)),
+        "cm_r": dense_init(keygen(), (d_model, d_model)),
+    }
+
+
+def _token_shift(x, x_prev):
+    """x: (B, S, D); x_prev: (B, D) last token of the previous segment."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _log_decay(p, xw):
+    ld = -jnp.exp(
+        p["w0"].astype(jnp.float32)
+        + jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"]) @ p["w_lora_b"]
+    )
+    return jnp.maximum(ld, LOG_DECAY_MIN)  # (B, S, D) in (LOG_DECAY_MIN, 0)
+
+
+def _group_norm(x, scale, h):
+    """Per-head RMS norm of the (B, S, H, hd) wkv output, flattened scale."""
+    b, s, hh, hd = x.shape
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + 1e-6)
+    return (out.reshape(b, s, hh * hd) * (1.0 + scale)).astype(x.dtype)
+
+
+def rwkv6_time_mix(p, x, head_dim: int, state, x_prev):
+    """Chunked WKV6. x: (B, S, D); state: (B, H, hd, hd) f32; x_prev: (B, D).
+
+    Returns (out (B, S, D), new_state, new_x_prev)."""
+    b, s, d = x.shape
+    h = d // head_dim
+    xs = _token_shift(x, x_prev)
+    mu = p["mu"].astype(x.dtype)
+    xr, xk, xv, xw, xg = (x + mu[i][None, None, :] * (xs - x) for i in range(5))
+    r = (xr @ p["wr"]).reshape(b, s, h, head_dim)
+    k = (xk @ p["wk"]).reshape(b, s, h, head_dim)
+    v = (xv @ p["wv"]).reshape(b, s, h, head_dim)
+    g = xg @ p["wg"]
+    ld = _log_decay(p, xw).reshape(b, s, h, head_dim)  # log decay per channel
+
+    # pad S to a chunk multiple
+    pad = (-s) % CHUNK
+    if pad:
+        zpad = lambda a: jnp.concatenate(
+            [a, jnp.zeros((b, pad) + a.shape[2:], a.dtype)], axis=1
+        )
+        r, k, v = zpad(r), zpad(k), zpad(v)
+        ld = jnp.concatenate([ld, jnp.zeros((b, pad, h, head_dim), ld.dtype)], axis=1)
+    sp = s + pad
+    nb = sp // CHUNK
+    rc = r.reshape(b, nb, CHUNK, h, head_dim).astype(jnp.float32)
+    kc = k.reshape(b, nb, CHUNK, h, head_dim).astype(jnp.float32)
+    vc = v.reshape(b, nb, CHUNK, h, head_dim).astype(jnp.float32)
+    ldc = ld.reshape(b, nb, CHUNK, h, head_dim)
+
+    cum = jnp.cumsum(ldc, axis=2)  # inclusive per-chunk cumulative log decay
+    cum_prev = cum - ldc  # exclusive
+    r_t = rc * jnp.exp(cum_prev)  # r~_i = r_i * exp(cum_{i-1})
+    k_t = kc * jnp.exp(-cum)  # k~_j = k_j * exp(-cum_j)
+    # intra-chunk scores: A_ij = r~_i . k~_j for j < i, diag via bonus u
+    scores = jnp.einsum("bnihd,bnjhd->bnhij", r_t, k_t)
+    tri = jnp.tril(jnp.ones((CHUNK, CHUNK), bool), k=-1)
+    scores = jnp.where(tri[None, None, None], scores, 0.0)
+    diag = jnp.einsum("bnihd,bnihd->bnhi", rc * p["u"][None, None], kc)
+    scores = scores + jnp.eye(CHUNK)[None, None, None] * diag[..., :, None]
+    intra = jnp.einsum("bnhij,bnjhd->bnihd", scores, vc)
+
+    # inter-chunk: scan the (hd x hd) state across chunks
+    decay_all = jnp.exp(cum[:, :, -1])  # (b, nb, h, hd) total chunk decay
+    k_hat = kc * jnp.exp(cum[:, :, -1:, :, :] - cum)  # decay from j to chunk end
+
+    def step(carry, inp):
+        s0 = carry  # (b, h, hd, hd)
+        rt, kh, vch, dec = inp
+        contrib = jnp.einsum("bihd,bhde->bihe", rt, s0)  # r~ @ S0
+        s_new = dec[..., None] * s0 + jnp.einsum("bjhd,bjhe->bhde", kh, vch)
+        return s_new, contrib
+
+    xs_scan = (
+        jnp.moveaxis(r_t, 1, 0),
+        jnp.moveaxis(k_hat, 1, 0),
+        jnp.moveaxis(vc, 1, 0),
+        jnp.moveaxis(decay_all, 1, 0),
+    )
+    state_f = state.astype(jnp.float32)
+    new_state, inter = jax.lax.scan(step, state_f, xs_scan)
+    inter = jnp.moveaxis(inter, 0, 1)  # (b, nb, C, h, hd)
+
+    wkv = (intra + inter).reshape(b, sp, h, head_dim)[:, :s]
+    out = _group_norm(wkv, p["gn_scale"], h) * jax.nn.silu(g)
+    return (out @ p["wo"]).astype(x.dtype), new_state, x[:, -1, :]
+
+
+def rwkv6_time_mix_decode(p, x, head_dim: int, state, x_prev):
+    """Single-token WKV6 step. x: (B, 1, D)."""
+    b, _, d = x.shape
+    h = d // head_dim
+    mu = p["mu"].astype(x.dtype)
+    xs = x_prev[:, None, :]
+    xr, xk, xv, xw, xg = (x + mu[i][None, None, :] * (xs - x) for i in range(5))
+    r = (xr @ p["wr"]).reshape(b, h, head_dim).astype(jnp.float32)
+    k = (xk @ p["wk"]).reshape(b, h, head_dim).astype(jnp.float32)
+    v = (xv @ p["wv"]).reshape(b, h, head_dim).astype(jnp.float32)
+    g = xg @ p["wg"]
+    w = jnp.exp(_log_decay(p, xw)[:, 0].reshape(b, h, head_dim))
+    sf = state.astype(jnp.float32)
+    kv = jnp.einsum("bhd,bhe->bhde", k, v)
+    o = jnp.einsum("bhd,bhde->bhe", r, sf + p["u"][None, :, :, None] * kv)
+    new_state = w[..., None] * sf + kv
+    o = o[:, None].reshape(b, 1, h, head_dim)
+    out = _group_norm(o, p["gn_scale"], h) * jax.nn.silu(g)
+    return (out @ p["wo"]).astype(x.dtype), new_state, x[:, -1, :]
+
+
+def rwkv6_channel_mix(p, x, x_prev):
+    """RWKV channel mix (the FFN). x: (B, S, D); x_prev: (B, D)."""
+    xs = _token_shift(x, x_prev)
+    mu = p["mu_cm"].astype(x.dtype)
+    xk = x + mu[0][None, None] * (xs - x)
+    xr = x + mu[1][None, None] * (xs - x)
+    k = jnp.square(jax.nn.relu(xk @ p["cm_k"]))
+    return jax.nn.sigmoid(xr @ p["cm_r"]) * (k @ p["cm_v"]), x[:, -1, :]

@@ -1,0 +1,62 @@
+"""Activation-sharding context.
+
+The launch layer installs (mesh, dp-axes) here before tracing; model code
+then pins the shardings of the few activations GSPMD mis-infers (embedding
+gather output, logits, one-hot loss terms) with with_sharding_constraint.
+When no context is installed (unit tests, single-device smoke) every
+constrain() is a no-op, so model code stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_CTX: Optional[dict] = None
+
+DP = "__dp__"  # placeholder resolved to the data-parallel axis tuple
+
+
+def set_ctx(mesh, dp_axes: tuple) -> None:
+    global _CTX
+    _CTX = {"mesh": mesh, "dp": tuple(dp_axes)}
+
+
+def clear_ctx() -> None:
+    global _CTX
+    _CTX = None
+
+
+@contextlib.contextmanager
+def ctx(mesh, dp_axes: tuple):
+    set_ctx(mesh, dp_axes)
+    try:
+        yield
+    finally:
+        clear_ctx()
+
+
+def constrain(x, *spec):
+    """Pin x's sharding (DP placeholder -> dp axes). No-op without context,
+    and axes referring to dims that don't divide are dropped leaf-wise."""
+    if _CTX is None:
+        return x
+    mesh = _CTX["mesh"]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    resolved = []
+    for dim, s in enumerate(spec):
+        if s == DP:
+            s = _CTX["dp"]
+        if s is None:
+            resolved.append(None)
+            continue
+        axes = (s,) if isinstance(s, str) else tuple(s)
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        resolved.append(s if x.shape[dim] % total == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved))
+    )

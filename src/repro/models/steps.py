@@ -1,0 +1,157 @@
+"""Train / prefill / decode step factories with microbatched grad
+accumulation, remat, and sharding-friendly loss computation.
+
+The cross-entropy is computed in the "one-hot einsum" form so the vocab
+axis can stay sharded over the "model" mesh axis end-to-end (the gather
+form would force an all-gather of the logits).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import shardctx
+from .transformer import (
+    ModelConfig,
+    decode_step,
+    forward,
+    logits_fn,
+    make_cache,
+    prefill,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    grad_accum: int = 1
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    lb_loss_weight: float = 0.01  # MoE load-balance aux
+    remat: bool = True
+    compression: Optional[str] = None  # None | "int8" | "topk"
+
+
+def _shift_labels(tokens: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Next-token labels + validity mask (last position dropped)."""
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.ones_like(tokens, jnp.float32).at[:, -1].set(0.0)
+    return labels, mask
+
+
+def _xent(cfg: ModelConfig, logits: jnp.ndarray, labels: jnp.ndarray, mask: jnp.ndarray):
+    """Masked mean cross-entropy; one-hot einsum form (vocab-sharding safe)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    onehot = jax.nn.one_hot(labels, cfg.vocab_padded, dtype=jnp.float32)
+    onehot = shardctx.constrain(onehot, shardctx.DP, None, "model")
+    ll = jnp.einsum("bsv,bsv->bs", lf, onehot)
+    nll = (lse - ll) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, lb_weight: float = 0.01,
+            remat: bool = False):
+    hidden, lb, _ = forward(params, cfg, batch, remat=remat)
+    if cfg.frontend == "audio":
+        logits = logits_fn(params, cfg, hidden)
+        mask = batch["mask"].astype(jnp.float32)
+        loss = _xent(cfg, logits, batch["targets"], mask)
+    elif cfg.frontend == "vision":
+        # loss only over the text positions (after the n_vis image tokens)
+        text_h = hidden[:, cfg.n_vis_tokens :, :]
+        logits = logits_fn(params, cfg, text_h)
+        labels, mask = _shift_labels(batch["tokens"])
+        loss = _xent(cfg, logits, labels, mask)
+    else:
+        logits = logits_fn(params, cfg, hidden)
+        labels, mask = _shift_labels(batch["tokens"])
+        loss = _xent(cfg, logits, labels, mask)
+    return loss + lb_weight * lb, {"xent": loss, "lb": lb}
+
+
+def make_loss_and_grad(cfg: ModelConfig, tcfg: TrainConfig):
+    def lg(params, batch):
+        (loss, aux), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, tcfg.lb_loss_weight, tcfg.remat),
+            has_aux=True,
+        )(params)
+        return loss, aux, grads
+
+    return lg
+
+
+def microbatched_grads(cfg: ModelConfig, tcfg: TrainConfig, params, batch: dict,
+                       param_gather=None, grad_constrain=None):
+    """Grad-accumulate over tcfg.grad_accum microbatches with a scan.
+
+    batch arrays are (B, ...); B must divide by grad_accum. Grads in f32.
+
+    ZeRO-1 mode (param_gather + grad_constrain set by the launch layer):
+    FSDP-sharded params are all-gathered ONCE before the microbatch scan
+    (instead of once per microbatch inside it), and each microbatch's grads
+    are immediately constrained back to the sharded layout, so accumulation
+    happens post-reduce-scatter — cutting weight all-gather volume by the
+    grad_accum factor at the cost of holding one unsharded bf16 weight copy.
+    """
+    g = tcfg.grad_accum
+    lg = make_loss_and_grad(cfg, tcfg)
+    pg = param_gather(params) if param_gather is not None else params
+    shard_g = grad_constrain if grad_constrain is not None else (lambda t: t)
+    if g == 1:
+        loss, aux, grads = lg(pg, batch)
+        return loss, aux, shard_g(jax.tree.map(lambda x: x.astype(jnp.float32), grads))
+
+    def resh(x):
+        b = x.shape[0]
+        return x.reshape((g, b // g) + x.shape[1:])
+
+    mbatch = jax.tree.map(resh, batch)
+    zero_grads = shard_g(jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    ))
+
+    def body(carry, mb):
+        acc, loss_acc = carry
+        loss, aux, grads = lg(pg, mb)
+        grads = shard_g(jax.tree.map(lambda x: x.astype(jnp.float32), grads))
+        acc = jax.tree.map(lambda a, gr: a + gr / g, acc, grads)
+        return (acc, loss_acc + loss / g), aux
+
+    (grads, loss), auxs = jax.lax.scan(body, (zero_grads, jnp.float32(0.0)), mbatch)
+    aux = jax.tree.map(lambda x: x.mean(), auxs)
+    return loss, aux, grads
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, optimizer,
+                    param_gather=None, grad_constrain=None):
+    """optimizer: repro.train.optimizer.AdamW instance."""
+
+    def train_step(params, opt_state, batch, step):
+        loss, aux, grads = microbatched_grads(
+            cfg, tcfg, params, batch, param_gather, grad_constrain
+        )
+        params, opt_state, gnorm = optimizer.update(params, grads, opt_state, step)
+        metrics = {"loss": loss, "grad_norm": gnorm, **aux}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return prefill(params, cfg, batch)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def serve_step(params, cache, token):
+        return decode_step(params, cfg, cache, token)
+
+    return serve_step

@@ -1,0 +1,502 @@
+"""Composable decoder/encoder stack covering all 10 assigned architectures.
+
+A model is a layer *pattern* (e.g. gemma3 = 5x local + 1x global attention;
+recurrentgemma = rec, rec, local-attn) repeated over the depth, compiled as
+a ``lax.scan`` over pattern *groups* so the HLO stays one-group-sized
+regardless of depth. Layers outside a whole number of groups live in
+``prefix`` (e.g. DeepSeek-MoE's dense layer 0) and ``tail`` (remainder).
+
+Layer kinds: "attn" (global GQA / MLA), "local" (block-banded sliding
+window), "rec" (RG-LRU), "rwkv" (WKV6 chunked). The MLP is dense SwiGLU or
+MoE per config. Caches mirror the group structure; see make_cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (
+    MLADims,
+    decode_attention,
+    decode_sliding_attention,
+    gqa_attention,
+    mla_attention,
+    mla_decode,
+    mla_init,
+    mla_qkv,
+    sliding_attention,
+)
+from .common import COMPUTE_DTYPE, PARAM_DTYPE, KeyGen, dense_init, embed_init, rms_norm, rope, swiglu
+from .moe import MoEDims, moe_init, moe_mlp
+from .rglru import CONV_W, rglru_block, rglru_decode, rglru_init
+from .rwkv6 import (
+    rwkv6_channel_mix,
+    rwkv6_init,
+    rwkv6_time_mix,
+    rwkv6_time_mix_decode,
+)
+from . import shardctx
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    pattern: tuple = ("attn",)
+    window: int = 0  # sliding-window size for "local" layers
+    moe: Optional[MoEDims] = None
+    first_dense: int = 0  # leading layers with dense MLP (DeepSeek-MoE)
+    d_ff_dense: int = 0
+    mla: Optional[MLADims] = None
+    encoder_only: bool = False
+    frontend: str = "none"  # none | vision | audio
+    n_vis_tokens: int = 0
+    d_frontend: int = 0
+    rope_theta: float = 1e4
+    d_rnn: int = 0
+    norm_eps: float = 1e-6
+    attention_impl: str = "auto"  # auto | flash | naive (§Perf comparisons)
+    notes: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        return -(-self.vocab // 128) * 128
+
+    @property
+    def layer_kinds(self) -> list:
+        """Kind of every layer, prefix layers first."""
+        kinds = []
+        for i in range(self.n_layers - self.first_dense):
+            kinds.append(self.pattern[i % len(self.pattern)])
+        return ["attn"] * self.first_dense + kinds
+
+    @property
+    def n_groups(self) -> int:
+        return (self.n_layers - self.first_dense) // len(self.pattern)
+
+    @property
+    def tail_kinds(self) -> tuple:
+        rem = (self.n_layers - self.first_dense) % len(self.pattern)
+        return self.pattern[:rem]
+
+    def n_params(self) -> int:
+        """Total parameter count (for 6ND roofline math)."""
+        import math
+
+        tree = jax.eval_shape(lambda: init_params(self, jax.random.PRNGKey(0)))
+        return sum(math.prod(l.shape) for l in jax.tree.leaves(tree))
+
+    def n_params_active(self) -> int:
+        """Active params per token (MoE: top_k + shared experts only)."""
+        total = self.n_params()
+        if self.moe is None:
+            return total
+        e, k = self.moe.n_experts, self.moe.top_k
+        n_moe_layers = self.n_layers - self.first_dense
+        per_expert = 3 * self.d_model * self.moe.d_expert
+        return total - n_moe_layers * (e - k) * per_expert
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+def _mlp_init(kg: KeyGen, cfg: ModelConfig, layer_idx: int):
+    if cfg.moe is not None and layer_idx >= cfg.first_dense:
+        return {"moe": moe_init(kg, cfg.d_model, cfg.moe)}
+    d_ff = cfg.d_ff_dense if (cfg.first_dense and layer_idx < cfg.first_dense) else cfg.d_ff
+    return {
+        "w1": dense_init(kg(), (cfg.d_model, d_ff)),
+        "w3": dense_init(kg(), (cfg.d_model, d_ff)),
+        "w2": dense_init(kg(), (d_ff, cfg.d_model)),
+    }
+
+
+def _layer_init(kg: KeyGen, cfg: ModelConfig, kind: str, layer_idx: int):
+    d, hd = cfg.d_model, cfg.hd
+    if kind == "rwkv":
+        return {"rwkv": rwkv6_init(kg, d, hd, cfg.d_ff)}
+    p = {"ln1": jnp.zeros((d,), jnp.float32), "ln2": jnp.zeros((d,), jnp.float32)}
+    if kind == "rec":
+        p["rec"] = rglru_init(kg, d, cfg.d_rnn or d)
+    elif cfg.mla is not None:
+        p["attn"] = mla_init(kg, d, cfg.n_heads, cfg.mla)
+    else:
+        p["attn"] = {
+            "wq": dense_init(kg(), (d, cfg.n_heads * hd)),
+            "wk": dense_init(kg(), (d, cfg.n_kv * hd)),
+            "wv": dense_init(kg(), (d, cfg.n_kv * hd)),
+            "wo": dense_init(kg(), (cfg.n_heads * hd, d)),
+        }
+    p["mlp"] = _mlp_init(kg, cfg, layer_idx)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    kg = KeyGen(key)
+    kinds = cfg.layer_kinds
+    params: dict = {"embed": embed_init(kg(), (cfg.vocab_padded, cfg.d_model))}
+    if cfg.frontend == "vision":
+        params["w_front"] = dense_init(kg(), (cfg.d_frontend, cfg.d_model))
+    elif cfg.frontend == "audio":
+        params["w_front"] = dense_init(kg(), (cfg.d_frontend, cfg.d_model))
+    params["prefix"] = [
+        _layer_init(kg, cfg, kinds[i], i) for i in range(cfg.first_dense)
+    ]
+    # scan groups: stack the per-group params of each pattern position
+    groups = []
+    base = cfg.first_dense
+    plen = len(cfg.pattern)
+    for g in range(cfg.n_groups):
+        groups.append(
+            [
+                _layer_init(kg, cfg, cfg.pattern[j], base + g * plen + j)
+                for j in range(plen)
+            ]
+        )
+    if cfg.n_groups:
+        params["groups"] = jax.tree.map(lambda *xs: jnp.stack(xs), *groups)
+    else:
+        params["groups"] = None
+    tail_base = base + cfg.n_groups * plen
+    params["tail"] = [
+        _layer_init(kg, cfg, k, tail_base + j) for j, k in enumerate(cfg.tail_kinds)
+    ]
+    params["final_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    params["lm_head"] = dense_init(kg(), (cfg.d_model, cfg.vocab_padded))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# full-sequence layer forward (training / prefill)
+# ---------------------------------------------------------------------------
+def _mlp_fwd(p, cfg: ModelConfig, x):
+    if "moe" in p:
+        out, aux = moe_mlp(p["moe"], x, cfg.moe)
+        return out, aux["lb_loss"]
+    return swiglu(x, p["w1"], p["w3"], p["w2"]), jnp.float32(0.0)
+
+
+def _pad_cache_s(arr, cache_len):
+    """Pad a (B, S, ...) cache tensor with zeros up to cache_len slots."""
+    if cache_len is None or arr.shape[1] >= cache_len:
+        return arr
+    pad = jnp.zeros((arr.shape[0], cache_len - arr.shape[1]) + arr.shape[2:], arr.dtype)
+    return jnp.concatenate([arr, pad], axis=1)
+
+
+def _layer_fwd(p, cfg: ModelConfig, kind: str, x, positions, want_cache: bool,
+               cache_len=None):
+    """Returns (x, lb_loss, cache_entry_or_None)."""
+    eps = cfg.norm_eps
+    cache = None
+    if kind == "rwkv":
+        rp = p["rwkv"]
+        b, s, d = x.shape
+        h = d // cfg.hd
+        state0 = jnp.zeros((b, h, cfg.hd, cfg.hd), jnp.float32)
+        xprev0 = jnp.zeros((b, d), x.dtype)
+        tm, state, xtm = rwkv6_time_mix(rp, rms_norm(x, rp["ln_tm"], eps), cfg.hd, state0, xprev0)
+        x = x + tm
+        cm, xcm = rwkv6_channel_mix(rp, rms_norm(x, rp["ln_cm"], eps), xprev0)
+        x = x + cm
+        if want_cache:
+            cache = {"state": state, "xtm": xtm, "xcm": xcm}
+        return x, jnp.float32(0.0), cache
+
+    h_in = rms_norm(x, p["ln1"], eps)
+    if kind == "rec":
+        b, s, _ = x.shape
+        r = cfg.d_rnn or cfg.d_model
+        out, h_last, tail = rglru_block(
+            p["rec"], h_in, jnp.zeros((b, r), jnp.float32), jnp.zeros((b, CONV_W - 1, r), h_in.dtype)
+        )
+        x = x + out
+        if want_cache:
+            cache = {"h": h_last, "tail": tail}
+    elif cfg.mla is not None and kind == "attn":
+        out, (c_kv, k_rope) = mla_attention(
+            p["attn"], h_in, positions, cfg.mla, cfg.n_heads, cfg.rope_theta,
+            impl=cfg.attention_impl,
+        )
+        x = x + out
+        if want_cache:
+            cache = {
+                "ckv": _pad_cache_s(c_kv.astype(COMPUTE_DTYPE), cache_len),
+                "krope": _pad_cache_s(k_rope.astype(COMPUTE_DTYPE), cache_len),
+            }
+    else:
+        ap = p["attn"]
+        b, s, _ = x.shape
+        q = (h_in @ ap["wq"]).reshape(b, s, cfg.n_heads, cfg.hd)
+        k = (h_in @ ap["wk"]).reshape(b, s, cfg.n_kv, cfg.hd)
+        v = (h_in @ ap["wv"]).reshape(b, s, cfg.n_kv, cfg.hd)
+        if not cfg.encoder_only:
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+        if kind == "local":
+            o = sliding_attention(q, k, v, cfg.window)
+        else:
+            o = gqa_attention(
+                q, k, v, causal=not cfg.encoder_only, impl=cfg.attention_impl
+            )
+        x = x + o @ ap["wo"]
+        if want_cache:
+            if kind == "local":
+                w = cfg.window
+                # ring-buffer layout: token t at slot t % w; keep last w tokens
+                ring_k = jnp.zeros((b, w, cfg.n_kv, cfg.hd), k.dtype)
+                ring_v = jnp.zeros_like(ring_k)
+                take = min(w, s)
+                tpos = jnp.arange(s - take, s)
+                ring_k = ring_k.at[:, tpos % w].set(k[:, tpos])
+                ring_v = ring_v.at[:, tpos % w].set(v[:, tpos])
+                cache = {"k": ring_k, "v": ring_v}
+            else:
+                cache = {"k": _pad_cache_s(k, cache_len), "v": _pad_cache_s(v, cache_len)}
+    m_in = rms_norm(x, p["ln2"], eps)
+    mo, lb = _mlp_fwd(p["mlp"], cfg, m_in)
+    x = x + mo
+    return x, lb, cache
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch: dict):
+    """Token/frontend embedding -> (x (B, S, D), positions (S,))."""
+    if cfg.frontend == "audio":
+        x = (batch["features"].astype(COMPUTE_DTYPE)) @ params["w_front"]
+    elif cfg.frontend == "vision":
+        te = params["embed"][batch["tokens"]]
+        pe = batch["patches"].astype(COMPUTE_DTYPE) @ params["w_front"]
+        x = jnp.concatenate([pe, te], axis=1)
+    else:
+        x = params["embed"][batch["tokens"]]
+    x = x.astype(COMPUTE_DTYPE)
+    x = shardctx.constrain(x, shardctx.DP, None, None)
+    positions = jnp.arange(x.shape[1])
+    return x, positions
+
+
+def forward(params, cfg: ModelConfig, batch: dict, *, want_cache: bool = False,
+            remat: bool = False, cache_len=None):
+    """Full-sequence forward. Returns (hidden (B,S,D), lb_loss, cache|None).
+
+    cache_len: total KV-cache slots to allocate when want_cache (must exceed
+    the prompt length by the number of decode steps that will follow)."""
+    x, positions = _embed_inputs(params, cfg, batch)
+    lb_total = jnp.float32(0.0)
+    prefix_cache, tail_cache = [], []
+    kinds = cfg.layer_kinds
+    for i, p in enumerate(params["prefix"]):
+        x, lb, c = _layer_fwd(p, cfg, kinds[i], x, positions, want_cache, cache_len)
+        lb_total += lb
+        prefix_cache.append(c)
+
+    if params["groups"] is not None:
+        def body(carry, gp):
+            x, lb = carry
+            caches = []
+            for j, kind in enumerate(cfg.pattern):
+                x, lbj, c = _layer_fwd(gp[j], cfg, kind, x, positions, want_cache, cache_len)
+                lb += lbj
+                caches.append(c)
+            return (x, lb), caches if want_cache else 0
+
+        if remat:
+            body = jax.checkpoint(body)
+        (x, lb_total), group_cache = jax.lax.scan(
+            body, (x, lb_total), params["groups"]
+        )
+    else:
+        group_cache = None
+
+    for j, p in enumerate(params["tail"]):
+        x, lb, c = _layer_fwd(p, cfg, cfg.tail_kinds[j], x, positions, want_cache, cache_len)
+        lb_total += lb
+        tail_cache.append(c)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    cache = None
+    if want_cache:
+        cache = {
+            "prefix": prefix_cache,
+            "groups": group_cache,
+            "tail": tail_cache,
+            "pos": jnp.int32(x.shape[1]),
+        }
+    return x, lb_total, cache
+
+
+def logits_fn(params, cfg: ModelConfig, hidden) -> jnp.ndarray:
+    """LM head with vocab padding masked out. hidden: (..., D) -> (..., Vp)."""
+    logits = jnp.dot(hidden, params["lm_head"]).astype(jnp.float32)
+    spec = (shardctx.DP,) + (None,) * (logits.ndim - 2) + ("model",)
+    logits = shardctx.constrain(logits, *spec)
+    if cfg.vocab_padded != cfg.vocab:
+        pad_mask = jnp.where(
+            jnp.arange(cfg.vocab_padded) < cfg.vocab, 0.0, -1e9
+        ).astype(jnp.float32)
+        logits = logits + pad_mask
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# decode (single token) over a cache
+# ---------------------------------------------------------------------------
+def make_cache(cfg: ModelConfig, batch_size: int, s_max: int):
+    """Zero-initialized cache pytree for decode; mirrors param structure."""
+    b, hd, kv = batch_size, cfg.hd, cfg.n_kv
+
+    def entry(kind):
+        if kind == "rwkv":
+            h = cfg.d_model // hd
+            return {
+                "state": jnp.zeros((b, h, hd, hd), jnp.float32),
+                "xtm": jnp.zeros((b, cfg.d_model), COMPUTE_DTYPE),
+                "xcm": jnp.zeros((b, cfg.d_model), COMPUTE_DTYPE),
+            }
+        if kind == "rec":
+            r = cfg.d_rnn or cfg.d_model
+            return {
+                "h": jnp.zeros((b, r), jnp.float32),
+                "tail": jnp.zeros((b, CONV_W - 1, r), COMPUTE_DTYPE),
+            }
+        if cfg.mla is not None and kind == "attn":
+            return {
+                "ckv": jnp.zeros((b, s_max, cfg.mla.kv_lora), COMPUTE_DTYPE),
+                "krope": jnp.zeros((b, s_max, cfg.mla.rope_dim), COMPUTE_DTYPE),
+            }
+        w = cfg.window if kind == "local" else s_max
+        return {
+            "k": jnp.zeros((b, w, kv, hd), COMPUTE_DTYPE),
+            "v": jnp.zeros((b, w, kv, hd), COMPUTE_DTYPE),
+        }
+
+    kinds = cfg.layer_kinds
+    cache = {
+        "prefix": [entry(kinds[i]) for i in range(cfg.first_dense)],
+        "tail": [entry(k) for k in cfg.tail_kinds],
+        "pos": jnp.int32(0),
+    }
+    if cfg.n_groups:
+        per_group = [entry(k) for k in cfg.pattern]
+        cache["groups"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.n_groups,) + x.shape), per_group
+        )
+    else:
+        cache["groups"] = None
+    return cache
+
+
+def _layer_decode(p, cfg: ModelConfig, kind: str, x, cache, pos):
+    """One-token layer step. x: (B, 1, D). Returns (x, new_cache_entry)."""
+    eps = cfg.norm_eps
+    if kind == "rwkv":
+        rp = p["rwkv"]
+        tm, state, xtm = rwkv6_time_mix_decode(
+            rp, rms_norm(x, rp["ln_tm"], eps), cfg.hd, cache["state"], cache["xtm"]
+        )
+        x = x + tm
+        cm_in = rms_norm(x, rp["ln_cm"], eps)
+        cm, xcm = rwkv6_channel_mix(rp, cm_in, cache["xcm"])
+        x = x + cm
+        return x, {"state": state, "xtm": xtm.astype(cache["xtm"].dtype), "xcm": xcm.astype(cache["xcm"].dtype)}
+
+    h_in = rms_norm(x, p["ln1"], eps)
+    positions = (pos - 1)[None] if jnp.ndim(pos) == 0 else pos
+    if kind == "rec":
+        out, h, tail = rglru_decode(p["rec"], h_in, cache["h"], cache["tail"])
+        x = x + out
+        new_cache = {"h": h, "tail": tail.astype(cache["tail"].dtype)}
+    elif cfg.mla is not None and kind == "attn":
+        out, ckv, krope = mla_decode(
+            p["attn"], h_in, positions, cache["ckv"], cache["krope"], pos,
+            cfg.mla, cfg.n_heads, cfg.rope_theta,
+        )
+        x = x + out
+        new_cache = {"ckv": ckv, "krope": krope}
+    else:
+        ap = p["attn"]
+        b = x.shape[0]
+        q = (h_in @ ap["wq"]).reshape(b, 1, cfg.n_heads, cfg.hd)
+        k = (h_in @ ap["wk"]).reshape(b, 1, cfg.n_kv, cfg.hd)
+        v = (h_in @ ap["wv"]).reshape(b, 1, cfg.n_kv, cfg.hd)
+        if not cfg.encoder_only:
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+        if kind == "local":
+            w = cfg.window
+            slot = jnp.mod(pos - 1, w)
+            kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+            vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+            o = decode_sliding_attention(q, kc, vc, pos, w)
+        else:
+            kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos - 1, 0, 0))
+            vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos - 1, 0, 0))
+            o = decode_attention(q, kc, vc, pos)
+        x = x + o @ ap["wo"]
+        new_cache = {"k": kc, "v": vc}
+    m_in = rms_norm(x, p["ln2"], eps)
+    mo, _ = _mlp_fwd(p["mlp"], cfg, m_in)
+    return x + mo, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, cache: dict, token: jnp.ndarray):
+    """Decode one token. token: (B, 1) int32. Returns (logits (B, Vp), cache)."""
+    pos = cache["pos"] + 1  # number of tokens including this one
+    x = params["embed"][token].astype(COMPUTE_DTYPE)  # (B, 1, D)
+    kinds = cfg.layer_kinds
+    new_prefix = []
+    for i, p in enumerate(params["prefix"]):
+        x, c = _layer_decode(p, cfg, kinds[i], x, cache["prefix"][i], pos)
+        new_prefix.append(c)
+
+    new_groups = None
+    if params["groups"] is not None:
+        def body(x, scanned):
+            gp, gc = scanned
+            caches = []
+            for j, kind in enumerate(cfg.pattern):
+                x, c = _layer_decode(gp[j], cfg, kind, x, gc[j], pos)
+                caches.append(c)
+            return x, caches
+
+        x, new_groups = jax.lax.scan(body, x, (params["groups"], cache["groups"]))
+
+    new_tail = []
+    for j, p in enumerate(params["tail"]):
+        x, c = _layer_decode(p, cfg, cfg.tail_kinds[j], x, cache["tail"][j], pos)
+        new_tail.append(c)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_fn(params, cfg, x[:, 0, :])
+    new_cache = {
+        "prefix": new_prefix, "groups": new_groups, "tail": new_tail, "pos": pos,
+    }
+    return logits, new_cache
+
+
+def prefill(params, cfg: ModelConfig, batch: dict, *, cache_len=None):
+    """Process a full prompt; returns (last-token logits, cache).
+
+    cache_len defaults to prompt_len + 64 slots of decode headroom."""
+    if cache_len is None:
+        s = batch["features"].shape[1] if "features" in batch else batch["tokens"].shape[1]
+        if cfg.frontend == "vision":
+            s += cfg.n_vis_tokens
+        cache_len = s + 64
+    hidden, _, cache = forward(params, cfg, batch, want_cache=True, cache_len=cache_len)
+    logits = logits_fn(params, cfg, hidden[:, -1, :])
+    return logits, cache

@@ -1,0 +1,62 @@
+"""Gradient compression with error feedback — bandwidth relief for the
+cross-pod gradient all-reduce at 1000+ node scale.
+
+* int8: per-tensor symmetric quantization. The all-reduce then moves 1/4 of
+  the bytes; the quantization error is fed back into the next step's
+  gradient (error-feedback a la 1-bit SGD), which keeps convergence.
+* topk: keep the largest `frac` fraction of entries per tensor (magnitude),
+  accumulate the rest in the error buffer.
+
+Both are pure functions grads -> (decompressed grads, new error state), so
+they compose with any optimizer and stay inside the jit'd train step. On a
+real pod the quantized representation is what crosses the ICI; here the
+compress->decompress round trip models the information loss faithfully.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _int8_roundtrip(g: jnp.ndarray) -> jnp.ndarray:
+    amax = jnp.max(jnp.abs(g)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def _topk_roundtrip(g: jnp.ndarray, frac: float = 0.1) -> jnp.ndarray:
+    flat = g.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    return jnp.where(jnp.abs(g) >= thresh, g, 0.0)
+
+
+def make_compressor(kind: Optional[str]) -> Optional[Callable]:
+    if kind is None:
+        return None
+
+    if kind == "int8":
+        rt = _int8_roundtrip
+    elif kind == "topk":
+        rt = _topk_roundtrip
+    else:
+        raise ValueError(f"unknown compression {kind}")
+
+    def compress(grads, err):
+        def one(g, e):
+            gf = g.astype(jnp.float32) + e
+            out = rt(gf)
+            return out, gf - out
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_e = jax.tree.leaves(err)
+        outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+        return (
+            jax.tree.unflatten(tdef, [o[0] for o in outs]),
+            jax.tree.unflatten(tdef, [o[1] for o in outs]),
+        )
+
+    return compress

@@ -1,0 +1,95 @@
+"""AdamW with warmup-cosine schedule, global-norm clipping, and optional
+gradient compression hooks. Implemented from scratch (no optax dependency);
+moment states are f32 and inherit the parameter shardings, so with FSDP
+param sharding this is ZeRO-sharded optimizer state for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .compression import make_compressor
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    compression: Optional[str] = None  # None | "int8" | "topk"
+
+
+class AdamW:
+    def __init__(self, cfg: AdamWConfig):
+        self.cfg = cfg
+        self.compressor = make_compressor(cfg.compression)
+
+    def init(self, params):
+        state = {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+        if self.compressor is not None:
+            state["err"] = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+        return state
+
+    def schedule(self, step):
+        c = self.cfg
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+        warm = jnp.minimum(step / jnp.maximum(c.warmup_steps, 1), 1.0)
+        prog = jnp.clip(
+            (step - c.warmup_steps) / jnp.maximum(c.total_steps - c.warmup_steps, 1),
+            0.0,
+            1.0,
+        )
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return c.learning_rate * warm * (c.min_lr_frac + (1 - c.min_lr_frac) * cos)
+
+    def update(self, params, grads, state, step):
+        """Returns (new_params, new_state, grad_norm)."""
+        c = self.cfg
+        if self.compressor is not None:
+            grads, new_err = self.compressor(grads, state["err"])
+        # global-norm clip
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+        )
+        scale = jnp.minimum(1.0, c.grad_clip / (gnorm + 1e-9))
+        lr = self.schedule(step)
+        t = (step + 1).astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step + 1)
+        bc1 = 1.0 - c.beta1 ** t
+        bc2 = 1.0 - c.beta2 ** t
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m = c.beta1 * m + (1 - c.beta1) * g
+            v = c.beta2 * v + (1 - c.beta2) * g * g
+            mh = m / bc1
+            vh = v / bc2
+            step_ = lr * (mh / (jnp.sqrt(vh) + c.eps) + c.weight_decay * p.astype(jnp.float32))
+            return (p.astype(jnp.float32) - step_).astype(p.dtype), m, v
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state["m"])
+        flat_v = jax.tree.leaves(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_params = jax.tree.unflatten(tdef, [o[0] for o in out])
+        new_state = {
+            "m": jax.tree.unflatten(tdef, [o[1] for o in out]),
+            "v": jax.tree.unflatten(tdef, [o[2] for o in out]),
+        }
+        if self.compressor is not None:
+            new_state["err"] = new_err
+        return new_params, new_state, gnorm

@@ -1,0 +1,18 @@
+import os
+import sys
+
+# src-layout import without install
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_walks(n, length, seed=0):
+    r = np.random.default_rng(seed)
+    return r.standard_normal((n, length)).astype(np.float32).cumsum(axis=1)

@@ -1,0 +1,43 @@
+import numpy as np
+import pytest
+
+from repro.core import DiskModel, SummarizationConfig, external_sort_order, interleave
+
+
+def _keys(n, seed=0):
+    cfg = SummarizationConfig(64, 8, 8)
+    rng = np.random.default_rng(seed)
+    sym = rng.integers(0, 256, (n, 8)).astype(np.int32)
+    return interleave(sym, cfg)
+
+
+@pytest.mark.parametrize("budget", [10_000, 1000, 137, 32])
+def test_order_matches_full_sort(budget):
+    keys = _keys(1000)
+    order, report = external_sort_order(keys, budget)
+    ref = np.lexsort(tuple(keys[:, i] for i in range(keys.shape[1] - 1, -1, -1)))
+    skeys = keys[order]
+    as_tuples = [tuple(r) for r in skeys]
+    assert as_tuples == sorted(as_tuples)
+    np.testing.assert_array_equal(keys[ref], skeys)  # same stable order
+    assert report.n_passes == (1 if budget >= 1000 else 2)
+
+
+def test_io_accounting_two_pass():
+    keys = _keys(1000)
+    disk = DiskModel()
+    _, report = external_sort_order(keys, 100, disk, payload_bytes_per_entry=256)
+    entry = keys.shape[1] * 4 + 256
+    # pass 1 reads + writes everything, merge pass reads + writes again
+    assert disk.stats.seq_read_bytes == 2 * 1000 * entry
+    assert disk.stats.seq_write_bytes == 2 * 1000 * entry
+    assert disk.stats.rand_read_bytes == 0  # the paper's headline: no random I/O
+    assert report.n_runs == 10
+
+
+def test_single_pass_when_fits():
+    keys = _keys(500)
+    disk = DiskModel()
+    _, report = external_sort_order(keys, 1000, disk, payload_bytes_per_entry=0)
+    assert report.n_passes == 1
+    assert disk.stats.seq_read_bytes == 500 * keys.shape[1] * 4

@@ -1,0 +1,165 @@
+"""CTree / CLSM / ADS+ behaviour: exactness vs brute force, I/O profiles,
+materialization variants, insert gaps, level structure."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    ADSConfig,
+    ADSIndex,
+    CLSM,
+    CLSMConfig,
+    CTree,
+    CTreeConfig,
+    DiskModel,
+    RawStore,
+    SummarizationConfig,
+    ed2,
+)
+
+CFG = SummarizationConfig(series_len=64, n_segments=8, card_bits=6)
+
+
+def _data(n=4000, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, 64)).astype(np.float32).cumsum(axis=1)
+
+
+def _queries(m=5, seed=99):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((m, 64)).astype(np.float32).cumsum(axis=1)
+
+
+@pytest.mark.parametrize("materialized", [False, True])
+def test_ctree_exact_matches_brute_force(materialized):
+    X, Q = _data(), _queries()
+    disk = DiskModel()
+    raw = RawStore(64, disk)
+    ids = raw.append(X)
+    ct = CTree(CTreeConfig(summarization=CFG, block_size=256, materialized=materialized,
+                           mem_budget_entries=1111), disk)
+    ct.bulk_build(X, ids)
+    for q in Q:
+        res, _ = ct.knn_exact(q, k=7, raw=raw)
+        bf = np.sort(ed2(q, X))[:7]
+        np.testing.assert_allclose([d for d, _ in res], bf, rtol=1e-4)
+
+
+def test_ctree_approx_visits_few_blocks():
+    X, Q = _data(), _queries()
+    raw = RawStore(64)
+    ids = raw.append(X)
+    ct = CTree(CTreeConfig(summarization=CFG, block_size=128, materialized=True))
+    ct.bulk_build(X, ids)
+    res, st = ct.knn_approx(Q[0], k=1, n_blocks=2, raw=raw)
+    assert st.blocks_visited <= 2 and len(res) == 1
+    # approximate answer should be decent: within 3x of true NN distance
+    bf = np.sort(ed2(Q[0], X))[0]
+    assert res[0][0] <= 9 * bf + 1e-3
+
+
+def test_ctree_insert_gaps_then_rebuild():
+    X = _data(2000)
+    extra = _data(900, seed=7)
+    raw = RawStore(64)
+    ids = raw.append(X)
+    ct = CTree(CTreeConfig(summarization=CFG, block_size=128, fill_factor=0.75,
+                           materialized=True))
+    ct.bulk_build(X, ids)
+    cap = ct.gap_capacity
+    assert cap > 0
+    ids2 = raw.append(extra)
+    rebuilt = ct.insert(extra, ids2)
+    assert rebuilt == (900 > cap)
+    q = _queries(1)[0]
+    allX = np.concatenate([X, extra])
+    res, _ = ct.knn_exact(q, k=3, raw=raw)
+    bf = np.sort(ed2(q, allX))[:3]
+    np.testing.assert_allclose([d for d, _ in res], bf, rtol=1e-4)
+
+
+def test_ctree_build_uses_sequential_io_only():
+    X = _data()
+    disk = DiskModel()
+    raw = RawStore(64, disk)
+    ids = raw.append(X)
+    ct = CTree(CTreeConfig(summarization=CFG, mem_budget_entries=500), disk)
+    ct.bulk_build(X, ids)
+    assert disk.stats.rand_read_bytes == 0 and disk.stats.rand_write_bytes == 0
+
+
+def test_clsm_exact_across_merges():
+    X = _data(6000)
+    cfg = CLSMConfig(summarization=CFG, buffer_entries=512, growth_factor=3,
+                     block_size=128, materialized=True)
+    lsm = CLSM(cfg)
+    raw = RawStore(64)
+    for i in range(0, 6000, 500):
+        chunk = X[i : i + 500]
+        ids = raw.append(chunk)
+        lsm.insert(chunk, ids, np.full(len(chunk), i, np.int64))
+    assert lsm.n_merges > 0
+    assert lsm.n_runs < lsm.n_flushes  # merging bounded the run count
+    q = _queries(1)[0]
+    res, _ = lsm.knn_exact(q, k=5, raw=raw)
+    bf = np.sort(ed2(q, X))[:5]
+    np.testing.assert_allclose([d for d, _ in res], bf, rtol=1e-4)
+
+
+def test_clsm_growth_factor_tradeoff():
+    """Higher growth factor => fewer merges (cheaper writes), more runs
+    (costlier reads) — the paper's read/write knob."""
+    X = _data(8000)
+
+    def build(t):
+        lsm = CLSM(CLSMConfig(summarization=CFG, buffer_entries=256,
+                              growth_factor=t, block_size=128))
+        raw = RawStore(64)
+        for i in range(0, 8000, 256):
+            c = X[i : i + 256]
+            lsm.insert(c, raw.append(c), np.full(len(c), i, np.int64))
+        return lsm
+
+    small, large = build(2), build(8)
+    assert small.merged_bytes > large.merged_bytes
+    assert small.n_runs <= large.n_runs
+
+
+@pytest.mark.parametrize("mode", ["full", "adaptive"])
+def test_adsplus_exact_matches_brute_force(mode):
+    X, Q = _data(3000), _queries(3)
+    raw = RawStore(64)
+    ids = raw.append(X)
+    ads = ADSIndex(ADSConfig(summarization=CFG, leaf_size=256, mode=mode,
+                             query_leaf_size=64))
+    ads.insert_batch(X, ids)
+    for q in Q:
+        res, _ = ads.knn_exact(q, k=5, raw=raw)
+        bf = np.sort(ed2(q, X))[:5]
+        np.testing.assert_allclose([d for d, _ in res], bf, rtol=1e-4)
+
+
+def test_adsplus_insert_is_random_io_but_ctree_is_not():
+    """The paper's central claim, in miniature: top-down insertion does
+    random I/O per entry; Coconut's bottom-up build is sequential only."""
+    X = _data(2000)
+    d_ads = DiskModel()
+    ads = ADSIndex(ADSConfig(summarization=CFG, leaf_size=128), d_ads)
+    ads.insert_batch(X, np.arange(2000))
+    d_ct = DiskModel()
+    ct = CTree(CTreeConfig(summarization=CFG), d_ct)
+    ct.bulk_build(X, np.arange(2000))
+    assert d_ads.stats.rand_ops > 2000  # >= one random page op per insert
+    assert d_ct.stats.rand_ops == 0
+    assert d_ct.modeled_seconds() < d_ads.modeled_seconds()
+
+
+def test_adaptive_splits_happen_at_query_time():
+    X = _data(3000)
+    raw = RawStore(64)
+    ids = raw.append(X)
+    ads = ADSIndex(ADSConfig(summarization=CFG, leaf_size=4096, mode="adaptive",
+                             query_leaf_size=128))
+    ads.insert_batch(X, ids)
+    before = ads.n_splits
+    ads.knn_exact(_queries(1)[0], k=1, raw=raw)
+    assert ads.n_splits > before

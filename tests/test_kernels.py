@@ -1,0 +1,76 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import SummarizationConfig, breakpoints, interleave, sax_from_paa
+from repro.core.summarization import paa as paa_np, sax_region
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("b,n,w", [(64, 128, 16), (100, 256, 16), (8, 64, 8),
+                                   (257, 96, 12)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_paa_kernel(b, n, w, dtype, rng):
+    cfg = SummarizationConfig(series_len=n, n_segments=w, card_bits=8)
+    x = rng.standard_normal((b, n)).astype(dtype)
+    out = ops.paa(x, cfg)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(paa_np(x.astype(np.float32), cfg)), atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("b,w,c", [(64, 16, 8), (100, 8, 4), (33, 12, 6), (8, 16, 2)])
+def test_sax_pack_kernel(b, w, c, rng):
+    cfg = SummarizationConfig(series_len=w * 4, n_segments=w, card_bits=c)
+    p = rng.standard_normal((b, w)).astype(np.float32)
+    sym, keys = ops.sax_and_keys(p, cfg)
+    sym_np = sax_from_paa(p, cfg)
+    np.testing.assert_array_equal(np.asarray(sym), sym_np)
+    np.testing.assert_array_equal(
+        np.asarray(keys), interleave(sym_np.astype(np.int32), cfg)
+    )
+
+
+@pytest.mark.parametrize("m,n,d", [(8, 512, 128), (7, 333, 64), (128, 1024, 256),
+                                   (1, 100, 96)])
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_min_ed_kernel(m, n, d, dtype, rng):
+    q = rng.standard_normal((m, d)).astype(dtype)
+    x = rng.standard_normal((n, d)).astype(dtype)
+    md, am = ops.min_ed(q, x, block_m=8, block_n=64)
+    rd, ra = ref.min_ed_ref(jnp.asarray(q), jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(md), np.asarray(rd), rtol=2e-4, atol=1e-3)
+    # argmin may differ on near-ties; check the distances it picks
+    d2 = ((x[np.asarray(am)] - q) ** 2).sum(-1)
+    np.testing.assert_allclose(d2, np.asarray(rd), rtol=2e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("b,w", [(512, 16), (100, 8), (2048, 16)])
+def test_mindist_kernel(b, w, rng):
+    cfg = SummarizationConfig(series_len=w * 8, n_segments=w, card_bits=8)
+    sym = rng.integers(0, 256, (b, w)).astype(np.int64)
+    lo, hi = sax_region(sym, cfg)
+    qp = rng.standard_normal(w).astype(np.float32)
+    out = ops.mindist(qp, lo, hi, cfg, block_b=128)
+    expect = ref.mindist_ref(jnp.asarray(qp), jnp.asarray(lo), jnp.asarray(hi),
+                             cfg.segment_len)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-4)
+
+
+def test_summarize_pipeline_matches_host(rng):
+    cfg = SummarizationConfig(series_len=128, n_segments=16, card_bits=8)
+    x = rng.standard_normal((120, 128)).astype(np.float32)
+    p, sym, keys = ops.summarize(x, cfg)
+    from repro.core import sax
+    np.testing.assert_array_equal(np.asarray(sym), sax(x, cfg))
+
+
+def test_min_ed_kernel_argmin_is_exact_on_separated_data(rng):
+    q = rng.standard_normal((4, 64)).astype(np.float32)
+    x = rng.standard_normal((256, 64)).astype(np.float32) + 10.0
+    x[17] = q[0]; x[42] = q[1]; x[200] = q[2]; x[3] = q[3]
+    md, am = ops.min_ed(q, x, block_m=8, block_n=64)
+    np.testing.assert_array_equal(np.asarray(am), [17, 42, 200, 3])
+    np.testing.assert_allclose(np.asarray(md), 0.0, atol=1e-3)

@@ -1,0 +1,102 @@
+"""Dry-run support machinery: flop/byte counters, skip rules, specs."""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, cell_is_skipped, get_config
+from repro.launch.hlo_analysis import count_jaxpr_bytes, count_jaxpr_flops
+
+
+def test_flops_exact_for_matmul():
+    f = lambda a, b: a @ b
+    jx = jax.make_jaxpr(f)(
+        jax.ShapeDtypeStruct((64, 128), jnp.float32),
+        jax.ShapeDtypeStruct((128, 32), jnp.float32),
+    )
+    assert count_jaxpr_flops(jx) == 2 * 64 * 128 * 32
+
+
+def test_flops_multiply_scan_trips():
+    def f(w, x):
+        def body(x, _):
+            return jnp.tanh(x @ w), None
+        return jax.lax.scan(body, x, None, length=12)[0]
+
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+    flops = count_jaxpr_flops(jax.make_jaxpr(f)(w, x))
+    matmul = 2 * 8 * 64 * 64
+    assert flops >= 12 * matmul
+    assert flops < 12 * matmul * 1.5  # elementwise overhead stays small
+
+
+def test_flops_recurse_remat():
+    def layer(x, w):
+        return jnp.tanh(x @ w)
+
+    def f(w, x):
+        y = jax.checkpoint(layer)(x, w)
+        return jnp.sum(y)
+
+    g = jax.grad(f, argnums=0)
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+    flops = count_jaxpr_flops(jax.make_jaxpr(g)(w, x))
+    # fwd + remat recompute + 1 bwd matmul >= 3 matmuls
+    assert flops >= 3 * 2 * 8 * 64 * 64
+
+
+def test_bytes_scan_linear_in_trips():
+    def mk(n):
+        def f(w, x):
+            def body(x, _):
+                return jnp.tanh(x @ w), None
+            return jax.lax.scan(body, x, None, length=n)[0]
+        return f
+
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+    b4 = count_jaxpr_bytes(jax.make_jaxpr(mk(4))(w, x))
+    b16 = count_jaxpr_bytes(jax.make_jaxpr(mk(16))(w, x))
+    assert 3.0 < (b16 - 17000) / max(b4 - 17000, 1) < 5.0  # ~4x body traffic
+
+
+def test_dus_counts_update_only():
+    def f(buf, upd):
+        return jax.lax.dynamic_update_slice(buf, upd, (0,))
+
+    buf = jax.ShapeDtypeStruct((1_000_000,), jnp.float32)
+    upd = jax.ShapeDtypeStruct((8,), jnp.float32)
+    b = count_jaxpr_bytes(jax.make_jaxpr(f)(buf, upd))
+    assert b < 4_100_000  # args once, not 2x the big buffer
+
+
+def test_skip_rules():
+    assert cell_is_skipped("hubert-xlarge", "decode_32k")
+    assert cell_is_skipped("hubert-xlarge", "long_500k")
+    assert cell_is_skipped("gemma3-27b", "long_500k")
+    assert cell_is_skipped("smollm-360m", "long_500k")
+    assert cell_is_skipped("rwkv6-3b", "long_500k") is None
+    assert cell_is_skipped("recurrentgemma-9b", "long_500k") is None
+    n = sum(1 for a in ARCH_IDS for s in SHAPES if not cell_is_skipped(a, s))
+    assert n == 31
+
+
+def test_model_flops_formula_sane():
+    from repro.launch.dryrun import model_flops
+
+    cfg = get_config("smollm-360m")
+    n_act = 360e6  # order of magnitude
+    tr = model_flops(cfg, SHAPES["train_4k"], int(n_act))
+    assert 2.0e15 < tr < 4.5e15  # ~6ND + attention for 1M tokens
+    dec = model_flops(cfg, SHAPES["decode_32k"], int(n_act))
+    assert dec < tr / 1000
+
+
+def test_n_params_counts():
+    cfg = get_config("smollm-360m")
+    n = cfg.n_params()
+    assert 3.4e8 < n < 5.5e8  # ~360M + untied head
+    moe = get_config("deepseek-moe-16b")
+    assert moe.n_params_active() < 0.3 * moe.n_params()

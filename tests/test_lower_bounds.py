@@ -1,0 +1,52 @@
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SummarizationConfig, ed2, mindist_paa_sax2, mindist_region2, sax
+from repro.core.summarization import paa
+
+
+@given(
+    st.sampled_from([
+        SummarizationConfig(64, 8, 4),
+        SummarizationConfig(64, 8, 8),
+        SummarizationConfig(128, 16, 8),
+        SummarizationConfig(64, 16, 3),
+    ]),
+    st.integers(0, 2**31 - 1),
+    st.floats(0.1, 20.0),
+)
+@settings(max_examples=40, deadline=None)
+def test_mindist_lower_bounds_ed(cfg, seed, scale):
+    """THE correctness invariant of exact search: MINDIST_PAA_SAX <= ED."""
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((64, cfg.series_len)) * scale).astype(np.float32)
+    q = (rng.standard_normal(cfg.series_len) * scale).astype(np.float32)
+    qp = np.asarray(paa(q, cfg))
+    sym = sax(x, cfg).astype(np.int64)
+    lb2 = mindist_paa_sax2(qp, sym, cfg)
+    d2 = ed2(q, x)
+    assert (lb2 <= d2 * (1 + 1e-4) + 1e-3).all()
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_region_bound_lower_bounds_entry_bound(seed):
+    """Zone-map (block) MINDIST <= every member entry's MINDIST."""
+    cfg = SummarizationConfig(64, 8, 8)
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((128, 64)).astype(np.float32).cumsum(axis=1)
+    q = rng.standard_normal(64).astype(np.float32).cumsum()
+    qp = np.asarray(paa(q.astype(np.float32), cfg))
+    sym = sax(x, cfg).astype(np.int64)
+    blk_lb = mindist_region2(qp, sym.min(axis=0), sym.max(axis=0), cfg)
+    entry_lb = mindist_paa_sax2(qp, sym, cfg)
+    assert (blk_lb <= entry_lb + 1e-3).all()
+
+
+def test_mindist_zero_for_own_region(rng):
+    cfg = SummarizationConfig(64, 8, 8)
+    x = rng.standard_normal((10, 64)).astype(np.float32)
+    qp = np.asarray(paa(x, cfg))
+    sym = sax(x, cfg).astype(np.int64)
+    for i in range(10):
+        assert float(mindist_paa_sax2(qp[i], sym[i][None], cfg)[0]) == 0.0

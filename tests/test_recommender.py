@@ -1,0 +1,47 @@
+"""The recommender must reproduce the paper's demo narratives."""
+from repro.core import Scenario, recommend
+
+
+def test_scenario1_static_few_queries_nonmat_ctree_pp():
+    rec = recommend(Scenario(streaming=False, n_series=10**6, expected_queries=5,
+                             uses_windows=True))
+    assert rec.index == "ctree" and not rec.materialized and rec.scheme == "PP"
+    assert rec.rationale
+
+
+def test_scenario1_many_queries_flips_to_materialized():
+    few = recommend(Scenario(streaming=False, n_series=10**6, expected_queries=5))
+    many = recommend(Scenario(streaming=False, n_series=10**6, expected_queries=10**7))
+    assert not few.materialized and many.materialized
+
+
+def test_scenario2_streaming_clsm_btp():
+    rec = recommend(Scenario(streaming=True, n_series=10**6, uses_windows=True,
+                             ingest_rate=1e4))
+    assert rec.index == "clsm" and rec.scheme == "BTP" and not rec.materialized
+
+
+def test_streaming_without_windows_uses_pp():
+    rec = recommend(Scenario(streaming=True, n_series=10**5, uses_windows=False))
+    assert rec.scheme == "PP"
+
+
+def test_write_heavy_stream_gets_larger_growth_factor():
+    writey = recommend(Scenario(streaming=True, n_series=10**6, uses_windows=True,
+                                ingest_rate=1e6, expected_queries=10))
+    ready = recommend(Scenario(streaming=True, n_series=10**6, uses_windows=True,
+                               ingest_rate=1.0, expected_queries=10**5))
+    assert writey.growth_factor > ready.growth_factor
+
+
+def test_memory_budget_reflected_in_rationale():
+    rec = recommend(Scenario(streaming=False, n_series=10**7, series_len=256,
+                             memory_budget_bytes=64 << 20))
+    assert any("two-pass" in r for r in rec.rationale)
+    assert rec.mem_budget_entries * 256 * 4 <= (64 << 20) + 2**20
+
+
+def test_describe_renders():
+    rec = recommend(Scenario(streaming=True, n_series=1000, uses_windows=True))
+    text = rec.describe()
+    assert "CLSM" in text and "because" in text

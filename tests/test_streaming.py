@@ -1,0 +1,91 @@
+"""PP / TP / BTP window-query schemes: all three must return identical,
+brute-force-correct results; their physical behaviour must differ as the
+paper describes (TP partition count unbounded, BTP bounded, PP minimal)."""
+import numpy as np
+import pytest
+
+from repro.core import StreamConfig, StreamingIndex, SummarizationConfig, ed2
+
+CFG = SummarizationConfig(series_len=64, n_segments=8, card_bits=6)
+
+
+def _ingest(scheme, n_batches=30, bsz=200, seed=1, **kw):
+    idx = StreamingIndex(StreamConfig(scheme=scheme, summarization=CFG,
+                                      buffer_entries=1024, growth_factor=3,
+                                      block_size=128, **kw))
+    rng = np.random.default_rng(seed)
+    xs, ts = [], []
+    for b in range(n_batches):
+        x = rng.standard_normal((bsz, 64)).astype(np.float32).cumsum(axis=1)
+        t = np.full(bsz, b, np.int64)
+        idx.ingest(x, t)
+        xs.append(x)
+        ts.append(t)
+    return idx, np.concatenate(xs), np.concatenate(ts)
+
+
+@pytest.fixture(scope="module")
+def built():
+    out = {}
+    for scheme in ("PP", "TP", "BTP"):
+        out[scheme] = _ingest(scheme)
+    return out
+
+
+@pytest.mark.parametrize("window", [(3, 9), (0, 29), (25, 29), (12, 12)])
+def test_all_schemes_agree_and_are_exact(built, window):
+    rng = np.random.default_rng(5)
+    q = rng.standard_normal(64).astype(np.float32).cumsum()
+    t0, t1 = window
+    results = {}
+    for scheme in ("PP", "TP", "BTP"):
+        idx, X, T = built[scheme]
+        res, _ = idx.window_knn(q.astype(np.float32), t0, t1, k=4)
+        results[scheme] = np.array([d for d, _ in res])
+        m = (T >= t0) & (T <= t1)
+        bf = np.sort(ed2(q.astype(np.float32), X[m]))[:4]
+        np.testing.assert_allclose(results[scheme], bf, rtol=1e-4)
+    np.testing.assert_allclose(results["PP"], results["TP"], rtol=1e-6)
+    np.testing.assert_allclose(results["PP"], results["BTP"], rtol=1e-6)
+
+
+def test_partition_counts(built):
+    pp, tp, btp = (built[s][0] for s in ("PP", "TP", "BTP"))
+    assert tp.n_partitions >= btp.n_partitions  # BTP bounds partitions
+    assert pp.n_partitions <= btp.n_partitions  # PP merges hardest
+
+
+def test_tp_small_window_touches_fewer_blocks(built):
+    """TP's advantage: a small window query skips non-overlapping partitions."""
+    rng = np.random.default_rng(6)
+    q = rng.standard_normal(64).astype(np.float32).cumsum().astype(np.float32)
+    _, st_tp = built["TP"][0].window_knn(q, 27, 29, k=1)
+    _, st_pp = built["PP"][0].window_knn(q, 27, 29, k=1)
+    assert st_tp.blocks_visited <= st_pp.blocks_visited
+
+
+def test_btp_merge_keeps_time_ranges_contiguous(built):
+    btp = built["BTP"][0]
+    for runs in btp.lsm.levels.values():
+        for r in runs:
+            assert r.t_min <= r.t_max
+
+
+def test_whole_history_query(built):
+    rng = np.random.default_rng(7)
+    q = rng.standard_normal(64).astype(np.float32).cumsum().astype(np.float32)
+    idx, X, _ = built["BTP"]
+    res, _ = idx.knn(q, k=3)
+    bf = np.sort(ed2(q, X))[:3]
+    np.testing.assert_allclose([d for d, _ in res], bf, rtol=1e-4)
+
+
+def test_approximate_window_query(built):
+    rng = np.random.default_rng(8)
+    q = rng.standard_normal(64).astype(np.float32).cumsum().astype(np.float32)
+    idx, X, T = built["BTP"]
+    res, st = idx.window_knn(q, 0, 29, k=1, exact=False)
+    assert len(res) == 1
+    m = (T >= 0) & (T <= 29)
+    bf = np.sort(ed2(q, X[m]))[0]
+    assert res[0][0] <= 25 * bf + 1e-3  # approximate but sane

@@ -1,0 +1,57 @@
+import numpy as np
+import pytest
+
+from repro.core import SummarizationConfig, breakpoints, paa, sax, sax_from_paa
+from repro.core.summarization import sax_region, znormalize
+
+
+def test_breakpoints_monotone_and_symmetric():
+    for c in (2, 4, 6, 8):
+        bp = breakpoints(c)
+        assert bp.shape == ((1 << c) - 1,)
+        assert (np.diff(bp) > 0).all()
+        np.testing.assert_allclose(bp, -bp[::-1], atol=1e-5)
+
+
+def test_breakpoints_match_normal_quantiles():
+    # median breakpoint of card 2 is 0; quartiles of card 4 are +-0.6745
+    np.testing.assert_allclose(breakpoints(1), [0.0], atol=1e-6)
+    np.testing.assert_allclose(breakpoints(2), [-0.6745, 0.0, 0.6745], atol=1e-3)
+
+
+def test_paa_means(rng):
+    cfg = SummarizationConfig(series_len=64, n_segments=8, card_bits=4)
+    x = rng.standard_normal((10, 64)).astype(np.float32)
+    p = paa(x, cfg)
+    np.testing.assert_allclose(p[:, 0], x[:, :8].mean(axis=1), rtol=1e-5)
+    np.testing.assert_allclose(p[:, -1], x[:, -8:].mean(axis=1), rtol=1e-5)
+
+
+def test_sax_symbols_in_range(rng):
+    cfg = SummarizationConfig(series_len=64, n_segments=8, card_bits=6)
+    x = rng.standard_normal((100, 64)).astype(np.float32) * 3
+    s = sax(x, cfg)
+    assert s.min() >= 0 and s.max() < 64
+
+
+def test_sax_region_contains_paa(rng):
+    cfg = SummarizationConfig(series_len=64, n_segments=8, card_bits=8)
+    x = rng.standard_normal((50, 64)).astype(np.float32)
+    p = np.asarray(paa(x, cfg))
+    s = sax_from_paa(p, cfg)
+    lo, hi = sax_region(s.astype(np.int64), cfg)
+    assert (p >= lo - 1e-6).all() and (p <= hi + 1e-6).all()
+
+
+def test_invalid_config_raises():
+    with pytest.raises(ValueError):
+        SummarizationConfig(series_len=100, n_segments=16)
+    with pytest.raises(ValueError):
+        SummarizationConfig(card_bits=9)
+
+
+def test_znormalize(rng):
+    x = rng.standard_normal((5, 128)).astype(np.float32) * 7 + 3
+    z = znormalize(x)
+    np.testing.assert_allclose(z.mean(axis=1), 0, atol=1e-4)
+    np.testing.assert_allclose(z.std(axis=1), 1, atol=1e-3)

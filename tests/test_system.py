@@ -1,0 +1,122 @@
+"""End-to-end behaviour tests mirroring the paper's two demo scenarios."""
+import numpy as np
+
+from repro.core import (
+    ADSConfig,
+    ADSIndex,
+    CTree,
+    CTreeConfig,
+    DiskModel,
+    RawStore,
+    Scenario,
+    StreamConfig,
+    StreamingIndex,
+    SummarizationConfig,
+    ed2,
+    recommend,
+)
+from repro.data.synthetic import astronomy, seismic
+
+CFG = SummarizationConfig(series_len=128, n_segments=16, card_bits=6)
+
+
+def test_scenario1_static_exploration():
+    """Big static series: recommender picks non-mat CTree; it matches ADS+
+    answers exactly while doing strictly less random I/O."""
+    X = astronomy(4000, 128, seed=3)
+    queries = astronomy(4, 128, seed=77)
+
+    rec = recommend(Scenario(streaming=False, n_series=len(X), series_len=128,
+                             expected_queries=4))
+    assert rec.index == "ctree" and not rec.materialized
+
+    d_ct = DiskModel()
+    raw_ct = RawStore(128, d_ct)
+    ids = raw_ct.append(X)
+    ct = CTree(CTreeConfig(summarization=CFG, block_size=256,
+                           materialized=rec.materialized,
+                           mem_budget_entries=rec.mem_budget_entries), d_ct)
+    ct.bulk_build(X, ids)
+
+    d_ads = DiskModel()
+    raw_ads = RawStore(128, d_ads)
+    ids2 = raw_ads.append(X)
+    ads = ADSIndex(ADSConfig(summarization=CFG, leaf_size=256), d_ads)
+    ads.insert_batch(X, ids2)
+
+    build_rand_ct = d_ct.stats.rand_ops
+    build_rand_ads = d_ads.stats.rand_ops
+    assert build_rand_ct == 0 and build_rand_ads > len(X)
+
+    for q in queries:
+        r1, _ = ct.knn_exact(q, k=3, raw=raw_ct)
+        r2, _ = ads.knn_exact(q, k=3, raw=raw_ads)
+        np.testing.assert_allclose([d for d, _ in r1], [d for d, _ in r2], rtol=1e-5)
+        bf = np.sort(ed2(q, X))[:3]
+        np.testing.assert_allclose([d for d, _ in r1], bf, rtol=1e-4)
+
+
+def test_scenario2_streaming_exploration():
+    """Seismic stream with window queries: recommender picks CLSM+BTP; the
+    index keeps answering exactly while ingesting."""
+    rec = recommend(Scenario(streaming=True, n_series=10**5, uses_windows=True,
+                             ingest_rate=1e4))
+    assert (rec.index, rec.scheme) == ("clsm", "BTP")
+
+    idx = StreamingIndex(StreamConfig(scheme="BTP", summarization=CFG,
+                                      buffer_entries=1024,
+                                      growth_factor=rec.growth_factor,
+                                      block_size=128))
+    xs, ts = [], []
+    for b in range(20):
+        x = seismic(300, 128, seed=b)
+        t = np.full(300, b, np.int64)
+        idx.ingest(x, t)
+        xs.append(x)
+        ts.append(t)
+        if b in (5, 19):  # query mid-stream
+            q = seismic(1, 128, seed=1000 + b)[0]
+            res, _ = idx.window_knn(q, max(0, b - 3), b, k=2)
+            X = np.concatenate(xs)
+            T = np.concatenate(ts)
+            m = (T >= max(0, b - 3)) & (T <= b)
+            bf = np.sort(ed2(q, X[m]))[:2]
+            np.testing.assert_allclose([d for d, _ in res], bf, rtol=1e-4)
+    assert idx.n_partitions <= idx.lsm.n_flushes
+
+
+def test_heatmap_shows_contiguous_ctree_access():
+    """The demo's heat map: CTree approximate query touches one contiguous
+    region; ADS+ random descent scatters."""
+    X = astronomy(3000, 128, seed=9)
+    disk = DiskModel(keep_log=True)
+    raw = RawStore(128, disk)
+    ids = raw.append(X)
+    ct = CTree(CTreeConfig(summarization=CFG, block_size=128, materialized=True), disk)
+    ct.bulk_build(X, ids)
+    disk.log.clear()
+    q = astronomy(1, 128, seed=321)[0]
+    ct.knn_approx(q, k=1, n_blocks=2, raw=raw)
+    kinds = {k for _, _, k in disk.log}
+    assert "rs" in kinds and "rr" not in kinds  # sequential only
+
+
+def test_pipeline_series_view_feeds_streaming_index():
+    """Framework integration: the LM data pipeline tees a series view of its
+    stream into a Coconut index (the §Arch-applicability hook)."""
+    from repro.configs import get_config
+    from repro.data.pipeline import PipelineConfig, TokenPipeline
+
+    mc = get_config("hubert-xlarge", smoke=True)
+    pipe = TokenPipeline(PipelineConfig(global_batch=4, seq_len=64, seed=0), mc)
+    scfg = SummarizationConfig(series_len=32, n_segments=8, card_bits=4)
+    idx = StreamingIndex(StreamConfig(scheme="BTP", summarization=scfg,
+                                      buffer_entries=64, block_size=32))
+    for step in range(5):
+        batch = pipe.batch(step)
+        view = pipe.series_view(batch, 32)
+        assert view is not None and view.shape[1] == 32
+        idx.ingest(view.astype(np.float32), np.full(len(view), step, np.int64))
+    q = pipe.series_view(pipe.batch(99), 32)[0].astype(np.float32)
+    res, _ = idx.window_knn(q, 0, 4, k=1)
+    assert len(res) == 1
