@@ -1,5 +1,7 @@
 """Paper figure: query cost across index variants + the materialization
-trade-off (space vs time, paper §2)."""
+trade-off (space vs time, paper §2), plus the batched top-k engine sweep:
+``knn_batch`` (one shared verification pass per (run, batch)) against the
+per-query ``knn_exact`` loop across batch sizes."""
 import numpy as np
 
 from repro.core import (
@@ -11,6 +13,7 @@ from repro.data.synthetic import random_walk
 from .common import row, timeit
 
 N, LEN, NQ = 40_000, 128, 16
+BATCH_SIZES = (1, 8, 64, 256)
 CFG = SummarizationConfig(series_len=LEN, n_segments=16, card_bits=8)
 
 
@@ -61,3 +64,23 @@ def main():
     ct_m = variants["ctree_mat"][0].index_bytes()
     row("query/index_bytes_nonmat", 0.0, f"bytes={ct_n}")
     row("query/index_bytes_mat", 0.0, f"bytes={ct_m};ratio={ct_m / max(ct_n, 1):.1f}")
+
+    # batched top-k engine: batch-size sweep vs the per-query loop
+    QB = random_walk(max(BATCH_SIZES), LEN, seed=7)
+    for name in ("ctree_mat", "ctree_nonmat"):
+        idx, raw, disk = variants[name]
+        idx.knn_batch(QB[:4], k=10, raw=raw)  # warm any jit/caches
+        for bsz in BATCH_SIZES:
+            Qb = QB[:bsz]
+            us_batch = timeit(lambda: idx.knn_batch(Qb, k=10, raw=raw), repeat=2)
+            us_loop = timeit(
+                lambda: [idx.knn_exact(q, k=10, raw=raw) for q in Qb], repeat=2
+            )
+            _, _, st = idx.knn_batch(Qb, k=10, raw=raw)
+            row(
+                f"query/{name}_knn_batch_b{bsz}",
+                us_batch / bsz,
+                f"speedup_vs_loop={us_loop / max(us_batch, 1e-9):.2f};"
+                f"loop_us_per_q={us_loop / bsz:.1f};"
+                f"verified={st.entries_verified}",
+            )

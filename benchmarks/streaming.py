@@ -1,6 +1,8 @@
 """Paper scenario 2: streaming ingest + variable-window queries under
 PP / TP / BTP. Reports ingest throughput, window-query latency for small /
-medium / large windows, partition counts, and blocks visited."""
+medium / large windows, partition counts, and blocks visited — plus the
+batched engine (``window_knn_batch``) against the per-query loop at several
+concurrent-query batch sizes (the serving-traffic scenario)."""
 import numpy as np
 
 from repro.core import StreamConfig, StreamingIndex, SummarizationConfig
@@ -39,3 +41,15 @@ def main():
             _, st = idx.window_knn(q, t0, t1, k=5)
             row(f"streaming/{scheme}_window_{wname}", us,
                 f"blocks_visited={st.blocks_visited};blocks_pruned={st.blocks_pruned}")
+
+        # batched concurrent window queries vs the per-query loop
+        QB = seismic(64, LEN, seed=1234)
+        t0, t1 = 35, 49
+        for bsz in (8, 64):
+            Qb = QB[:bsz]
+            us_b = timeit(lambda: idx.window_knn_batch(Qb, t0, t1, k=5), repeat=2)
+            us_l = timeit(
+                lambda: [idx.window_knn(q2, t0, t1, k=5) for q2 in Qb], repeat=2
+            )
+            row(f"streaming/{scheme}_window_mid_batch_b{bsz}", us_b / bsz,
+                f"speedup_vs_loop={us_l / max(us_b, 1e-9):.2f}")

@@ -1,0 +1,87 @@
+"""Version-compatibility shims over the moving parts of the jax API.
+
+The repro targets the modern jax surface (``jax.shard_map``,
+``jax.make_mesh(..., axis_types=...)``, ``jax.tree.flatten_with_path``,
+``lax.axis_size``) but must also run on older runtimes (this container ships
+jax 0.4.x) where those names live elsewhere or do not exist. Every call site
+in the repo goes through this module instead of feature-detecting locally,
+so the support matrix is defined in exactly one place.
+
+Nothing here changes semantics: each shim resolves to the native API when it
+exists and otherwise maps onto the equivalent older spelling.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+from jax import lax
+
+__all__ = [
+    "AXIS_TYPE_AUTO",
+    "axis_size",
+    "make_mesh",
+    "shard_map",
+    "tree_flatten_with_path",
+    "tree_unflatten",
+]
+
+# jax.sharding.AxisType (Auto/Explicit sharding modes) only exists on newer
+# jax; older meshes are implicitly "auto" so None is a faithful stand-in.
+try:  # pragma: no cover - depends on installed jax
+    from jax.sharding import AxisType as _AxisType
+
+    AXIS_TYPE_AUTO = _AxisType.Auto
+except ImportError:  # jax < 0.5
+    AXIS_TYPE_AUTO = None
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """``jax.make_mesh`` with Auto axis types where the kwarg exists."""
+    if AXIS_TYPE_AUTO is not None:
+        return jax.make_mesh(
+            axis_shapes,
+            axis_names,
+            axis_types=(AXIS_TYPE_AUTO,) * len(axis_names),
+            devices=devices,
+        )
+    return jax.make_mesh(axis_shapes, axis_names, devices=devices)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+    """``jax.shard_map``; falls back to the experimental version, where the
+    replication checker kwarg is spelled ``check_rep``."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )
+
+
+def axis_size(axis_names) -> int:
+    """Static size of one mapped axis name (or product over a tuple)."""
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_names)
+    # psum of the literal 1 is folded statically to the axis size
+    return lax.psum(1, axis_names)
+
+
+def tree_flatten_with_path(tree):
+    if hasattr(jax.tree, "flatten_with_path"):
+        return jax.tree.flatten_with_path(tree)
+    return jax.tree_util.tree_flatten_with_path(tree)
+
+
+def tree_unflatten(treedef, leaves):
+    return jax.tree.unflatten(treedef, leaves)
+
+
+@functools.lru_cache(maxsize=1)
+def jax_version() -> tuple:
+    return tuple(int(p) for p in jax.__version__.split(".")[:3])

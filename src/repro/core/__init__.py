@@ -3,10 +3,13 @@
 # TPU pod mesh (sample-sort build, broadcast-prune-reduce queries).
 from .summarization import SummarizationConfig, breakpoints, paa, sax, sax_from_paa
 from .sortable import interleave, deinterleave, sort_by_keys
-from .lower_bounds import ed2, mindist_paa_sax2, mindist_region2
+from .lower_bounds import ed2, mindist_paa_sax2, mindist_region2, topk_ed2
 from .io_model import DiskModel, IOStats, render_heatmap
 from .external_sort import external_sort_order
-from .ctree import CTree, CTreeConfig, RawStore, SortedRun, QueryStats, heap_to_sorted
+from .ctree import (
+    CTree, CTreeConfig, RawStore, SortedRun, QueryStats, heap_to_sorted,
+    empty_topk_state, merge_topk_state,
+)
 from .clsm import CLSM, CLSMConfig
 from .streaming import StreamConfig, StreamingIndex
 from .adsplus import ADSConfig, ADSIndex
@@ -15,9 +18,10 @@ from .recommender import Scenario, Recommendation, recommend
 __all__ = [
     "SummarizationConfig", "breakpoints", "paa", "sax", "sax_from_paa",
     "interleave", "deinterleave", "sort_by_keys",
-    "ed2", "mindist_paa_sax2", "mindist_region2",
+    "ed2", "mindist_paa_sax2", "mindist_region2", "topk_ed2",
     "DiskModel", "IOStats", "render_heatmap", "external_sort_order",
     "CTree", "CTreeConfig", "RawStore", "SortedRun", "QueryStats", "heap_to_sorted",
+    "empty_topk_state", "merge_topk_state",
     "CLSM", "CLSMConfig", "StreamConfig", "StreamingIndex",
     "ADSConfig", "ADSIndex", "Scenario", "Recommendation", "recommend",
 ]

@@ -10,6 +10,10 @@ window queries skip runs whose time range misses the window.
 
 The ``growth_factor`` knob trades writes (merge work) against reads (number
 of runs a query must probe) — paper §2 "Better Read vs. Write Trade-Offs".
+
+Batched traffic uses ``knn_batch``: the (m, k) best-so-far state threads
+through buffer + runs newest-first exactly like the scalar bsf heap, with
+one shared verification pass per (run, batch) — see ``SortedRun.knn_batch``.
 """
 from __future__ import annotations
 
@@ -18,8 +22,16 @@ from typing import Optional
 
 import numpy as np
 
-from .ctree import QueryStats, RawStore, SortedRun, heap_to_sorted
+from .ctree import (
+    QueryStats,
+    RawStore,
+    SortedRun,
+    empty_topk_state,
+    heap_to_sorted,
+    merge_topk_state,
+)
 from .io_model import DiskModel
+from .lower_bounds import topk_ed2
 from .summarization import SummarizationConfig, paa, sax_from_paa
 
 
@@ -158,6 +170,22 @@ class CLSM:
                     heapq.heapreplace(bsf, item)
         return bsf
 
+    def _buffer_scan_batch(self, Q, k, state, window):
+        """Batched brute force over the in-memory write buffer."""
+        if self._buf_n == 0:
+            return state
+        series = np.concatenate(self._buf_series)
+        ids = np.concatenate(self._buf_ids)
+        ts = np.concatenate(self._buf_ts)
+        m = np.ones(series.shape[0], bool)
+        if window is not None:
+            m = (ts >= window[0]) & (ts <= window[1])
+        if not m.any():
+            return state
+        vals, sids = state
+        nv, ni = topk_ed2(Q, series[m], k)
+        return merge_topk_state(vals, sids, nv, ids[m][ni])
+
     def knn_exact(self, q, k=1, *, raw: Optional[RawStore] = None, window=None):
         bsf: list = []
         stats = QueryStats()
@@ -167,6 +195,26 @@ class CLSM:
                 q, k, raw=raw, disk=self.disk, bsf=bsf, window=window, stats=stats
             )
         return heap_to_sorted(bsf), stats
+
+    def knn_batch(self, Q, k=1, *, raw: Optional[RawStore] = None, window=None,
+                  backend="numpy", time_skip=True):
+        """Batched exact kNN across buffer + every live run.
+
+        The batched best-so-far state threads through the runs newest-first
+        (exactly like the bsf heap in ``knn_exact``), so distances verified
+        against recent runs prune blocks of the older, larger runs for the
+        whole batch at once. ``time_skip=False`` keeps entry-level window
+        filtering but probes every run (PP). Returns ((m, k) d2, (m, k)
+        ids, stats)."""
+        Q = np.asarray(Q, np.float32)
+        stats = QueryStats()
+        state = self._buffer_scan_batch(Q, k, empty_topk_state(Q.shape[0], k), window)
+        for run in self.runs_newest_first():
+            state, stats = run.knn_batch(
+                Q, k, raw=raw, disk=self.disk, window=window, state=state,
+                stats=stats, backend=backend, time_skip=time_skip,
+            )
+        return state[0], state[1], stats
 
     def knn_approx(self, q, k=1, *, n_blocks=1, raw=None, window=None):
         """Approximate search probes the adjacent blocks of every live run

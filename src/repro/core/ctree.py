@@ -16,6 +16,14 @@ Variants (paper §2):
 
 ``SortedRun`` is shared with CoconutLSM (a CLSM level run is the same
 structure plus a time range).
+
+Queries come in two shapes: the scalar per-query path (``knn_exact`` /
+``knn_approx``, best-first heap loops) and the batched top-k engine
+(``knn_batch``), which answers a whole (m, n) query batch with shared
+dense verification passes — the host twin of the ``topk_ed`` Pallas kernel
+(``backend="kernel"`` launches the kernel itself, one launch per (run,
+batch, pass)). Batched results are ((m, k) distances, (m, k) ids) arrays
+padded with (inf, -1).
 """
 from __future__ import annotations
 
@@ -27,7 +35,7 @@ import numpy as np
 
 from .external_sort import SortReport, external_sort_order
 from .io_model import DiskModel
-from .lower_bounds import ed2, mindist_paa_sax2, mindist_region2
+from .lower_bounds import ed2, mindist_paa_sax2, mindist_region2, topk_ed2
 from .sortable import interleave, searchsorted_keys
 from .summarization import SummarizationConfig, paa, sax_from_paa
 
@@ -222,6 +230,25 @@ class SortedRun:
             per += 8
         return per
 
+    def _fetch_entries(
+        self,
+        idx: np.ndarray,
+        raw: Optional[RawStore],
+        disk: Optional[DiskModel],
+        sequential: bool,
+    ) -> np.ndarray:
+        """Raw series for entries at positions ``idx`` (I/O accounted)."""
+        if self.materialized:
+            data = self.series[idx]
+            if disk is not None:
+                nbytes = idx.size * self.cfg.series_len * 4
+                (disk.read_seq if sequential else disk.read_rand)(nbytes)
+        else:
+            if raw is None:
+                raise ValueError("non-materialized run queried without a RawStore")
+            data = raw.fetch(self.ids[idx])
+        return data
+
     def _verify_entries(
         self,
         idx: np.ndarray,
@@ -233,15 +260,7 @@ class SortedRun:
         """True squared ED for entries at positions ``idx``."""
         if idx.size == 0:
             return np.zeros((0,), np.float32)
-        if self.materialized:
-            data = self.series[idx]
-            if disk is not None:
-                nbytes = idx.size * self.cfg.series_len * 4
-                (disk.read_seq if sequential else disk.read_rand)(nbytes)
-        else:
-            if raw is None:
-                raise ValueError("non-materialized run queried without a RawStore")
-            data = raw.fetch(self.ids[idx])
+        data = self._fetch_entries(idx, raw, disk, sequential)
         return ed2(q, data).astype(np.float32)
 
     def knn_exact(
@@ -306,6 +325,165 @@ class SortedRun:
                     heapq.heapreplace(bsf, item)
         return bsf, stats
 
+    def knn_batch(
+        self,
+        Q: np.ndarray,
+        k: int = 1,
+        *,
+        raw: Optional[RawStore] = None,
+        disk: Optional[DiskModel] = None,
+        window: Optional[tuple[int, int]] = None,
+        state: Optional[tuple[np.ndarray, np.ndarray]] = None,
+        stats: Optional[QueryStats] = None,
+        blocks_per_round: int = 32,
+        backend: str = "numpy",
+        time_skip: bool = True,
+    ) -> tuple[tuple[np.ndarray, np.ndarray], QueryStats]:
+        """Exact kNN for a whole query batch in one pass over this run.
+
+        The batched replacement for per-query ``knn_exact`` heap loops.
+        Block lower bounds are computed for the full (m, n_blocks) cross
+        product at once, then verification runs in shared passes over block
+        unions instead of per-(query, block) Python work:
+
+        1. a seed pass over each query's best-bounded block tightens every
+           radius cheaply;
+        2. bounded passes cover the union of blocks any query still needs —
+           each pass is ONE dense evaluation of the whole batch against the
+           pass's entries (``backend="kernel"``: a single ``topk_ed`` Pallas
+           launch per (run, batch, pass); ``backend="numpy"``: the host twin
+           — one shared f64 GEMM + per-query top-k).
+
+        Like the dense ED scan kernel, this trades per-entry early
+        abandoning (a disk/CPU scalar idiom) for large regular passes whose
+        extra (query, entry) pairs only ever tighten other queries' radii;
+        every entry of a pass is fetched and evaluated once for the whole
+        batch. Blocks no query needs are never touched.
+
+        ``state`` is the batched best-so-far — ((m, k) distances ascending,
+        (m, k) global ids, inf/-1 padded) — shared across runs the way the
+        ``bsf`` heap is in ``knn_exact``. Returns the updated state.
+        ``time_skip=False`` disables the run-level time-range skip while
+        keeping per-entry window filtering (the PP scheme's semantics).
+
+        Stats semantics under batching: ``blocks_visited``/``blocks_pruned``
+        count per-(query, block) logical work (comparable to summed
+        ``knn_exact`` stats); ``entries_verified`` counts physical fetches
+        (shared per batch); ``entries_pruned`` counts window filtering.
+        """
+        if backend not in ("numpy", "kernel"):
+            raise ValueError(f"unknown batch verify backend {backend!r}")
+        Q = np.asarray(Q, np.float32)
+        m = Q.shape[0]
+        stats = stats if stats is not None else QueryStats()
+        vals, ids = state if state is not None else empty_topk_state(m, k)
+        if self.n == 0 or m == 0:
+            return (vals, ids), stats
+        if time_skip and window is not None and self.ts is not None:
+            if self.t_max < window[0] or self.t_min > window[1]:
+                stats.blocks_pruned += self.n_blocks * m  # per-query semantics
+                return (vals, ids), stats
+        qp = np.asarray(paa(Q, self.cfg))  # (m, w)
+        blb = mindist_region2(
+            qp[:, None, :], self.bmin.astype(np.int64), self.bmax.astype(np.int64), self.cfg
+        )  # (m, nb)
+        nb, bs = self.n_blocks, self.block_size
+        done = np.zeros(nb, bool)  # verified blocks (against the whole batch)
+
+        def verify_blocks(blocks: np.ndarray) -> None:
+            """Verify ``blocks`` against every query in one shared pass."""
+            nonlocal vals, ids
+            done[blocks] = True
+            pos = (blocks[:, None] * bs + np.arange(bs)[None, :]).reshape(-1)
+            pos = pos[pos < self.n]
+            if disk is not None:
+                disk.read_rand(
+                    pos.size * (self.cfg.key_words * 4 + self.cfg.n_segments)
+                )
+            if window is not None and self.ts is not None:
+                in_win = (self.ts[pos] >= window[0]) & (self.ts[pos] <= window[1])
+                stats.entries_pruned += int((~in_win).sum())
+                pos = pos[in_win]
+            if pos.size == 0:
+                return
+            data_u = self._fetch_entries(
+                pos, raw, disk, sequential=self.materialized
+            )  # (U, n)
+            stats.entries_verified += int(pos.size)
+            if backend == "kernel":
+                # ONE all-pairs topk_ed Pallas launch per (run, batch, pass)
+                nv, ni = _kernel_topk_dists(Q, data_u, k)
+            else:
+                # host twin of the kernel: screen with one shared f32 sgemm,
+                # then exactly re-rank the provably sufficient tail. The
+                # screen's only error source is the f32 cross product, whose
+                # classical bound (2 n u |q||x|) widens the kth-best radius;
+                # everything inside the widened radius is recomputed in f64,
+                # so the result is exact while the sgemm does ~all the work.
+                u = data_u.shape[0]
+                kk = min(k, u)
+                x32 = np.ascontiguousarray(data_u, np.float32)
+                g = x32 @ Q.T  # (U, m) f32 sgemm — the shared heavy pass
+                xsq = np.einsum("un,un->u", x32, x32, dtype=np.float64)
+                qsq = np.einsum("mn,mn->m", Q, Q, dtype=np.float64)
+                d2a = qsq[:, None] + xsq[None, :] - 2.0 * g.T  # (m, U) f64-ish
+                if kk < u:
+                    part = np.argpartition(d2a, kk - 1, axis=1)[:, :kk]
+                else:
+                    part = np.broadcast_to(np.arange(kk), (m, kk)).copy()
+                kth = np.take_along_axis(d2a, part, axis=1).max(axis=1)  # (m,)
+                qn = np.sqrt(qsq)
+                xn_max = float(np.sqrt(xsq.max()))
+                bound = 4.0 * data_u.shape[1] * np.finfo(np.float32).eps * qn * xn_max
+                cand = d2a <= (kth + 2.0 * bound)[:, None]  # (m, U)
+                sel = np.nonzero(cand.any(axis=0))[0]  # (S,) small tail
+                x64 = data_u[sel].astype(np.float64)
+                d2e = (
+                    qsq[:, None]
+                    + np.einsum("sn,sn->s", x64, x64)[None, :]
+                    - 2.0 * (Q.astype(np.float64) @ x64.T)
+                )  # (m, S) exact
+                d2e = np.maximum(d2e, 0.0).astype(np.float32)
+                kks = min(kk, d2e.shape[1])
+                if kks < d2e.shape[1]:
+                    p2 = np.argpartition(d2e, kks - 1, axis=1)[:, :kks]
+                else:
+                    p2 = np.broadcast_to(np.arange(kks), (m, kks)).copy()
+                nv = np.take_along_axis(d2e, p2, axis=1)
+                o = np.argsort(nv, axis=1, kind="stable")
+                nv = np.take_along_axis(nv, o, axis=1)
+                ni = sel[np.take_along_axis(p2, o, axis=1)]
+            gids = np.where(ni >= 0, self.ids[pos][np.maximum(ni, 0)], -1)
+            vals, ids = merge_topk_state(vals, ids, nv, gids)
+
+        # pass 1 (seed): every query's single best-bounded block — tightens
+        # all radii with one small shared verification
+        seed = np.unique(np.argmin(blb, axis=1))
+        verify_blocks(seed)
+        # pass 2: the union of blocks any query still needs. Extra (query,
+        # block) pairs in the shared pass only tighten other queries' radii,
+        # so — like the dense ED scan kernel — batching trades per-entry
+        # early abandoning for one large regular pass. Blocks no query needs
+        # are pruned for the whole batch.
+        worst = vals[:, -1]  # (m,) kth-best after seeding
+        need = (blb < worst[:, None]) & ~done[None, :]  # (m, nb)
+        todo = np.nonzero(need.any(axis=0))[0]
+        # best-bounded blocks first, so earlier passes tighten later ones
+        todo = todo[np.argsort(blb[:, todo].min(axis=0), kind="stable")]
+        for start in range(0, todo.size, blocks_per_round):
+            # bounded passes: radii keep tightening between them
+            worst = vals[:, -1]
+            chunk = todo[start : start + blocks_per_round]
+            chunk = chunk[(blb[:, chunk] < worst[:, None]).any(axis=0)]
+            if chunk.size:
+                verify_blocks(chunk)
+        # per-query logical accounting, comparable to summed knn_exact stats
+        worst = vals[:, -1]
+        visited_q = (done[None, :] & (blb < worst[:, None])).sum(axis=1)
+        stats.blocks_visited += int(visited_q.sum())
+        stats.blocks_pruned += int((nb - visited_q).sum())
+        return (vals, ids), stats
+
     def knn_approx(
         self,
         q: np.ndarray,
@@ -351,6 +529,63 @@ class SortedRun:
 def heap_to_sorted(bsf: list) -> list[tuple[float, int]]:
     """Convert a (-d2, id) max-heap into [(d2, id)] ascending by distance."""
     return sorted(((-nd, i) for nd, i in bsf))
+
+
+# ---------------------------------------------------------------------------
+# batched top-k state: the array analogue of the per-query bsf heap
+# ---------------------------------------------------------------------------
+def empty_topk_state(m: int, k: int) -> tuple[np.ndarray, np.ndarray]:
+    """Fresh batched best-so-far: ((m, k) inf distances, (m, k) -1 ids)."""
+    return np.full((m, k), np.inf, np.float32), np.full((m, k), -1, np.int64)
+
+
+def merge_topk_state(
+    vals: np.ndarray, ids: np.ndarray, new_vals: np.ndarray, new_ids: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Row-wise merge of a (m, k) running top-k with (m, j) new candidates.
+
+    Stable sort keeps existing entries ahead on distance ties. Callers must
+    not feed an id twice (each index entry is verified at most once per
+    batch, so this holds by construction)."""
+    cv = np.concatenate([vals, new_vals.astype(vals.dtype)], axis=1)
+    ci = np.concatenate([ids, new_ids.astype(ids.dtype)], axis=1)
+    order = np.argsort(cv, axis=1, kind="stable")[:, : vals.shape[1]]
+    return np.take_along_axis(cv, order, axis=1), np.take_along_axis(ci, order, axis=1)
+
+
+def _kernel_topk_dists(
+    Q: np.ndarray, data: np.ndarray, k: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Top-k distances of Q (m, n) against data (E, n) via one ``topk_ed``
+    Pallas launch, with the candidate count padded up to a power of two so
+    jit sees a handful of stable shapes.
+
+    The kernel selects candidates at device (f32 matmul-form) precision
+    with a +8 slack, then the selected slate is re-ranked exactly in f64 —
+    so returned distances are exact and the best-so-far radius they feed is
+    never underestimated. Returns ((m, kk) d2 ascending, (m, kk) rows into
+    ``data``), kk = min(k, E), unfillable slots (inf, -1)."""
+    from ..kernels import ops as kernel_ops  # lazy: keeps the host engine jax-free
+
+    e = data.shape[0]
+    data = np.asarray(data, np.float32)
+    bucket = 1 << max(6, (e - 1).bit_length())
+    if bucket > e:
+        pad = np.full((bucket - e, data.shape[1]), 1e15, np.float32)
+        data = np.concatenate([data, pad])
+    ksel = min(k + 8, e)  # slack absorbs f32 near-tie reordering
+    v, i = kernel_ops.topk_ed(Q, data, ksel)
+    i = np.asarray(i).astype(np.int64)
+    invalid = i >= e  # shape-padding rows can only surface when E < ksel
+    # exact f64 re-rank of the selected slate
+    sel = np.where(invalid, 0, i)
+    diff = data[sel].astype(np.float64) - Q[:, None, :].astype(np.float64)
+    d2 = np.einsum("mkn,mkn->mk", diff, diff)
+    d2 = np.where(invalid, np.inf, d2.astype(np.float32))
+    i = np.where(invalid, -1, i)
+    kk = min(k, e)
+    o = np.argsort(d2, axis=1, kind="stable")[:, :kk]
+    return np.take_along_axis(d2, o, axis=1), np.take_along_axis(i, o, axis=1)
 
 
 @dataclasses.dataclass
@@ -472,12 +707,40 @@ class CTree:
                     heapq.heapreplace(bsf, item)
         return bsf
 
+    def _pending_scan_batch(self, Q, k, state, raw, window):
+        """Batched brute force over the (small) gap-absorbed set."""
+        vals, ids = state
+        for syms, pids, series, ts in self._pending:
+            m = np.ones(len(pids), bool)
+            if window is not None and ts is not None:
+                m = (ts >= window[0]) & (ts <= window[1])
+            if not m.any():
+                continue
+            data = series[m] if series is not None else raw.fetch(pids[m])
+            nv, ni = topk_ed2(Q, data, k)
+            vals, ids = merge_topk_state(vals, ids, nv, pids[m][ni])
+        return vals, ids
+
     def knn_exact(self, q, k=1, *, raw=None, window=None):
         if self.run is None:
             return [], QueryStats()
         bsf, stats = self.run.knn_exact(q, k, raw=raw, disk=self.disk, window=window)
         bsf = self._pending_scan(q, k, bsf, raw, window)
         return heap_to_sorted(bsf), stats
+
+    def knn_batch(self, Q, k=1, *, raw=None, window=None, backend="numpy"):
+        """Batched exact kNN: ((m, k) d2 ascending, (m, k) ids), stats.
+
+        Unfilled slots (fewer than k in-window entries) are (inf, -1)."""
+        Q = np.asarray(Q, np.float32)
+        if self.run is None:
+            vals, ids = empty_topk_state(Q.shape[0], k)
+            return vals, ids, QueryStats()
+        state, stats = self.run.knn_batch(
+            Q, k, raw=raw, disk=self.disk, window=window, backend=backend
+        )
+        vals, ids = self._pending_scan_batch(Q, k, state, raw, window)
+        return vals, ids, stats
 
     def knn_approx(self, q, k=1, *, n_blocks=1, raw=None, window=None):
         if self.run is None:

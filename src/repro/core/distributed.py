@@ -38,6 +38,7 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .summarization import SummarizationConfig, breakpoints
+from ..compat import axis_size as _compat_axis_size, shard_map
 from ..kernels import ref
 
 _SENTINEL = jnp.uint32(0xFFFFFFFF)
@@ -53,10 +54,10 @@ class DistBuildConfig:
 
 def _axis_size(axis_names) -> int:
     if isinstance(axis_names, str):
-        return lax.axis_size(axis_names)
+        return _compat_axis_size(axis_names)
     size = 1
     for a in axis_names:
-        size *= lax.axis_size(a)
+        size *= _compat_axis_size(a)
     return size
 
 
@@ -210,7 +211,7 @@ def make_build_fn(mesh, axes: Sequence[str], cfg: DistBuildConfig):
 
     @jax.jit
     def build(series, ids):
-        f = jax.shard_map(
+        f = shard_map(
             functools.partial(build_local, cfg=cfg, axis_names=tuple(axes)),
             mesh=mesh,
             in_specs=(spec_in, spec_in),
@@ -231,7 +232,7 @@ def make_query_fn(mesh, axes: Sequence[str], cfg: DistBuildConfig, *, k=10, veri
 
     @jax.jit
     def query(index, queries):
-        f = jax.shard_map(
+        f = shard_map(
             functools.partial(
                 query_local, cfg=cfg, axis_names=tuple(axes), k=k,
                 verify_budget=verify_budget,

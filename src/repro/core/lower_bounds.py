@@ -20,6 +20,33 @@ def ed2(q: np.ndarray, x: np.ndarray) -> np.ndarray:
     return np.sum(d * d, axis=-1)
 
 
+def topk_ed2(q: np.ndarray, x: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
+    """Batched k smallest squared EDs per query — the host twin of the
+    ``kernels.ops.topk_ed`` device path (same matmul form, float64
+    accumulation so it keeps the scalar ``ed2`` path's accuracy).
+
+    q: (m, n), x: (N, n) -> ((m, kk) f32 ascending, (m, kk) int64 candidate
+    rows) with kk = min(k, N)."""
+    q64 = np.asarray(q, np.float64)
+    x64 = np.asarray(x, np.float64)
+    d2 = (
+        np.sum(q64 * q64, axis=-1)[:, None]
+        + np.sum(x64 * x64, axis=-1)[None, :]
+        - 2.0 * q64 @ x64.T
+    )
+    d2 = np.maximum(d2, 0.0).astype(np.float32)  # (m, N)
+    kk = min(k, x64.shape[0])
+    part = np.argpartition(d2, kk - 1, axis=1)[:, :kk] if kk < d2.shape[1] else (
+        np.broadcast_to(np.arange(kk), (d2.shape[0], kk))
+    )
+    pv = np.take_along_axis(d2, part, axis=1)
+    o = np.argsort(pv, axis=1, kind="stable")
+    return (
+        np.take_along_axis(pv, o, axis=1),
+        np.take_along_axis(part, o, axis=1).astype(np.int64),
+    )
+
+
 def mindist_paa_sax2(q_paa: np.ndarray, sym: np.ndarray, cfg: SummarizationConfig) -> np.ndarray:
     """Squared MINDIST between a query's PAA and candidates' SAX regions.
 

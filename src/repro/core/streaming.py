@@ -18,6 +18,11 @@ stream. They differ in how the temporal dimension is physically organized:
   TP); large windows benefit from the strong spatial pruning of big sorted
   runs (like PP); the number of partitions any query touches is bounded by
   growth_factor * log(N).
+
+Concurrent query traffic goes through the batched engine: ``knn_batch`` /
+``window_knn_batch`` answer a whole (m, n) query batch with one shared
+verification pass per (run, batch) — see ``SortedRun.knn_batch`` — and
+return ((m, k) distances, (m, k) ids, stats) instead of per-query lists.
 """
 from __future__ import annotations
 
@@ -104,6 +109,22 @@ class StreamingIndex:
         if exact:
             return self.lsm.knn_exact(q, k, raw=self.raw, window=window)
         return self.lsm.knn_approx(q, k, raw=self.raw, window=window)
+
+    def window_knn_batch(self, Q, t0: int, t1: int, k: int = 1, *,
+                         backend: str = "numpy"):
+        """Batched exact window query: ((m, k) d2, (m, k) ids, stats).
+
+        One batched pass per live run (see ``CLSM.knn_batch``); under PP
+        run-level temporal skipping is disabled (``time_skip=False``) while
+        per-entry timestamp filtering stays on."""
+        window = (int(t0), int(t1))
+        return self.lsm.knn_batch(Q, k, raw=self.raw, window=window,
+                                  backend=backend,
+                                  time_skip=self._window_skip)
+
+    def knn_batch(self, Q, k: int = 1, *, backend: str = "numpy"):
+        """Batched whole-history exact query: ((m, k) d2, (m, k) ids, stats)."""
+        return self.lsm.knn_batch(Q, k, raw=self.raw, backend=backend)
 
     def knn(self, q, k: int = 1, exact: bool = True):
         """Whole-history query (no window)."""

@@ -1,4 +1,6 @@
 # Pallas TPU kernels for the Coconut hot paths (validated interpret=True on
 # CPU): PAA summarize, SAX quantize + bit-interleave (sortable keys), blocked
-# min-ED scan (MXU form), and the MINDIST lower-bound filter.
+# min-ED scan and its running top-k generalization topk_ed (MXU form, (bm, k)
+# VMEM accumulator — the device path of the batched knn_batch query engine),
+# and the MINDIST lower-bound filter.
 from . import ops, ref

@@ -1,14 +1,24 @@
-"""Pallas kernel: blocked min squared-Euclidean-distance scan (MXU form).
+"""Pallas kernels: blocked squared-Euclidean-distance scans (MXU form).
 
 The paper's "sequential scan of a contiguous leaf range" re-thought for the
 TPU: instead of early-abandoned scalar loops (a disk/CPU idiom), distances
 are computed in the matmul form  d2 = |q|^2 + |x|^2 - 2 q.x  on (bm x bn)
-tiles streaming through VMEM, with a fused running min/argmin so the full
+tiles streaming through VMEM, with a fused running reduction so the full
 (m x n) distance matrix is never materialized in HBM.
 
+Two reductions share the tile pipeline:
+
+* :func:`min_ed_pallas` — per-query running min/argmin (k = 1);
+* :func:`topk_ed_pallas` — per-query running top-k: a (bm, k) VMEM
+  accumulator of (distance, candidate index) pairs, sorted ascending, is
+  merged with each candidate tile by k rounds of min-extraction (pure VPU
+  min/where work — no generic sort, so the body also lowers on Mosaic).
+  Ties break toward the smaller candidate index, which makes the result
+  bit-identical to the lexicographic (d2, index) reference in ref.py.
+
 Grid: (m/bm, n/bn) with the candidate axis iterating fastest; the output
-tile (per-query running min + argmin) is revisited across the candidate
-axis — the canonical Pallas accumulation pattern. Block shapes keep the
+tile (the per-query accumulator) is revisited across the candidate axis —
+the canonical Pallas accumulation pattern. Block shapes keep the
 MXU-aligned contraction (d is zero-padded to a multiple of 128 by ops.py).
 """
 from __future__ import annotations
@@ -19,6 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+_INT_MAX = 2**31 - 1  # plain int: jnp scalars would be captured as consts
+
 
 def _ed_scan_body(q_ref, x_ref, min_ref, arg_ref, *, block_n: int, n_blocks: int):
     j = pl.program_id(1)
@@ -28,22 +40,112 @@ def _ed_scan_body(q_ref, x_ref, min_ref, arg_ref, *, block_n: int, n_blocks: int
         min_ref[...] = jnp.full_like(min_ref, jnp.inf)
         arg_ref[...] = jnp.zeros_like(arg_ref)
 
-    q = q_ref[...].astype(jnp.float32)  # (bm, d)
-    x = x_ref[...].astype(jnp.float32)  # (bn, d)
-    # MXU contraction + VPU rank-1 corrections
-    d2 = (
-        jnp.sum(q * q, axis=-1, keepdims=True)  # (bm, 1)
-        + jnp.sum(x * x, axis=-1)[None, :]  # (1, bn)
-        - 2.0 * jax.lax.dot_general(
-            q, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-        )
-    )  # (bm, bn)
+    d2 = _tile_d2(q_ref, x_ref)  # (bm, bn)
     blk_min = jnp.min(d2, axis=1)
     blk_arg = jnp.argmin(d2, axis=1).astype(jnp.int32) + j * block_n
     cur = min_ref[...]
     take = blk_min < cur
     min_ref[...] = jnp.where(take, blk_min, cur)
     arg_ref[...] = jnp.where(take, blk_arg, arg_ref[...])
+
+
+def _tile_d2(q_ref, x_ref) -> jnp.ndarray:
+    """Squared ED of one (bm, d) x (bn, d) tile: MXU contraction + VPU
+    rank-1 corrections."""
+    q = q_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    return (
+        jnp.sum(q * q, axis=-1, keepdims=True)  # (bm, 1)
+        + jnp.sum(x * x, axis=-1)[None, :]  # (1, bn)
+        - 2.0 * jax.lax.dot_general(
+            q, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+    )  # (bm, bn)
+
+
+def _topk_ed_body(q_ref, x_ref, vals_ref, idxs_ref, *, k: int, block_n: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        vals_ref[...] = jnp.full_like(vals_ref, jnp.inf)
+        idxs_ref[...] = jnp.full_like(idxs_ref, _INT_MAX)
+
+    d2 = _tile_d2(q_ref, x_ref)  # (bm, bn)
+    bm = d2.shape[0]
+    tile_idx = (
+        jax.lax.broadcasted_iota(jnp.int32, (bm, block_n), 1) + j * block_n
+    )
+
+    # merge the sorted accumulator with the fresh tile: k rounds of
+    # min-extraction over the (bm, k + bn) candidate pool. Candidate indices
+    # are globally unique within a launch, so masking by (value, index)
+    # removes exactly one real entry per round; empty slots (inf, INT_MAX)
+    # collapse together harmlessly.
+    cand_v = jnp.concatenate([vals_ref[...], d2], axis=1)
+    cand_i = jnp.concatenate([idxs_ref[...], tile_idx], axis=1)
+    slot = jax.lax.broadcasted_iota(jnp.int32, (bm, k), 1)  # (bm, k)
+
+    def extract(t, carry):
+        cv, ov, oi = carry
+        best_v = jnp.min(cv, axis=1)  # (bm,)
+        tie = cv == best_v[:, None]
+        best_i = jnp.min(jnp.where(tie, cand_i, _INT_MAX), axis=1)  # (bm,)
+        hit = tie & (cand_i == best_i[:, None])
+        cv = jnp.where(hit, jnp.inf, cv)
+        write = slot == t
+        ov = jnp.where(write, best_v[:, None], ov)
+        oi = jnp.where(write, best_i[:, None], oi)
+        return cv, ov, oi
+
+    _, out_v, out_i = jax.lax.fori_loop(
+        0, k, extract, (cand_v, vals_ref[...], idxs_ref[...])
+    )
+    vals_ref[...] = out_v
+    idxs_ref[...] = out_i
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "block_m", "block_n", "interpret")
+)
+def topk_ed_pallas(
+    q: jnp.ndarray,
+    x: jnp.ndarray,
+    k: int,
+    *,
+    block_m: int = 128,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-query k smallest squared EDs over candidates, fused into the scan.
+
+    q: (m, d), x: (n, d); m % block_m == 0, n % block_n == 0, 1 <= k <= n.
+    Returns (d2 (m, k) f32 ascending, candidate rows (m, k) int32), ties
+    broken toward the smaller candidate index. Slots beyond the number of
+    candidates come back as (inf, INT32_MAX) — ops.py maps them to (inf, -1).
+    """
+    m, d = q.shape
+    n, d2_ = x.shape
+    assert d == d2_ and m % block_m == 0 and n % block_n == 0, (q.shape, x.shape)
+    assert 1 <= k <= n, (k, n)
+    grid = (m // block_m, n // block_n)
+    return pl.pallas_call(
+        functools.partial(_topk_ed_body, k=k, block_n=block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.float32),
+            jax.ShapeDtypeStruct((m, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, x)
 
 
 @functools.partial(

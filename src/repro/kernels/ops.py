@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.summarization import SummarizationConfig, breakpoints
-from .ed_scan_kernel import min_ed_pallas
+from .ed_scan_kernel import min_ed_pallas, topk_ed_pallas
 from .lb_kernel import mindist_pallas
 from .paa_kernel import paa_pallas
 from .sax_pack_kernel import sax_pack_pallas
@@ -91,6 +91,50 @@ def min_ed(
     xp, _ = _pad_rows(x, block_n, fill=1e15)
     md, am = min_ed_pallas(qp, xp, block_m=block_m, block_n=block_n, interpret=INTERPRET)
     return md[:m], am[:m]
+
+
+def topk_ed(
+    q: jnp.ndarray,
+    x: jnp.ndarray,
+    k: int,
+    *,
+    block_m: int = 128,
+    block_n: int = 512,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-query k smallest squared EDs + candidate rows, ascending.
+
+    q: (m, d), x: (n, d) -> ((m, k) f32, (m, k) int32). Pads m/n/d to block
+    multiples (candidate pads get a +large sentinel fill) and always returns
+    k columns: when n < k the tail is (inf, -1). Ties break toward the
+    smaller candidate index (the kernel's lexicographic semantics)."""
+    q = jnp.asarray(q, jnp.float32)
+    x = jnp.asarray(x, jnp.float32)
+    m, d = q.shape
+    n = x.shape[0]
+    kk = max(1, min(k, n))
+    block_m = min(block_m, max(8, m))
+    block_n = min(block_n, max(8, n))
+    dp = (-d) % 128
+    if dp:  # zero-pad the contraction dim: adds 0 to every distance
+        q = jnp.concatenate([q, jnp.zeros((m, dp), q.dtype)], axis=1)
+        x = jnp.concatenate([x, jnp.zeros((n, dp), x.dtype)], axis=1)
+    qp, _ = _pad_rows(q, block_m)
+    # pad candidates with +large rows; they only surface when n < kk + pad,
+    # and are mapped to (inf, -1) below via their out-of-range index
+    xp, _ = _pad_rows(x, block_n, fill=1e15)
+    vals, idxs = topk_ed_pallas(
+        qp, xp, kk, block_m=block_m, block_n=block_n, interpret=INTERPRET
+    )
+    vals, idxs = vals[:m], idxs[:m]
+    invalid = idxs >= n  # row-pad candidates and never-filled (inf) slots
+    vals = jnp.where(invalid, jnp.inf, vals)
+    idxs = jnp.where(invalid, -1, idxs)
+    if kk < k:  # fewer candidates than requested neighbors
+        fill_v = jnp.full((m, k - kk), jnp.inf, vals.dtype)
+        fill_i = jnp.full((m, k - kk), -1, idxs.dtype)
+        vals = jnp.concatenate([vals, fill_v], axis=1)
+        idxs = jnp.concatenate([idxs, fill_i], axis=1)
+    return vals, idxs
 
 
 def mindist(

@@ -5,6 +5,7 @@ Each function is the semantic ground truth its kernel twin is tested against
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -51,6 +52,26 @@ def min_ed_ref(q: jnp.ndarray, x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray
         - 2.0 * q @ x.T
     )
     return jnp.min(d2, axis=1), jnp.argmin(d2, axis=1).astype(jnp.int32)
+
+
+def topk_ed_ref(q: jnp.ndarray, x: jnp.ndarray, k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-query k smallest squared EDs and candidate rows, ties broken
+    toward the smaller candidate index (lexicographic (d2, index) sort —
+    the exact semantics of the topk_ed Pallas kernel).
+
+    q: (m, d), x: (n, d), 1 <= k <= n -> ((m, k) f32 ascending, (m, k) int32)."""
+    q = q.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    d2 = (
+        jnp.sum(q * q, -1)[:, None]
+        + jnp.sum(x * x, -1)[None, :]
+        - 2.0 * q @ x.T
+    )  # (m, n)
+    idx = jnp.broadcast_to(
+        jnp.arange(x.shape[0], dtype=jnp.int32)[None, :], d2.shape
+    )
+    sv, si = jax.lax.sort((d2, idx), num_keys=2, dimension=1)
+    return sv[:, :k], si[:, :k]
 
 
 def mindist_ref(q_paa: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray, seg_len: int) -> jnp.ndarray:

@@ -11,19 +11,20 @@ touches jax device state.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from ..compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(n: int | None = None, name: str = "data"):
     """A 1-D mesh over whatever devices exist (tests / CPU smoke)."""
     n = n or jax.device_count()
-    return jax.make_mesh((n,), (name,), axis_types=(AxisType.Auto,))
+    return make_mesh((n,), (name,))
 
 
 def dp_axes(multi_pod: bool) -> tuple:

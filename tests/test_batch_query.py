@@ -1,0 +1,192 @@
+"""Batched top-k query engine: knn_batch through SortedRun / CTree / CLSM /
+StreamingIndex must agree with brute force and with the per-query scalar
+path, across materialization variants, windows, and both verify backends."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    CLSM,
+    CLSMConfig,
+    CTree,
+    CTreeConfig,
+    RawStore,
+    StreamConfig,
+    StreamingIndex,
+    SummarizationConfig,
+    ed2,
+    topk_ed2,
+)
+
+CFG = SummarizationConfig(series_len=64, n_segments=8, card_bits=6)
+
+
+def _data(n=3000, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, 64)).astype(np.float32).cumsum(axis=1)
+
+
+def _queries(m=12, seed=99):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((m, 64)).astype(np.float32).cumsum(axis=1)
+
+
+def _assert_batch_exact(vals, gids, Q, X, k):
+    for i, q in enumerate(Q):
+        bf = np.sort(ed2(q, X))[: k]
+        np.testing.assert_allclose(vals[i], bf, rtol=1e-4)
+        np.testing.assert_allclose(np.sort(ed2(q, X[gids[i]])), bf, rtol=1e-4)
+
+
+def test_topk_ed2_host_twin(rng):
+    q = rng.standard_normal((6, 64)).astype(np.float32)
+    x = rng.standard_normal((300, 64)).astype(np.float32)
+    v, i = topk_ed2(q, x, 5)
+    full = ed2(q[:, None, :], x[None, :, :])
+    np.testing.assert_allclose(v, np.sort(full, axis=1)[:, :5], rtol=1e-6)
+    np.testing.assert_allclose(
+        np.take_along_axis(full, i, axis=1), v, rtol=1e-6
+    )
+
+
+@pytest.mark.parametrize("materialized", [False, True])
+@pytest.mark.parametrize("k", [1, 7])
+def test_ctree_knn_batch_exact(materialized, k):
+    X, Q = _data(), _queries()
+    raw = RawStore(64)
+    ids = raw.append(X)
+    ct = CTree(
+        CTreeConfig(summarization=CFG, block_size=256, materialized=materialized)
+    )
+    ct.bulk_build(X, ids)
+    vals, gids, stats = ct.knn_batch(Q, k=k, raw=raw)
+    _assert_batch_exact(vals, gids, Q, X, k)
+    assert stats.blocks_visited > 0
+
+
+def test_ctree_knn_batch_matches_scalar_path():
+    X, Q = _data(), _queries(5)
+    raw = RawStore(64)
+    ids = raw.append(X)
+    ct = CTree(CTreeConfig(summarization=CFG, block_size=256, materialized=True))
+    ct.bulk_build(X, ids)
+    vals, gids, _ = ct.knn_batch(Q, k=6, raw=raw)
+    for i, q in enumerate(Q):
+        res, _ = ct.knn_exact(q, k=6, raw=raw)
+        np.testing.assert_allclose([d for d, _ in res], vals[i], rtol=1e-6)
+
+
+def test_ctree_knn_batch_kernel_backend_parity():
+    X, Q = _data(1500), _queries(6)
+    raw = RawStore(64)
+    ids = raw.append(X)
+    ct = CTree(CTreeConfig(summarization=CFG, block_size=256, materialized=True))
+    ct.bulk_build(X, ids)
+    v_np, g_np, _ = ct.knn_batch(Q, k=5, raw=raw, backend="numpy")
+    v_kr, g_kr, _ = ct.knn_batch(Q, k=5, raw=raw, backend="kernel")
+    # both backends re-rank their slates in f64, so results are identical
+    np.testing.assert_allclose(v_np, v_kr, rtol=1e-6)
+    np.testing.assert_array_equal(g_np, g_kr)
+
+
+def test_knn_batch_rejects_unknown_backend():
+    X = _data(300)
+    raw = RawStore(64)
+    ids = raw.append(X)
+    ct = CTree(CTreeConfig(summarization=CFG, block_size=128, materialized=True))
+    ct.bulk_build(X, ids)
+    with pytest.raises(ValueError, match="backend"):
+        ct.knn_batch(_queries(2), k=3, raw=raw, backend="cuda")
+
+
+def test_knn_batch_empty_query_batch():
+    X = _data(300)
+    raw = RawStore(64)
+    ids = raw.append(X)
+    ct = CTree(CTreeConfig(summarization=CFG, block_size=128, materialized=True))
+    ct.bulk_build(X, ids)
+    vals, gids, _ = ct.knn_batch(np.zeros((0, 64), np.float32), k=3, raw=raw)
+    assert vals.shape == (0, 3) and gids.shape == (0, 3)
+
+
+def test_ctree_knn_batch_sees_gap_inserts():
+    X = _data(2000)
+    extra = _data(60, seed=7)
+    raw = RawStore(64)
+    ids = raw.append(X)
+    ct = CTree(
+        CTreeConfig(summarization=CFG, block_size=128, fill_factor=0.75,
+                    materialized=True)
+    )
+    ct.bulk_build(X, ids)
+    ct.insert(extra, raw.append(extra))
+    Q = _queries(4)
+    vals, gids, _ = ct.knn_batch(Q, k=3, raw=raw)
+    _assert_batch_exact(vals, gids, Q, np.concatenate([X, extra]), 3)
+
+
+def test_clsm_knn_batch_exact_including_buffer():
+    X = _data(3900)
+    lsm = CLSM(CLSMConfig(summarization=CFG, buffer_entries=512, growth_factor=3,
+                          block_size=128, materialized=True))
+    raw = RawStore(64)
+    for i in range(0, 3900, 300):  # leaves a non-empty in-memory buffer
+        chunk = X[i : i + 300]
+        lsm.insert(chunk, raw.append(chunk), np.full(len(chunk), i, np.int64))
+    assert lsm._buf_n > 0
+    Q = _queries(8)
+    vals, gids, _ = lsm.knn_batch(Q, k=5, raw=raw)
+    _assert_batch_exact(vals, gids, Q, X, 5)
+
+
+@pytest.mark.parametrize("scheme", ["PP", "TP", "BTP"])
+@pytest.mark.parametrize("window", [(3, 9), (0, 19), (15, 19), (7, 7)])
+def test_streaming_window_knn_batch_exact(scheme, window):
+    rng = np.random.default_rng(1)
+    idx = StreamingIndex(StreamConfig(scheme=scheme, summarization=CFG,
+                                      buffer_entries=1024, growth_factor=3,
+                                      block_size=128))
+    xs, ts = [], []
+    for b in range(20):
+        x = rng.standard_normal((200, 64)).astype(np.float32).cumsum(axis=1)
+        t = np.full(200, b, np.int64)
+        idx.ingest(x, t)
+        xs.append(x)
+        ts.append(t)
+    X, T = np.concatenate(xs), np.concatenate(ts)
+    Q = _queries(6)
+    t0, t1 = window
+    vals, gids, _ = idx.window_knn_batch(Q, t0, t1, k=4)
+    mask = (T >= t0) & (T <= t1)
+    for i, q in enumerate(Q):
+        bf = np.sort(ed2(q, X[mask]))[:4]
+        np.testing.assert_allclose(vals[i], bf, rtol=1e-4)
+    # agrees with the per-query scalar window path
+    res, _ = idx.window_knn(Q[0], t0, t1, k=4)
+    np.testing.assert_allclose([d for d, _ in res], vals[0], rtol=1e-6)
+
+
+def test_streaming_whole_history_batch():
+    rng = np.random.default_rng(2)
+    idx = StreamingIndex(StreamConfig(scheme="BTP", summarization=CFG,
+                                      buffer_entries=512, growth_factor=3,
+                                      block_size=128))
+    xs = []
+    for b in range(10):
+        x = rng.standard_normal((150, 64)).astype(np.float32).cumsum(axis=1)
+        idx.ingest(x, np.full(150, b, np.int64))
+        xs.append(x)
+    X = np.concatenate(xs)
+    Q = _queries(5)
+    vals, gids, _ = idx.knn_batch(Q, k=3)
+    _assert_batch_exact(vals, gids, Q, X, 3)
+
+
+def test_knn_batch_k_exceeds_n_pads_with_inf():
+    X = _data(5)
+    raw = RawStore(64)
+    ids = raw.append(X)
+    ct = CTree(CTreeConfig(summarization=CFG, block_size=256, materialized=True))
+    ct.bulk_build(X, ids)
+    vals, gids, _ = ct.knn_batch(_queries(3), k=8, raw=raw)
+    assert np.isfinite(vals[:, :5]).all()
+    assert (vals[:, 5:] == np.inf).all() and (gids[:, 5:] == -1).all()

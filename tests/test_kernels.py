@@ -47,6 +47,41 @@ def test_min_ed_kernel(m, n, d, dtype, rng):
     np.testing.assert_allclose(d2, np.asarray(rd), rtol=2e-4, atol=1e-3)
 
 
+@pytest.mark.parametrize("k", [1, 5, 10])
+@pytest.mark.parametrize("m,n,d", [(8, 512, 128), (7, 333, 64), (64, 1024, 128),
+                                   (1, 100, 96), (3, 29, 160)])
+def test_topk_ed_kernel_matches_ref_exactly(m, n, d, k, rng):
+    """The running (bm, k) accumulator must reproduce the lexicographic
+    (d2, index) reference bit-for-bit, including on odd shapes that exercise
+    the ops.py padding (sentinel candidate rows, zero-padded contraction)."""
+    q = rng.standard_normal((m, d)).astype(np.float32)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    v, i = ops.topk_ed(q, x, k, block_m=8, block_n=64)
+    kk = min(k, n)
+    rv, ri = ref.topk_ed_ref(jnp.asarray(q), jnp.asarray(x), kk)
+    np.testing.assert_array_equal(np.asarray(i)[:, :kk], np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(v)[:, :kk], np.asarray(rv))
+    # requested-but-unfillable slots are explicit (inf, -1) padding
+    assert np.all(np.asarray(v)[:, kk:] == np.inf)
+    assert np.all(np.asarray(i)[:, kk:] == -1)
+
+
+def test_topk_ed_k1_agrees_with_min_ed(rng):
+    q = rng.standard_normal((16, 64)).astype(np.float32)
+    x = rng.standard_normal((256, 64)).astype(np.float32)
+    v1, i1 = ops.topk_ed(q, x, 1, block_m=8, block_n=64)
+    md, am = ops.min_ed(q, x, block_m=8, block_n=64)
+    np.testing.assert_allclose(np.asarray(v1)[:, 0], np.asarray(md), rtol=2e-4, atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(i1)[:, 0], np.asarray(am))
+
+
+def test_topk_ed_ties_break_to_smaller_index(rng):
+    q = rng.standard_normal((4, 64)).astype(np.float32)
+    x = np.tile(rng.standard_normal((32, 64)).astype(np.float32), (2, 1))  # dup rows
+    _, i = ops.topk_ed(q, x, 3, block_m=8, block_n=32)
+    assert np.all(np.asarray(i)[:, 0] < 32)  # duplicate at j and j+32: j wins
+
+
 @pytest.mark.parametrize("b,w", [(512, 16), (100, 8), (2048, 16)])
 def test_mindist_kernel(b, w, rng):
     cfg = SummarizationConfig(series_len=w * 8, n_segments=w, card_bits=8)

@@ -1,22 +1,28 @@
+"""Lower-bound invariants (MINDIST <= ED, zone-map <= entry bound).
+
+Property tests run under hypothesis when it is installed; a deterministic
+seed sweep over the same bodies keeps tier-1 coverage when it is not.
+"""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
 from repro.core import SummarizationConfig, ed2, mindist_paa_sax2, mindist_region2, sax
 from repro.core.summarization import paa
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dependency; deterministic sweeps below cover tier-1
+    given = None
 
-@given(
-    st.sampled_from([
-        SummarizationConfig(64, 8, 4),
-        SummarizationConfig(64, 8, 8),
-        SummarizationConfig(128, 16, 8),
-        SummarizationConfig(64, 16, 3),
-    ]),
-    st.integers(0, 2**31 - 1),
-    st.floats(0.1, 20.0),
-)
-@settings(max_examples=40, deadline=None)
-def test_mindist_lower_bounds_ed(cfg, seed, scale):
+CFGS = [
+    SummarizationConfig(64, 8, 4),
+    SummarizationConfig(64, 8, 8),
+    SummarizationConfig(128, 16, 8),
+    SummarizationConfig(64, 16, 3),
+]
+
+
+def _check_mindist_lower_bounds_ed(cfg, seed, scale):
     """THE correctness invariant of exact search: MINDIST_PAA_SAX <= ED."""
     rng = np.random.default_rng(seed)
     x = (rng.standard_normal((64, cfg.series_len)) * scale).astype(np.float32)
@@ -28,9 +34,7 @@ def test_mindist_lower_bounds_ed(cfg, seed, scale):
     assert (lb2 <= d2 * (1 + 1e-4) + 1e-3).all()
 
 
-@given(st.integers(0, 2**31 - 1))
-@settings(max_examples=20, deadline=None)
-def test_region_bound_lower_bounds_entry_bound(seed):
+def _check_region_bound_lower_bounds_entry_bound(seed):
     """Zone-map (block) MINDIST <= every member entry's MINDIST."""
     cfg = SummarizationConfig(64, 8, 8)
     rng = np.random.default_rng(seed)
@@ -41,6 +45,30 @@ def test_region_bound_lower_bounds_entry_bound(seed):
     blk_lb = mindist_region2(qp, sym.min(axis=0), sym.max(axis=0), cfg)
     entry_lb = mindist_paa_sax2(qp, sym, cfg)
     assert (blk_lb <= entry_lb + 1e-3).all()
+
+
+@pytest.mark.parametrize("cfg", CFGS, ids=lambda c: f"n{c.series_len}w{c.n_segments}c{c.card_bits}")
+@pytest.mark.parametrize("seed,scale", [(0, 1.0), (1, 0.1), (77, 5.0), (2**31 - 1, 20.0)])
+def test_mindist_lower_bounds_ed(cfg, seed, scale):
+    _check_mindist_lower_bounds_ed(cfg, seed, scale)
+
+
+@pytest.mark.parametrize("seed", [0, 3, 1234, 2**31 - 1])
+def test_region_bound_lower_bounds_entry_bound(seed):
+    _check_region_bound_lower_bounds_entry_bound(seed)
+
+
+if given is not None:
+
+    @given(st.sampled_from(CFGS), st.integers(0, 2**31 - 1), st.floats(0.1, 20.0))
+    @settings(max_examples=40, deadline=None)
+    def test_mindist_lower_bounds_ed_hypothesis(cfg, seed, scale):
+        _check_mindist_lower_bounds_ed(cfg, seed, scale)
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_region_bound_lower_bounds_entry_bound_hypothesis(seed):
+        _check_region_bound_lower_bounds_entry_bound(seed)
 
 
 def test_mindist_zero_for_own_region(rng):
