@@ -18,8 +18,9 @@ N, LEN = 40_000, 128
 CFG = SummarizationConfig(series_len=LEN, n_segments=16, card_bits=8)
 
 
-def main():
-    X = random_walk(N, LEN, seed=0)
+def main(smoke: bool = False):
+    n = 2_000 if smoke else N
+    X = random_walk(n, LEN, seed=0)
 
     def build_ctree(materialized):
         disk = DiskModel()
@@ -27,7 +28,7 @@ def main():
         ids = raw.append(X)
         ct = CTree(CTreeConfig(summarization=CFG, block_size=1024,
                                materialized=materialized,
-                               mem_budget_entries=N // 4), disk)
+                               mem_budget_entries=n // 4), disk)
         ct.bulk_build(X, ids)
         return disk
 
@@ -36,7 +37,7 @@ def main():
         raw = RawStore(LEN, disk)
         lsm = CLSM(CLSMConfig(summarization=CFG, buffer_entries=4096,
                               growth_factor=4, block_size=512), disk)
-        for i in range(0, N, 4096):
+        for i in range(0, n, 4096):
             c = X[i : i + 4096]
             lsm.insert(c, raw.append(c), np.full(len(c), i, np.int64))
         return disk

@@ -16,30 +16,31 @@ from .common import row, timeit
 CFG = SummarizationConfig(series_len=256, n_segments=16, card_bits=8)
 
 
-def main():
+def main(smoke: bool = False):
+    b, m = (256, 4) if smoke else (4096, 16)
     rng = np.random.default_rng(0)
-    x = rng.standard_normal((4096, 256)).astype(np.float32)
-    q = rng.standard_normal((16, 256)).astype(np.float32)
+    x = rng.standard_normal((b, 256)).astype(np.float32)
+    q = rng.standard_normal((m, 256)).astype(np.float32)
 
     p = ops.paa(x, CFG)
     jax.block_until_ready(p)
     us = timeit(lambda: jax.block_until_ready(ops.paa(x, CFG)), repeat=3)
-    row("kernels/paa_interp_4096x256", us, f"bytes={x.nbytes};mode=interpret")
-    us = timeit(lambda: x.reshape(4096, 16, 16).mean(-1), repeat=3)
+    row(f"kernels/paa_interp_{b}x256", us, f"bytes={x.nbytes};mode=interpret")
+    us = timeit(lambda: x.reshape(b, 16, 16).mean(-1), repeat=3)
     row("kernels/paa_numpy_host", us, "reference")
 
     sk = ops.sax_and_keys(p, CFG)
     jax.block_until_ready(sk)
     us = timeit(lambda: jax.block_until_ready(ops.sax_and_keys(p, CFG)), repeat=3)
-    row("kernels/sax_pack_interp_4096", us, "mode=interpret")
+    row(f"kernels/sax_pack_interp_{b}", us, "mode=interpret")
     us = timeit(lambda: sax(x, CFG), repeat=3)
     row("kernels/sax_numpy_host", us, "reference")
 
     me = ops.min_ed(q, x)
     jax.block_until_ready(me)
     us = timeit(lambda: jax.block_until_ready(ops.min_ed(q, x)), repeat=3)
-    flops = 2 * 16 * 4096 * 256
-    row("kernels/min_ed_interp_16x4096", us,
+    flops = 2 * m * b * 256
+    row(f"kernels/min_ed_interp_{m}x{b}", us,
         f"flops={flops};tpu_ideal_us={flops / 197e6:.2f};mode=interpret")
     us = timeit(lambda: np.min(ed2(q[:, None, :], x[None]), axis=1), repeat=3)
     row("kernels/min_ed_numpy_host", us, "reference")

@@ -12,10 +12,11 @@ N, LEN = 40_000, 128
 CFG = SummarizationConfig(series_len=LEN, n_segments=16, card_bits=8)
 
 
-def main():
-    X = random_walk(N, LEN, seed=0)
-    for frac in (1.0, 0.25, 0.05, 0.01):
-        budget = max(64, int(N * frac))
+def main(smoke: bool = False):
+    n = 2_000 if smoke else N
+    X = random_walk(n, LEN, seed=0)
+    for frac in (1.0, 0.05) if smoke else (1.0, 0.25, 0.05, 0.01):
+        budget = max(64, int(n * frac))
 
         def build():
             disk = DiskModel()

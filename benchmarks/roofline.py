@@ -15,7 +15,7 @@ def load_cells(pattern="*.json"):
     return cells
 
 
-def main():
+def main(smoke: bool = False):
     cells = load_cells()
     if not cells:
         print("roofline/no_dryrun_results,0.0,run repro.launch.dryrun first")

@@ -1,20 +1,57 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+#
+# ``--smoke`` runs every driver at tiny sizes (<60 s total) and asserts the
+# output schema, so CI exercises the benchmark code paths instead of leaving
+# them hand-run only (a ``slow``-marked pytest invokes this mode).
+import argparse
+import contextlib
+import io
+import re
 import sys
 import traceback
 
+ROW_RE = re.compile(r"^[^,\s][^,]*,\d+(\.\d+)?,[^,]*(;[^,]*)*$")
 
-def main() -> None:
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes + output-schema assertions")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module names (e.g. query,streaming)")
+    args = ap.parse_args(argv)
+
     from . import construction, kernels_bench, memory, query, roofline, streaming
 
+    mods = [construction, query, streaming, memory, kernels_bench, roofline]
+    if args.only:
+        wanted = set(args.only.split(","))
+        mods = [m for m in mods if m.__name__.split(".")[-1] in wanted]
+
+    failures = 0
     print("name,us_per_call,derived")
-    for mod in (construction, query, streaming, memory, kernels_bench, roofline):
+    for mod in mods:
+        name = mod.__name__.split(".")[-1]
         try:
-            mod.main()
+            if args.smoke:
+                buf = io.StringIO()
+                with contextlib.redirect_stdout(buf):
+                    mod.main(smoke=True)
+                out = buf.getvalue()
+                for line in filter(None, out.splitlines()):
+                    if not ROW_RE.match(line):
+                        raise AssertionError(
+                            f"{name}: row violates name,us,derived schema: {line!r}"
+                        )
+                sys.stdout.write(out)
+            else:
+                mod.main()
         except Exception:  # noqa: BLE001 — keep the harness running
-            name = mod.__name__.split(".")[-1]
-            print(f"{name}/ERROR,0.0,", file=sys.stdout)
+            failures += 1
+            print(f"{name}/ERROR,0.0,")
             traceback.print_exc()
+    return 1 if (args.smoke and failures) else 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -2,10 +2,13 @@
 PP / TP / BTP. Reports ingest throughput, window-query latency for small /
 medium / large windows, partition counts, and blocks visited — plus the
 batched engine (``window_knn_batch``) against the per-query loop at several
-concurrent-query batch sizes (the serving-traffic scenario)."""
+concurrent-query batch sizes (the serving-traffic scenario), and the batched
+approximate tier (``window_knn_approx_batch``) as batch x n_blocks sweeps
+with recall@5 against the exact oracle."""
 import numpy as np
 
-from repro.core import StreamConfig, StreamingIndex, SummarizationConfig
+from repro.core import (StreamConfig, StreamingIndex, SummarizationConfig,
+                        recall_at_k)
 from repro.data.synthetic import seismic
 
 from .common import row, timeit
@@ -15,41 +18,70 @@ CFG = SummarizationConfig(series_len=LEN, n_segments=16, card_bits=8)
 N_BATCH, BSZ = 50, 600
 
 
-def main():
+def main(smoke: bool = False):
+    n_batch, bsz = (8, 200) if smoke else (N_BATCH, BSZ)
+    buffer_entries = 512 if smoke else 4096  # smoke still flushes partitions
+    qb_sizes = (4,) if smoke else (8, 64)
     streams = {
-        b: seismic(BSZ, LEN, seed=b) for b in range(N_BATCH)
+        b: seismic(bsz, LEN, seed=b) for b in range(n_batch)
     }
     q = seismic(1, LEN, seed=999)[0]
+    windows = {"small": (n_batch - 3, n_batch - 1),
+               "mid": (int(n_batch * 0.7), n_batch - 1),
+               "large": (0, n_batch - 1)}
 
     for scheme in ("PP", "TP", "BTP"):
         def build():
             idx = StreamingIndex(StreamConfig(scheme=scheme, summarization=CFG,
-                                              buffer_entries=4096, growth_factor=4,
-                                              block_size=512))
-            for b in range(N_BATCH):
-                idx.ingest(streams[b], np.full(BSZ, b, np.int64))
+                                              buffer_entries=buffer_entries,
+                                              growth_factor=4, block_size=512))
+            for b in range(n_batch):
+                idx.ingest(streams[b], np.full(bsz, b, np.int64))
             return idx
 
         us = timeit(build, repeat=1)
         idx = build()
-        row(f"streaming/{scheme}_ingest", us / (N_BATCH * BSZ),
+        row(f"streaming/{scheme}_ingest", us / (n_batch * bsz),
             f"partitions={idx.n_partitions};"
             f"io_s={idx.raw.disk.modeled_seconds():.3f}")
-        for wname, (t0, t1) in {"small": (47, 49), "mid": (35, 49),
-                                "large": (0, 49)}.items():
+        for wname, (t0, t1) in windows.items():
             us = timeit(lambda: idx.window_knn(q, t0, t1, k=5), repeat=2)
             _, st = idx.window_knn(q, t0, t1, k=5)
             row(f"streaming/{scheme}_window_{wname}", us,
                 f"blocks_visited={st.blocks_visited};blocks_pruned={st.blocks_pruned}")
 
         # batched concurrent window queries vs the per-query loop
-        QB = seismic(64, LEN, seed=1234)
-        t0, t1 = 35, 49
-        for bsz in (8, 64):
-            Qb = QB[:bsz]
+        QB = seismic(max(qb_sizes), LEN, seed=1234)
+        t0, t1 = windows["mid"]
+        for m in qb_sizes:
+            Qb = QB[:m]
             us_b = timeit(lambda: idx.window_knn_batch(Qb, t0, t1, k=5), repeat=2)
             us_l = timeit(
                 lambda: [idx.window_knn(q2, t0, t1, k=5) for q2 in Qb], repeat=2
             )
-            row(f"streaming/{scheme}_window_mid_batch_b{bsz}", us_b / bsz,
+            row(f"streaming/{scheme}_window_mid_batch_b{m}", us_b / m,
                 f"speedup_vs_loop={us_l / max(us_b, 1e-9):.2f}")
+
+        # batched approximate tier: batch x n_blocks with recall@5 vs exact
+        _, exact_ids, _ = idx.window_knn_batch(QB, t0, t1, k=5)
+        for m in qb_sizes:
+            Qb = QB[:m]
+            for nb in (1, 2):
+                us_b = timeit(
+                    lambda: idx.window_knn_approx_batch(Qb, t0, t1, k=5,
+                                                        n_blocks=nb),
+                    repeat=2,
+                )
+                us_l = timeit(
+                    lambda: [idx.window_knn(q2, t0, t1, k=5, exact=False,
+                                            n_blocks=nb) for q2 in Qb],
+                    repeat=2,
+                )
+                _, approx_ids, _ = idx.window_knn_approx_batch(
+                    Qb, t0, t1, k=5, n_blocks=nb
+                )
+                rec = recall_at_k(approx_ids, exact_ids[:m])
+                row(f"streaming/{scheme}_window_mid_approx_batch_b{m}_nb{nb}",
+                    us_b / m,
+                    f"speedup_vs_loop={us_l / max(us_b, 1e-9):.2f};"
+                    f"recall_at5={rec:.3f}")

@@ -2,13 +2,16 @@
 # The paper's primary contribution lives here; `distributed` maps it onto a
 # TPU pod mesh (sample-sort build, broadcast-prune-reduce queries).
 from .summarization import SummarizationConfig, breakpoints, paa, sax, sax_from_paa
-from .sortable import interleave, deinterleave, sort_by_keys
+from .sortable import (
+    interleave, deinterleave, sort_by_keys, searchsorted_keys,
+    searchsorted_keys_batch,
+)
 from .lower_bounds import ed2, mindist_paa_sax2, mindist_region2, topk_ed2
-from .io_model import DiskModel, IOStats, render_heatmap
+from .io_model import DiskModel, IOStats, coalesce_ranges, render_heatmap
 from .external_sort import external_sort_order
 from .ctree import (
     CTree, CTreeConfig, RawStore, SortedRun, QueryStats, heap_to_sorted,
-    empty_topk_state, merge_topk_state,
+    empty_topk_state, merge_topk_state, recall_at_k,
 )
 from .clsm import CLSM, CLSMConfig
 from .streaming import StreamConfig, StreamingIndex
@@ -17,11 +20,13 @@ from .recommender import Scenario, Recommendation, recommend
 
 __all__ = [
     "SummarizationConfig", "breakpoints", "paa", "sax", "sax_from_paa",
-    "interleave", "deinterleave", "sort_by_keys",
+    "interleave", "deinterleave", "sort_by_keys", "searchsorted_keys",
+    "searchsorted_keys_batch",
     "ed2", "mindist_paa_sax2", "mindist_region2", "topk_ed2",
-    "DiskModel", "IOStats", "render_heatmap", "external_sort_order",
+    "DiskModel", "IOStats", "coalesce_ranges", "render_heatmap",
+    "external_sort_order",
     "CTree", "CTreeConfig", "RawStore", "SortedRun", "QueryStats", "heap_to_sorted",
-    "empty_topk_state", "merge_topk_state",
+    "empty_topk_state", "merge_topk_state", "recall_at_k",
     "CLSM", "CLSMConfig", "StreamConfig", "StreamingIndex",
     "ADSConfig", "ADSIndex", "Scenario", "Recommendation", "recommend",
 ]

@@ -23,9 +23,15 @@ from typing import Optional
 
 import numpy as np
 
-from .ctree import QueryStats, RawStore, heap_to_sorted
+from .ctree import (
+    QueryStats,
+    RawStore,
+    empty_topk_state,
+    heap_to_sorted,
+    merge_topk_state,
+)
 from .io_model import DiskModel
-from .lower_bounds import ed2, mindist_paa_sax2, mindist_region2
+from .lower_bounds import ed2, mindist_paa_sax2, mindist_region2, topk_ed2
 from .summarization import SummarizationConfig, paa, sax_from_paa
 
 
@@ -266,6 +272,71 @@ class ADSIndex:
             return [], stats
         bsf = self._leaf_verify(node, q, qp, k, bsf, raw, window, stats, lambda: np.inf)
         return heap_to_sorted(bsf), stats
+
+    def knn_approx_batch(self, Q, k=1, *, raw: Optional[RawStore] = None,
+                         window=None):
+        """Batched approximate kNN: descend every query to its leaf, then
+        verify each DISTINCT leaf once against its whole query group.
+
+        Per-query answers match a loop of ``knn_approx``; physically the
+        batch deduplicates leaf verifications — queries landing in the same
+        leaf (the common case for clustered workloads) share one leaf read
+        and one batched top-k pass. Results are a subset of the exact
+        answer (only the single mapped leaf is verified), so recall@k
+        depends on how much of the true neighborhood the leaf captures.
+        Returns ((m, k) d2 ascending, (m, k) ids, stats); unfilled slots
+        are (inf, -1). Stats follow the batched convention: logical
+        per-query ``blocks_visited``, physical shared ``entries_verified``.
+        """
+        scfg = self.cfg.summarization
+        Q = np.asarray(Q, np.float32)
+        m = Q.shape[0]
+        vals, ids = empty_topk_state(m, k)
+        stats = QueryStats()
+        if m == 0 or self.n == 0:
+            return vals, ids, stats
+        qsym = sax_from_paa(np.asarray(paa(Q, scfg)), scfg).astype(np.int16)
+        groups: dict[int, list[int]] = {}
+        leaves: dict[int, _Node] = {}
+        node_touches = 0
+        for i in range(m):
+            key = tuple((qsym[i] >> (self._c - 1)).tolist())
+            node = self.root_children.get(key)
+            while node is not None and not node.is_leaf:
+                node_touches += 1
+                depth = int(node.card[node.split_seg]) + 1
+                b = int((qsym[i, node.split_seg] >> (self._c - depth)) & 1)
+                node = node.children[b]
+            if node is None or node.n == 0:
+                continue
+            leaves[id(node)] = node
+            groups.setdefault(id(node), []).append(i)
+        if node_touches:
+            self.disk.read_rand(node_touches * self.disk.page_bytes)
+        for nid, qlist in groups.items():
+            node = leaves[nid]
+            qidx = np.asarray(qlist)
+            stats.blocks_visited += qidx.size  # per-query logical accounting
+            self.disk.read_rand(max(1, node.n) * (self._w + 8))  # one shared leaf read
+            mask = np.ones(node.n, bool)
+            if window is not None:
+                mask &= (node.ts >= window[0]) & (node.ts <= window[1])
+            stats.entries_pruned += int((~mask).sum())
+            cand = np.nonzero(mask)[0]
+            if cand.size == 0:
+                continue
+            if node.series is not None:
+                data = node.series[cand]
+                self.disk.read_rand(data.nbytes)
+            else:
+                if raw is None:
+                    raise ValueError("adaptive ADS+ requires a RawStore")
+                data = raw.fetch(node.ids[cand])
+            stats.entries_verified += cand.size
+            nv, ni = topk_ed2(Q[qidx], data, k)
+            mv, mi = merge_topk_state(vals[qidx], ids[qidx], nv, node.ids[cand][ni])
+            vals[qidx], ids[qidx] = mv, mi
+        return vals, ids, stats
 
     def index_bytes(self) -> int:
         total = 0

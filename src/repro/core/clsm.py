@@ -241,6 +241,34 @@ class CLSM:
                     heapq.heapreplace(bsf, item)
         return heap_to_sorted(bsf), stats
 
+    def knn_approx_batch(self, Q, k=1, *, n_blocks=1, raw=None, window=None,
+                         backend="numpy", time_skip=True):
+        """Batched approximate kNN across buffer + every live run.
+
+        The (m, k) best-so-far state folds over the runs newest-first via
+        ``merge_topk_state`` — the batched analogue of the per-run heap
+        merge in ``knn_approx``. Each run contributes one vectorized key
+        seek plus one coalesced sequential block read for the whole batch
+        (BTP bounds the run count, so the I/O stays bounded). Results are a
+        subset of the exact answer: every query sees only its ``n_blocks``
+        adjacent blocks per run, so ``n_blocks`` trades sequential bytes
+        for recall@k. ``time_skip=False`` probes every run while keeping
+        entry-level window filtering (PP semantics). Returns ((m, k) d2,
+        (m, k) ids, stats)."""
+        Q = np.asarray(Q, np.float32)
+        stats = QueryStats()
+        state = self._buffer_scan_batch(Q, k, empty_topk_state(Q.shape[0], k), window)
+        for run in self.runs_newest_first():
+            if time_skip and window is not None and run.ts is not None and (
+                run.t_max < window[0] or run.t_min > window[1]
+            ):
+                continue
+            state, stats = run.knn_approx_batch(
+                Q, k, n_blocks=n_blocks, raw=raw, disk=self.disk, window=window,
+                state=state, stats=stats, backend=backend,
+            )
+        return state[0], state[1], stats
+
     @property
     def n_runs(self) -> int:
         return sum(len(v) for v in self.levels.values())

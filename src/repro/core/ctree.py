@@ -34,9 +34,9 @@ from typing import Optional
 import numpy as np
 
 from .external_sort import SortReport, external_sort_order
-from .io_model import DiskModel
+from .io_model import DiskModel, coalesce_ranges
 from .lower_bounds import ed2, mindist_paa_sax2, mindist_region2, topk_ed2
-from .sortable import interleave, searchsorted_keys
+from .sortable import interleave, searchsorted_keys, searchsorted_keys_batch
 from .summarization import SummarizationConfig, paa, sax_from_paa
 
 
@@ -64,6 +64,7 @@ class RawStore:
         self.disk = disk or DiskModel()
         self._chunks: list[np.ndarray] = []
         self._data: Optional[np.ndarray] = None
+        self._norms2: Optional[np.ndarray] = None
         self.n = 0
 
     def append(self, series: np.ndarray) -> np.ndarray:
@@ -102,6 +103,18 @@ class RawStore:
         self.disk.read_seq(data.nbytes)
         return data
 
+    def norms2(self, ids: np.ndarray) -> np.ndarray:
+        """Cached squared norms by id (derived data, no modeled I/O): the
+        batched verify screens only need |x|^2, not another pass over x.
+        The store is append-only, so the cache extends incrementally — a
+        growing stream never pays a full-store recompute per query batch."""
+        if self._norms2 is None or self._norms2.shape[0] < self.n:
+            a = self._all()
+            done = 0 if self._norms2 is None else self._norms2.shape[0]
+            new = np.einsum("ij,ij->i", a[done:], a[done:])
+            self._norms2 = new if done == 0 else np.concatenate([self._norms2, new])
+        return self._norms2[ids]
+
 
 @dataclasses.dataclass
 class SortedRun:
@@ -118,6 +131,7 @@ class SortedRun:
     ts: Optional[np.ndarray] = None  # (N,) int64 timestamps
     t_min: int = 0
     t_max: int = 0
+    _norms2: Optional[np.ndarray] = None  # lazy |x|^2 cache (materialized runs)
 
     @property
     def n(self) -> int:
@@ -220,6 +234,14 @@ class SortedRun:
             bmin[b] = blk.min(axis=0)
             bmax[b] = blk.max(axis=0)
         self.bmin, self.bmax = bmin, bmax
+
+    def entry_norms2(self) -> np.ndarray:
+        """Cached (N,) squared norms of the materialized entries (runs are
+        immutable after build, so this never invalidates)."""
+        assert self.series is not None
+        if self._norms2 is None:
+            self._norms2 = np.einsum("ij,ij->i", self.series, self.series)
+        return self._norms2
 
     # ------------------------------------------------------------------ query
     def _entry_bytes(self) -> int:
@@ -504,7 +526,9 @@ class SortedRun:
         qkey = interleave(qsym, self.cfg).reshape(-1)
         pos = searchsorted_keys(self.keys, qkey)
         bs = self.block_size
-        bc = pos // bs
+        # clamp: a key above every stored key (pos == n) still probes the
+        # tail block instead of an empty range
+        bc = min(pos, self.n - 1) // bs
         b0 = max(0, bc - (n_blocks - 1) // 2)
         b1 = min(self.n_blocks, b0 + n_blocks)
         lo, hi = b0 * bs, min(self.n, b1 * bs)
@@ -524,6 +548,160 @@ class SortedRun:
             elif item[0] > bsf[0][0]:
                 heapq.heapreplace(bsf, item)
         return bsf, stats
+
+    def _query_keys_batch(self, Q: np.ndarray, backend: str) -> np.ndarray:
+        """Sortable keys for a query batch: (m, n) series -> (m, nw) uint32.
+
+        ``backend="kernel"`` produces PAA, symbols and interleaved keys in
+        one fused device pass (``kernels.ops.summarize`` — a single Pallas
+        launch per pipeline stage); ``"numpy"`` is the host twin."""
+        if backend == "kernel":
+            from ..kernels import ops as kernel_ops  # lazy: host engine stays jax-free
+
+            _, _, keys = kernel_ops.summarize(Q, self.cfg)
+            return np.asarray(keys).reshape(-1, self.cfg.key_words)
+        qp = paa(Q, self.cfg)
+        qsym = sax_from_paa(qp, self.cfg).astype(np.int32)
+        return interleave(qsym, self.cfg).reshape(-1, self.cfg.key_words)
+
+    def knn_approx_batch(
+        self,
+        Q: np.ndarray,
+        k: int = 1,
+        *,
+        n_blocks: int = 1,
+        raw: Optional[RawStore] = None,
+        disk: Optional[DiskModel] = None,
+        window: Optional[tuple[int, int]] = None,
+        state: Optional[tuple[np.ndarray, np.ndarray]] = None,
+        stats: Optional[QueryStats] = None,
+        backend: str = "numpy",
+    ) -> tuple[tuple[np.ndarray, np.ndarray], QueryStats]:
+        """Approximate kNN for a whole query batch — the batched form of
+        ``knn_approx`` (same per-query answers, shared physical work).
+
+        Each query is answered from the ``n_blocks`` blocks adjacent to its
+        sortable-key position, exactly as in the scalar path, but the whole
+        batch shares one pipeline: query keys are produced in one batched
+        summarization pass (``backend="kernel"``: one Pallas launch chain
+        via ``kernels.ops.summarize``), all m key seeks run as ONE
+        vectorized lexicographic binary search (``searchsorted_keys_batch``
+        — O(log N) fancy-indexed probes for the batch), and the per-query
+        block ranges are coalesced into deduplicated sequential reads before
+        verification, so overlapping queries touch each block once and the
+        DiskModel sees few long sequential reads instead of m seeks.
+
+        Recall semantics: results are a subset of the exact answer — only
+        candidates inside a query's adjacent blocks are considered, so
+        recall@k grows with ``n_blocks`` (more sequential bytes per query)
+        and equals the per-query ``knn_approx`` at the same ``n_blocks`` by
+        construction. ``state``/``stats`` thread across runs exactly like
+        ``knn_batch`` (CLSM folds one state over all levels).
+
+        Stats semantics mirror ``knn_batch``: ``blocks_visited`` counts
+        per-(query, block) logical work, ``entries_verified`` physical
+        fetches (shared per batch), ``entries_pruned`` window filtering.
+        """
+        if backend not in ("numpy", "kernel"):
+            raise ValueError(f"unknown batch verify backend {backend!r}")
+        Q = np.asarray(Q, np.float32)
+        m = Q.shape[0]
+        stats = stats if stats is not None else QueryStats()
+        if state is not None:  # copy: group merges below write rows in place
+            vals, ids = state[0].copy(), state[1].copy()
+        else:
+            vals, ids = empty_topk_state(m, k)
+        if self.n == 0 or m == 0:
+            return (vals, ids), stats
+        qkeys = self._query_keys_batch(Q, backend)
+        pos = searchsorted_keys_batch(self.keys, qkeys)  # (m,) one batched seek
+        bs = self.block_size
+        # clamp: keys above every stored key still probe the tail block
+        bc = np.minimum(pos, self.n - 1) // bs
+        b0 = np.maximum(0, bc - (n_blocks - 1) // 2)
+        b1 = np.minimum(self.n_blocks, b0 + n_blocks)
+        lo = b0 * bs
+        hi = np.minimum(self.n, b1 * bs)
+        stats.blocks_visited += int(np.maximum(0, b1 - b0).sum())
+        # coalesce the per-query [lo, hi) entry ranges: overlapping queries
+        # collapse into few long sequential index reads
+        ranges = coalesce_ranges(zip(lo.tolist(), hi.tolist()))
+        if disk is not None:
+            disk.read_seq_ranges(ranges, unit_bytes=self._entry_bytes())
+        if not ranges:
+            return (vals, ids), stats
+        upos = np.concatenate([np.arange(r0, r1) for r0, r1 in ranges])
+        if window is not None and self.ts is not None:
+            in_win = (self.ts[upos] >= window[0]) & (self.ts[upos] <= window[1])
+            stats.entries_pruned += int((~in_win).sum())
+            upos = upos[in_win]
+        if upos.size == 0:
+            return (vals, ids), stats
+        stats.entries_verified += int(upos.size)
+        if self.materialized and upos.size == sum(r1 - r0 for r0, r1 in ranges):
+            # contiguous materialized ranges: slice views per group below —
+            # no 10s-of-MB union gather; only the I/O accounting happens here
+            data_u = None
+            gid_u = None
+            if disk is not None:
+                disk.read_seq_ranges(ranges, unit_bytes=self.cfg.series_len * 4)
+        else:
+            data_u = self._fetch_entries(upos, raw, disk, sequential=True)  # (U, n)
+            gid_u = self.ids[upos]
+        # one shared top-k pass per DISTINCT block range: queries that seek
+        # into the same neighborhood share a pass (one topk_ed Pallas launch
+        # under backend="kernel", one f64 matmul-form GEMM under "numpy"),
+        # and disjoint ranges never multiply each other's distance work —
+        # total compute equals the per-query loop's, batched into GEMMs
+        spans, inv = np.unique(np.stack([lo, hi], axis=1), axis=0,
+                               return_inverse=True)
+        if backend != "kernel":
+            # cached squared norms (nothing union-sized is recomputed or
+            # cast to f64 — the slate re-rank below is tiny)
+            if self.materialized:
+                all_n2 = self.entry_norms2()
+                xsq = None if data_u is None else all_n2[upos]
+            else:
+                xsq = raw.norms2(self.ids[upos])
+            q64 = Q.astype(np.float64)
+        for g, (glo, ghi) in enumerate(spans):
+            qidx = np.nonzero(inv == g)[0]
+            j0, j1 = np.searchsorted(upos, (glo, ghi))
+            if j0 == j1:
+                continue
+            if data_u is None:  # contiguous materialized range: a view
+                sub = self.series[glo:ghi]
+                gid = self.ids[glo:ghi]
+            else:
+                sub = data_u[j0:j1]
+                gid = gid_u[j0:j1]
+            if backend == "kernel":
+                nv, ni = _kernel_topk_dists(Q[qidx], sub, k)
+                gi = np.where(ni >= 0, gid[np.maximum(ni, 0)], -1)
+            else:
+                # f32 sgemm screen with a +8 slack, then exact f64 re-rank
+                # of the selected slate — the host twin of the kernel path.
+                # |q|^2 is constant per row so the screen ranks by
+                # |x|^2 - 2<q, x> only; the re-rank restores true distances.
+                xsq_g = all_n2[glo:ghi] if xsq is None else xsq[j0:j1]
+                d2a = Q[qidx] @ sub.T  # (|g|, U) f32 sgemm — the heavy pass
+                np.multiply(d2a, -2.0, out=d2a)
+                np.add(d2a, xsq_g[None, :], out=d2a)
+                u = sub.shape[0]
+                ksel = min(k + 8, u)  # slack absorbs f32 near-tie reordering
+                if ksel < u:
+                    part = np.argpartition(d2a, ksel - 1, axis=1)[:, :ksel]
+                else:
+                    part = np.broadcast_to(np.arange(u), (len(qidx), u)).copy()
+                diff = sub[part].astype(np.float64) - q64[qidx][:, None, :]
+                d2e = np.einsum("mkn,mkn->mk", diff, diff).astype(np.float32)
+                kk = min(k, u)
+                o = np.argsort(d2e, axis=1, kind="stable")[:, :kk]
+                nv = np.take_along_axis(d2e, o, axis=1)
+                gi = gid[np.take_along_axis(part, o, axis=1)]
+            mv, mi = merge_topk_state(vals[qidx], ids[qidx], nv, gi)
+            vals[qidx], ids[qidx] = mv, mi
+        return (vals, ids), stats
 
 
 def heap_to_sorted(bsf: list) -> list[tuple[float, int]]:
@@ -551,6 +729,17 @@ def merge_topk_state(
     ci = np.concatenate([ids, new_ids.astype(ids.dtype)], axis=1)
     order = np.argsort(cv, axis=1, kind="stable")[:, : vals.shape[1]]
     return np.take_along_axis(cv, order, axis=1), np.take_along_axis(ci, order, axis=1)
+
+
+def recall_at_k(approx_ids: np.ndarray, exact_ids: np.ndarray) -> float:
+    """Micro-averaged recall of a batched approximate answer against the
+    exact oracle: |approx ∩ exact| / |exact| over all queries, ignoring
+    (-1) pad slots. Both args are (m, k) id arrays."""
+    hits = sum(
+        len(set(map(int, a[a >= 0])) & set(map(int, e[e >= 0])))
+        for a, e in zip(approx_ids, exact_ids)
+    )
+    return hits / max(1, sum(int((e >= 0).sum()) for e in exact_ids))
 
 
 def _kernel_topk_dists(
@@ -748,6 +937,28 @@ class CTree:
         bsf, stats = self.run.knn_approx(q, k, n_blocks=n_blocks, raw=raw, disk=self.disk, window=window)
         bsf = self._pending_scan(q, k, bsf, raw, window)
         return heap_to_sorted(bsf), stats
+
+    def knn_approx_batch(self, Q, k=1, *, n_blocks=1, raw=None, window=None,
+                         backend="numpy"):
+        """Batched approximate kNN: ((m, k) d2 ascending, (m, k) ids), stats.
+
+        Per-query answers match a loop of ``knn_approx`` at the same
+        ``n_blocks``; physically the batch shares one key-summarization
+        pass, one vectorized key seek and coalesced sequential block reads
+        (see ``SortedRun.knn_approx_batch``). Results are a subset of the
+        exact ``knn_batch`` answer — only each query's ``n_blocks`` adjacent
+        blocks are verified, so ``n_blocks`` trades sequential bytes read
+        for recall@k. Unfilled slots are (inf, -1)."""
+        Q = np.asarray(Q, np.float32)
+        if self.run is None:
+            vals, ids = empty_topk_state(Q.shape[0], k)
+            return vals, ids, QueryStats()
+        state, stats = self.run.knn_approx_batch(
+            Q, k, n_blocks=n_blocks, raw=raw, disk=self.disk, window=window,
+            backend=backend,
+        )
+        vals, ids = self._pending_scan_batch(Q, k, state, raw, window)
+        return vals, ids, stats
 
     def index_bytes(self) -> int:
         return 0 if self.run is None else self.run.index_bytes()

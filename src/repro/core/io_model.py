@@ -85,6 +85,16 @@ class DiskModel:
         if self.keep_log and nbytes:
             self.log.append((offset // self.page_bytes, pages, "wr"))
 
+    def read_seq_ranges(self, ranges, unit_bytes: int = 1) -> None:
+        """One sequential read per [lo, hi) range (in ``unit_bytes`` units).
+        ``ranges`` must already be disjoint and ascending — the output of
+        :func:`coalesce_ranges`. The batched approximate tier funnels every
+        query's block range through here so overlapping seeks collapse into
+        few long sequential reads — the accounting form of the paper's
+        one-seek-plus-one-sequential-read claim."""
+        for lo, hi in ranges:
+            self.read_seq((hi - lo) * unit_bytes, offset=lo * unit_bytes)
+
     def modeled_seconds(self) -> float:
         """Estimated wall time of the recorded I/O pattern on the modeled device."""
         s = self.stats
@@ -105,6 +115,23 @@ class DiskModel:
             for b in range(b0, b1 + 1):
                 bins[b] += 1
         return bins
+
+
+def coalesce_ranges(ranges) -> List[Tuple[int, int]]:
+    """Merge half-open [lo, hi) ranges into sorted disjoint ranges.
+
+    Overlapping and back-to-back ranges fuse, empty ranges drop out. Used to
+    deduplicate the per-query block reads of a batched approximate query
+    into the minimal set of sequential reads."""
+    spans = sorted((int(lo), int(hi)) for lo, hi in ranges if hi > lo)
+    out: List[Tuple[int, int]] = []
+    for lo, hi in spans:
+        if out and lo <= out[-1][1]:
+            if hi > out[-1][1]:
+                out[-1] = (out[-1][0], hi)
+        else:
+            out.append((lo, hi))
+    return out
 
 
 def render_heatmap(bins: List[int], width: int = 64) -> str:

@@ -75,7 +75,8 @@ class StreamingIndex:
         return ids
 
     # ---------------------------------------------------------------- query
-    def window_knn(self, q, t0: int, t1: int, k: int = 1, exact: bool = True):
+    def window_knn(self, q, t0: int, t1: int, k: int = 1, exact: bool = True,
+                   n_blocks: int = 1):
         window = (int(t0), int(t1))
         if not self._window_skip:
             # PP: disable run-level temporal skipping but keep entry filtering
@@ -95,7 +96,8 @@ class StreamingIndex:
                         import heapq
 
                         part, st = run.knn_approx(
-                            q, k, raw=self.raw, disk=self.lsm.disk, window=window
+                            q, k, n_blocks=n_blocks, raw=self.raw,
+                            disk=self.lsm.disk, window=window,
                         )
                         stats = stats.merge(st)
                         for item in part:
@@ -108,7 +110,8 @@ class StreamingIndex:
             return heap_to_sorted(bsf), stats
         if exact:
             return self.lsm.knn_exact(q, k, raw=self.raw, window=window)
-        return self.lsm.knn_approx(q, k, raw=self.raw, window=window)
+        return self.lsm.knn_approx(q, k, n_blocks=n_blocks, raw=self.raw,
+                                   window=window)
 
     def window_knn_batch(self, Q, t0: int, t1: int, k: int = 1, *,
                          backend: str = "numpy"):
@@ -126,11 +129,33 @@ class StreamingIndex:
         """Batched whole-history exact query: ((m, k) d2, (m, k) ids, stats)."""
         return self.lsm.knn_batch(Q, k, raw=self.raw, backend=backend)
 
-    def knn(self, q, k: int = 1, exact: bool = True):
+    def window_knn_approx_batch(self, Q, t0: int, t1: int, k: int = 1, *,
+                                n_blocks: int = 1, backend: str = "numpy"):
+        """Batched approximate window query — the approximate serving tier.
+
+        Every run the window admits contributes one vectorized key seek and
+        one coalesced sequential block read for the whole batch (see
+        ``CLSM.knn_approx_batch``). Results are a subset of the exact
+        ``window_knn_batch`` answer; ``n_blocks`` trades sequential bytes
+        per (query, run) for recall@k. Under PP, run-level temporal
+        skipping is disabled while per-entry filtering stays on. Returns
+        ((m, k) d2, (m, k) ids, stats)."""
+        window = (int(t0), int(t1))
+        return self.lsm.knn_approx_batch(Q, k, n_blocks=n_blocks, raw=self.raw,
+                                         window=window, backend=backend,
+                                         time_skip=self._window_skip)
+
+    def knn_approx_batch(self, Q, k: int = 1, *, n_blocks: int = 1,
+                         backend: str = "numpy"):
+        """Batched whole-history approximate query: ((m, k) d2, ids, stats)."""
+        return self.lsm.knn_approx_batch(Q, k, n_blocks=n_blocks, raw=self.raw,
+                                         backend=backend)
+
+    def knn(self, q, k: int = 1, exact: bool = True, n_blocks: int = 1):
         """Whole-history query (no window)."""
         if exact:
             return self.lsm.knn_exact(q, k, raw=self.raw)
-        return self.lsm.knn_approx(q, k, raw=self.raw)
+        return self.lsm.knn_approx(q, k, n_blocks=n_blocks, raw=self.raw)
 
     # ---------------------------------------------------------------- stats
     @property

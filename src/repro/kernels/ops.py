@@ -36,6 +36,8 @@ def _pad_rows(x: jnp.ndarray, mult: int, fill=0.0) -> tuple[jnp.ndarray, int]:
 def paa(x: jnp.ndarray, cfg: SummarizationConfig, *, block_b: int = 256) -> jnp.ndarray:
     """(B, n) -> (B, w) PAA summaries via the Pallas kernel."""
     x = jnp.asarray(x, jnp.float32)
+    if x.shape[0] == 0:  # empty batch: no kernel launch, no row padding
+        return jnp.zeros((0, cfg.n_segments), jnp.float32)
     block_b = min(block_b, max(8, x.shape[0]))
     xp, b = _pad_rows(x, block_b)
     out = paa_pallas(xp, cfg.n_segments, block_b=block_b, interpret=INTERPRET)
@@ -47,6 +49,11 @@ def sax_and_keys(
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """PAA (B, w) -> (symbols (B, w) int32, sortable keys (B, nw) uint32)."""
     p = jnp.asarray(p, jnp.float32)
+    if p.shape[0] == 0:  # empty batch: no kernel launch, no row padding
+        return (
+            jnp.zeros((0, cfg.n_segments), jnp.int32),
+            jnp.zeros((0, cfg.key_words), jnp.uint32),
+        )
     block_b = min(block_b, max(8, p.shape[0]))
     pp, b = _pad_rows(p, block_b)
     bps = jnp.asarray(breakpoints(cfg.card_bits))
@@ -80,6 +87,10 @@ def min_ed(
     x = jnp.asarray(x, jnp.float32)
     m, d = q.shape
     n = x.shape[0]
+    if m == 0:  # empty query batch
+        return jnp.zeros((0,), jnp.float32), jnp.zeros((0,), jnp.int32)
+    if n == 0:  # no candidates: nothing to win the min
+        return jnp.full((m,), jnp.inf, jnp.float32), jnp.full((m,), -1, jnp.int32)
     block_m = min(block_m, max(8, m))
     block_n = min(block_n, max(8, n))
     dp = (-d) % 128
@@ -111,6 +122,13 @@ def topk_ed(
     x = jnp.asarray(x, jnp.float32)
     m, d = q.shape
     n = x.shape[0]
+    if m == 0:  # empty query batch
+        return jnp.zeros((0, k), jnp.float32), jnp.zeros((0, k), jnp.int32)
+    if n == 0:  # no candidates: every requested slot is explicit padding
+        return (
+            jnp.full((m, k), jnp.inf, jnp.float32),
+            jnp.full((m, k), -1, jnp.int32),
+        )
     kk = max(1, min(k, n))
     block_m = min(block_m, max(8, m))
     block_n = min(block_n, max(8, n))
@@ -149,6 +167,8 @@ def mindist(
     lo = jnp.asarray(lo, jnp.float32)
     hi = jnp.asarray(hi, jnp.float32)
     b = lo.shape[0]
+    if b == 0:  # empty batch: no kernel launch, no row padding
+        return jnp.zeros((0,), jnp.float32)
     block_b = min(block_b, max(8, b))
     lop, _ = _pad_rows(lo, block_b, fill=0.0)
     hip, _ = _pad_rows(hi, block_b, fill=0.0)

@@ -16,35 +16,69 @@ import time
 import numpy as np
 
 from ..core import (
-    DiskModel, StreamConfig, StreamingIndex, SummarizationConfig, render_heatmap,
+    DiskModel, StreamConfig, StreamingIndex, SummarizationConfig, recall_at_k,
+    render_heatmap,
 )
 from ..data.synthetic import seismic
 
 
 def serve_coconut(args):
+    """Serve batched kNN traffic over a live stream.
+
+    ``--tier exact`` answers through the batched exact engine
+    (``window_knn_batch``); ``--tier approx`` through the batched
+    approximate tier (``window_knn_approx_batch``): one vectorized key seek
+    plus coalesced sequential block reads per (run, batch). ``--n-blocks``
+    is the approximate tier's recall knob — more adjacent blocks read
+    sequentially per query raise recall@k toward exact at sequential-I/O
+    prices. Approximate recall@k vs the exact oracle is measured on every
+    served batch."""
+    tier = "approx" if args.approx else args.tier
     scfg = SummarizationConfig(series_len=args.series_len, n_segments=16,
                                card_bits=8)
     idx = StreamingIndex(StreamConfig(scheme=args.scheme, summarization=scfg,
                                       buffer_entries=4096, growth_factor=4,
                                       block_size=512))
     idx.raw.disk.keep_log = True
-    lat = []
+    lat, recalls = [], []
     for b in range(args.batches):
         x = seismic(args.batch_size, args.series_len, seed=b)
         idx.ingest(x, np.full(args.batch_size, b, np.int64))
         if (b + 1) % 5 == 0:  # serve a query batch every 5 ingest batches
             qs = seismic(args.query_batch, args.series_len, seed=10_000 + b)
+            t0b, t1b = max(0, b - args.window), b
             t0 = time.time()
-            for q in qs:
-                idx.window_knn(q, max(0, b - args.window), b, k=args.k,
-                               exact=not args.approx)
+            if tier == "approx":
+                _, got_ids, _ = idx.window_knn_approx_batch(
+                    qs, t0b, t1b, k=args.k, n_blocks=args.n_blocks)
+            else:
+                _, got_ids, _ = idx.window_knn_batch(qs, t0b, t1b, k=args.k)
             dt = (time.time() - t0) / args.query_batch
             lat.append(dt)
-            print(f"[serve] batch {b+1}: {args.query_batch} queries, "
-                  f"{dt*1e3:.2f} ms/query, partitions={idx.n_partitions}", flush=True)
+            line = (f"[serve] batch {b+1}: {args.query_batch} queries "
+                    f"({tier}), {dt*1e3:.2f} ms/query, "
+                    f"partitions={idx.n_partitions}")
+            if tier == "approx":
+                # score recall without letting the oracle's reads pollute the
+                # approx tier's modeled-I/O figures and access heat map
+                import dataclasses
+
+                d = idx.raw.disk
+                saved_stats = dataclasses.replace(d.stats)
+                saved_log = len(d.log)
+                _, exact_ids, _ = idx.window_knn_batch(qs, t0b, t1b, k=args.k)
+                d.stats = saved_stats
+                del d.log[saved_log:]
+                recalls.append(recall_at_k(got_ids, exact_ids))
+                line += f", recall@{args.k}={recalls[-1]:.3f}"
+            print(line, flush=True)
     lat = np.array(lat) * 1e3
     print(f"[serve] latency ms p50={np.percentile(lat,50):.2f} "
           f"p95={np.percentile(lat,95):.2f} max={lat.max():.2f}")
+    if recalls:
+        print(f"[serve] approx tier n_blocks={args.n_blocks}: "
+              f"mean recall@{args.k}={np.mean(recalls):.3f} "
+              f"min={np.min(recalls):.3f}")
     print(f"[serve] ingested {args.batches*args.batch_size} series, "
           f"{idx.n_partitions} partitions, "
           f"index={idx.index_bytes()>>20} MiB, modeled io={idx.raw.disk.modeled_seconds():.2f}s")
@@ -88,7 +122,14 @@ def main():
     ap.add_argument("--query-batch", type=int, default=16)
     ap.add_argument("--window", type=int, default=5)
     ap.add_argument("--k", type=int, default=5)
-    ap.add_argument("--approx", action="store_true")
+    ap.add_argument("--tier", default="exact", choices=["exact", "approx"],
+                    help="serving tier: exact engine or the approximate "
+                         "(key-seek + sequential-block-read) tier")
+    ap.add_argument("--n-blocks", type=int, default=2,
+                    help="approx tier: adjacent blocks read per (query, run) "
+                         "— the recall vs I/O knob")
+    ap.add_argument("--approx", action="store_true",
+                    help="deprecated alias for --tier approx")
     ap.add_argument("--arch", default="smollm-360m")
     ap.add_argument("--decode-tokens", type=int, default=32)
     args = ap.parse_args()

@@ -1,0 +1,400 @@
+"""The batched approximate serving tier.
+
+Three layers of guarantees:
+
+1. sortable-key invariants: the vectorized ``searchsorted_keys_batch`` agrees
+   with the scalar oracle on random AND adversarial key sets, and
+   ``interleave`` is order-preserving (componentwise SAX order maps into
+   lexicographic key order — the property that makes one key seek find the
+   whole neighborhood).
+2. parity: ``knn_approx_batch`` on every index returns the same
+   (distance, id) sets as a loop of per-query ``knn_approx`` at equal
+   ``n_blocks``.
+3. recall: batched recall@10 against the exact oracle equals (hence is >=)
+   the per-query baseline on the synthetic random-walk dataset.
+
+Property tests run under hypothesis when installed; deterministic seed
+sweeps over the same bodies keep tier-1 coverage when it is not (the
+``tests/conftest.py`` convention).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    ADSConfig,
+    ADSIndex,
+    CLSM,
+    CLSMConfig,
+    CTree,
+    CTreeConfig,
+    RawStore,
+    StreamConfig,
+    StreamingIndex,
+    SummarizationConfig,
+    interleave,
+    searchsorted_keys,
+    searchsorted_keys_batch,
+    sort_by_keys,
+)
+from repro.core.io_model import coalesce_ranges
+from repro.core.sortable import keys_less, pack_u64
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dependency; deterministic sweeps below cover tier-1
+    given = None
+
+CFG = SummarizationConfig(series_len=64, n_segments=8, card_bits=6)
+
+KEY_CFGS = [
+    SummarizationConfig(64, 8, 4),
+    SummarizationConfig(128, 16, 8),
+    SummarizationConfig(96, 12, 6),
+    SummarizationConfig(64, 16, 2),
+]
+
+
+def _random_walks(n, length=64, seed=0):
+    r = np.random.default_rng(seed)
+    return r.standard_normal((n, length)).astype(np.float32).cumsum(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# 1. sortable-key invariants
+# ---------------------------------------------------------------------------
+def _check_searchsorted_batch_matches_scalar(cfg, seed, n=1000, m=64):
+    rng = np.random.default_rng(seed)
+    sym = rng.integers(0, cfg.cardinality, (n, cfg.n_segments)).astype(np.int32)
+    skeys = sort_by_keys(interleave(sym, cfg))[0]
+    qsym = rng.integers(0, cfg.cardinality, (m, cfg.n_segments)).astype(np.int32)
+    qkeys = interleave(qsym, cfg)
+    # mix in exact hits so left-insertion semantics are exercised
+    qkeys[: m // 4] = skeys[rng.integers(0, n, m // 4)]
+    got = searchsorted_keys_batch(skeys, qkeys)
+    want = np.array([searchsorted_keys(skeys, q) for q in qkeys])
+    np.testing.assert_array_equal(got, want)
+
+
+def _check_interleave_preserves_sax_order(cfg, seed):
+    """Componentwise symbol order maps into lexicographic key order: if
+    a[s] <= b[s] for every segment, key(a) <= key(b). This is why a key
+    seek lands inside the query's SAX neighborhood."""
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, cfg.cardinality, (64, cfg.n_segments)).astype(np.int32)
+    delta = rng.integers(0, 3, (64, cfg.n_segments))
+    b = np.minimum(a + delta, cfg.cardinality - 1).astype(np.int32)
+    ka, kb = interleave(a, cfg), interleave(b, cfg)
+    # not (kb < ka), elementwise over the batch
+    assert not keys_less(kb, ka).any()
+    # strict somewhere => strictly greater key
+    strict = (b > a).any(axis=1)
+    assert np.array_equal(keys_less(ka, kb)[strict],
+                          np.ones(int(strict.sum()), bool))
+
+
+@pytest.mark.parametrize("cfg", KEY_CFGS, ids=lambda c: f"w{c.n_segments}c{c.card_bits}")
+@pytest.mark.parametrize("seed", [0, 1, 12345])
+def test_searchsorted_batch_matches_scalar(cfg, seed):
+    _check_searchsorted_batch_matches_scalar(cfg, seed)
+
+
+@pytest.mark.parametrize("cfg", KEY_CFGS, ids=lambda c: f"w{c.n_segments}c{c.card_bits}")
+@pytest.mark.parametrize("seed", [0, 7, 999])
+def test_interleave_preserves_sax_order(cfg, seed):
+    _check_interleave_preserves_sax_order(cfg, seed)
+
+
+if given is not None:
+
+    @given(st.sampled_from(KEY_CFGS), st.integers(0, 2**31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_searchsorted_batch_matches_scalar_hypothesis(cfg, seed):
+        _check_searchsorted_batch_matches_scalar(cfg, seed, n=257, m=32)
+
+    @given(st.sampled_from(KEY_CFGS), st.integers(0, 2**31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_interleave_preserves_sax_order_hypothesis(cfg, seed):
+        _check_interleave_preserves_sax_order(cfg, seed)
+
+
+def test_searchsorted_batch_adversarial_duplicates():
+    """Duplicate keys: left insertion point must point at the FIRST equal
+    row, exactly like the scalar oracle."""
+    cfg = SummarizationConfig(64, 8, 4)
+    rng = np.random.default_rng(3)
+    sym = rng.integers(0, 4, (400, 8)).astype(np.int32)  # tiny alphabet => dups
+    skeys = sort_by_keys(interleave(sym, cfg))[0]
+    qkeys = skeys[rng.integers(0, 400, 128)]  # every query is a duplicate hit
+    got = searchsorted_keys_batch(skeys, qkeys)
+    want = np.array([searchsorted_keys(skeys, q) for q in qkeys])
+    np.testing.assert_array_equal(got, want)
+    # left semantics: predecessor (if any) is strictly less
+    for p, q in zip(got, qkeys):
+        assert tuple(skeys[p]) == tuple(q)
+        if p > 0:
+            assert tuple(skeys[p - 1]) <= tuple(q)
+
+
+def test_searchsorted_batch_all_equal_words():
+    """All rows identical: every probe falls through every word comparison."""
+    skeys = np.tile(np.array([[7, 7]], np.uint32), (100, 1))
+    below = np.array([[7, 6]], np.uint32)
+    equal = np.array([[7, 7]], np.uint32)
+    above = np.array([[7, 8]], np.uint32)
+    q = np.concatenate([below, equal, above])
+    got = searchsorted_keys_batch(skeys, q)
+    np.testing.assert_array_equal(got, [0, 0, 100])
+    want = [searchsorted_keys(skeys, x) for x in q]
+    np.testing.assert_array_equal(got, want)
+
+
+def test_searchsorted_batch_boundaries_and_empty():
+    cfg = SummarizationConfig(64, 8, 8)
+    rng = np.random.default_rng(4)
+    sym = rng.integers(1, 255, (300, 8)).astype(np.int32)
+    skeys = sort_by_keys(interleave(sym, cfg))[0]
+    lo_q = np.zeros((1, cfg.key_words), np.uint32)  # below everything
+    hi_q = np.full((1, cfg.key_words), 0xFFFFFFFF, np.uint32)  # above everything
+    got = searchsorted_keys_batch(skeys, np.concatenate([lo_q, hi_q]))
+    np.testing.assert_array_equal(got, [0, 300])
+    # empty haystack and empty batch
+    np.testing.assert_array_equal(
+        searchsorted_keys_batch(np.zeros((0, 2), np.uint32), hi_q[:, :2]), [0]
+    )
+    assert searchsorted_keys_batch(skeys, skeys[:0]).shape == (0,)
+
+
+def test_searchsorted_batch_odd_word_count():
+    """n_words odd exercises the pack_u64 zero-pad column."""
+    rng = np.random.default_rng(5)
+    keys = rng.integers(0, 2**32, (500, 3), dtype=np.uint64).astype(np.uint32)
+    skeys = sort_by_keys(keys)[0]
+    q = rng.integers(0, 2**32, (64, 3), dtype=np.uint64).astype(np.uint32)
+    q[:16] = skeys[rng.integers(0, 500, 16)]
+    got = searchsorted_keys_batch(skeys, q)
+    want = np.array([searchsorted_keys(skeys, x) for x in q])
+    np.testing.assert_array_equal(got, want)
+    assert pack_u64(skeys).shape == (500, 2)
+
+
+def test_coalesce_ranges():
+    assert coalesce_ranges([]) == []
+    assert coalesce_ranges([(5, 5), (9, 3)]) == []  # empty/inverted drop out
+    assert coalesce_ranges([(0, 4), (2, 6), (6, 8), (10, 12)]) == [(0, 8), (10, 12)]
+    assert coalesce_ranges([(10, 12), (0, 4)]) == [(0, 4), (10, 12)]
+    assert coalesce_ranges([(0, 4), (1, 2)]) == [(0, 4)]
+
+
+# ---------------------------------------------------------------------------
+# 2. batch vs per-query parity + 3. recall vs the exact oracle
+# ---------------------------------------------------------------------------
+def _assert_same_result_sets(vals, gids, per_query, tag=""):
+    """Batched (m, k) rows match per-query [(d2, id)] lists as sets."""
+    for i, res in enumerate(per_query):
+        bd = vals[i][np.isfinite(vals[i])]
+        bi = sorted(int(g) for g in gids[i] if g >= 0)
+        sd = sorted(d for d, _ in res)
+        si = sorted(i2 for _, i2 in res)
+        assert len(sd) == len(bd), f"{tag} q{i}: {len(sd)} vs {len(bd)}"
+        np.testing.assert_allclose(sorted(bd), sd, rtol=1e-5, err_msg=f"{tag} q{i}")
+        assert bi == si, f"{tag} q{i}: ids {bi} vs {si}"
+
+
+def _recall(approx_ids, exact_ids):
+    hits = sum(
+        len(set(map(int, a[a >= 0])) & set(map(int, e[e >= 0])))
+        for a, e in zip(approx_ids, exact_ids)
+    )
+    want = sum(int((e >= 0).sum()) for e in exact_ids)
+    return hits / max(1, want)
+
+
+@pytest.mark.parametrize("materialized", [False, True])
+@pytest.mark.parametrize("n_blocks", [1, 3])
+def test_ctree_knn_approx_batch_parity(materialized, n_blocks):
+    X, Q = _random_walks(3000), _random_walks(10, seed=99)
+    raw = RawStore(64)
+    ids = raw.append(X)
+    ct = CTree(CTreeConfig(summarization=CFG, block_size=256,
+                           materialized=materialized))
+    ct.bulk_build(X, ids)
+    vals, gids, stats = ct.knn_approx_batch(Q, k=10, n_blocks=n_blocks, raw=raw)
+    per_q = [ct.knn_approx(q, k=10, n_blocks=n_blocks, raw=raw)[0] for q in Q]
+    _assert_same_result_sets(vals, gids, per_q, f"ctree mat={materialized}")
+    assert stats.blocks_visited > 0
+
+
+def test_ctree_approx_recall_at_10_vs_exact():
+    """Batched recall@10 equals the per-query baseline (same sets) and is
+    therefore >= the seed's single-query recall on the RW dataset."""
+    X, Q = _random_walks(4000), _random_walks(16, seed=5)
+    raw = RawStore(64)
+    ids = raw.append(X)
+    ct = CTree(CTreeConfig(summarization=CFG, block_size=256, materialized=True))
+    ct.bulk_build(X, ids)
+    _, exact_ids, _ = ct.knn_batch(Q, k=10, raw=raw)
+    _, batch_ids, _ = ct.knn_approx_batch(Q, k=10, n_blocks=2, raw=raw)
+    loop_ids = np.full_like(batch_ids, -1)
+    for i, q in enumerate(Q):
+        res, _ = ct.knn_approx(q, k=10, n_blocks=2, raw=raw)
+        loop_ids[i, : len(res)] = [g for _, g in res]
+    r_batch = _recall(batch_ids, exact_ids)
+    r_loop = _recall(loop_ids, exact_ids)
+    assert r_batch == pytest.approx(r_loop)  # identical candidate sets
+    assert r_batch >= r_loop  # never below the single-query baseline
+    assert r_batch > 0.2  # the seek actually lands in the neighborhood
+    # more blocks read sequentially => recall can only improve
+    _, wide_ids, _ = ct.knn_approx_batch(Q, k=10, n_blocks=8, raw=raw)
+    assert _recall(wide_ids, exact_ids) >= r_batch
+
+
+def test_ctree_knn_approx_batch_kernel_backend_parity():
+    X, Q = _random_walks(2000), _random_walks(8, seed=11)
+    raw = RawStore(64)
+    ids = raw.append(X)
+    ct = CTree(CTreeConfig(summarization=CFG, block_size=256, materialized=True))
+    ct.bulk_build(X, ids)
+    v_np, g_np, _ = ct.knn_approx_batch(Q, k=5, n_blocks=2, raw=raw, backend="numpy")
+    v_kr, g_kr, _ = ct.knn_approx_batch(Q, k=5, n_blocks=2, raw=raw, backend="kernel")
+    np.testing.assert_allclose(v_np, v_kr, rtol=1e-5)
+    np.testing.assert_array_equal(g_np, g_kr)
+
+
+def test_knn_approx_batch_rejects_unknown_backend():
+    X = _random_walks(300)
+    raw = RawStore(64)
+    ct = CTree(CTreeConfig(summarization=CFG, block_size=128, materialized=True))
+    ct.bulk_build(X, raw.append(X))
+    with pytest.raises(ValueError, match="backend"):
+        ct.knn_approx_batch(_random_walks(2, seed=1), k=3, raw=raw, backend="cuda")
+
+
+def test_knn_approx_batch_empty_batch_and_k_exceeds_range():
+    X = _random_walks(500)
+    raw = RawStore(64)
+    ct = CTree(CTreeConfig(summarization=CFG, block_size=128, materialized=True))
+    ct.bulk_build(X, raw.append(X))
+    vals, gids, _ = ct.knn_approx_batch(np.zeros((0, 64), np.float32), k=3, raw=raw)
+    assert vals.shape == (0, 3) and gids.shape == (0, 3)
+    # k larger than one block's worth of candidates: tail is (inf, -1)
+    vals, gids, _ = ct.knn_approx_batch(_random_walks(3, seed=2), k=200,
+                                        n_blocks=1, raw=raw)
+    assert vals.shape == (3, 200)
+    filled = np.isfinite(vals)
+    assert filled.sum(axis=1).max() <= 128  # at most one block each
+    assert (gids[~filled] == -1).all()
+    per_q = [ct.knn_approx(q, k=200, n_blocks=1, raw=raw)[0]
+             for q in _random_walks(3, seed=2)]
+    _assert_same_result_sets(vals, gids, per_q, "k>range")
+
+
+def test_knn_approx_extreme_key_probes_tail_block():
+    """A query whose key sorts above every stored key must probe the tail
+    block, not fall off the end into an empty range (pos == n clamp) —
+    scalar and batched paths together."""
+    X = _random_walks(1024)  # n is an exact block_size multiple
+    raw = RawStore(64)
+    ct = CTree(CTreeConfig(summarization=CFG, block_size=256, materialized=True))
+    ct.bulk_build(X, raw.append(X))
+    q_hi = np.full((1, 64), 100.0, np.float32)  # beyond every stored key
+    q_lo = np.full((1, 64), -100.0, np.float32)
+    for q in (q_hi, q_lo):
+        res, st = ct.knn_approx(q[0], k=3, n_blocks=1, raw=raw)
+        assert len(res) == 3 and st.blocks_visited == 1
+        vals, gids, _ = ct.knn_approx_batch(q, k=3, n_blocks=1, raw=raw)
+        assert np.isfinite(vals).all() and (gids >= 0).all()
+        _assert_same_result_sets(vals, gids, [res], "extreme key")
+
+
+def test_knn_approx_batch_coalesces_into_sequential_reads():
+    """Identical queries must collapse to ONE sequential index read; the
+    DiskModel sees the dedup win, not m copies of the same block."""
+    X = _random_walks(2000)
+    from repro.core import DiskModel
+    disk = DiskModel()
+    raw = RawStore(64, disk)
+    ct = CTree(CTreeConfig(summarization=CFG, block_size=256, materialized=True),
+               disk)
+    ct.bulk_build(X, raw.append(X))
+    q = _random_walks(1, seed=8)
+    Q = np.repeat(q, 32, axis=0)  # 32 copies of the same query
+    disk.reset()
+    ct.knn_approx_batch(Q, k=5, n_blocks=2, raw=raw)
+    batched = disk.stats.seq_read_bytes
+    seq_ops = disk.stats.seq_ops
+    disk.reset()
+    ct.knn_approx(q[0], k=5, n_blocks=2, raw=raw)
+    single = disk.stats.seq_read_bytes
+    assert batched == single  # 32 identical seeks -> one sequential range
+    assert seq_ops <= 2  # one index-range read (+ one materialized fetch)
+    assert disk.stats.rand_read_bytes == 0
+
+
+def test_clsm_knn_approx_batch_parity_including_buffer():
+    X = _random_walks(3900)
+    lsm = CLSM(CLSMConfig(summarization=CFG, buffer_entries=512, growth_factor=3,
+                          block_size=128, materialized=True))
+    raw = RawStore(64)
+    for i in range(0, 3900, 300):
+        chunk = X[i : i + 300]
+        lsm.insert(chunk, raw.append(chunk), np.full(len(chunk), i // 300, np.int64))
+    assert lsm._buf_n > 0
+    Q = _random_walks(8, seed=21)
+    for window in (None, (2, 8)):
+        vals, gids, _ = lsm.knn_approx_batch(Q, k=5, n_blocks=2, raw=raw,
+                                             window=window)
+        per_q = [lsm.knn_approx(q, k=5, n_blocks=2, raw=raw, window=window)[0]
+                 for q in Q]
+        _assert_same_result_sets(vals, gids, per_q, f"clsm win={window}")
+
+
+@pytest.mark.parametrize("mode", ["full", "adaptive"])
+def test_ads_knn_approx_batch_parity(mode):
+    X = _random_walks(3000)
+    raw = RawStore(64)
+    ids = raw.append(X)
+    ads = ADSIndex(ADSConfig(summarization=CFG, leaf_size=512, mode=mode))
+    ads.insert_batch(X, ids)
+    Q = _random_walks(12, seed=31)
+    vals, gids, stats = ads.knn_approx_batch(Q, k=5, raw=raw)
+    per_q = [ads.knn_approx(q, k=5, raw=raw)[0] for q in Q]
+    _assert_same_result_sets(vals, gids, per_q, f"ads {mode}")
+    assert stats.blocks_visited == len(Q) - sum(1 for r in per_q if not r)
+
+
+@pytest.mark.parametrize("scheme", ["PP", "TP", "BTP"])
+def test_streaming_window_knn_approx_batch_parity(scheme):
+    idx = StreamingIndex(StreamConfig(scheme=scheme, summarization=CFG,
+                                      buffer_entries=1024, growth_factor=3,
+                                      block_size=128))
+    rng = np.random.default_rng(7)
+    for b in range(15):
+        x = rng.standard_normal((200, 64)).astype(np.float32).cumsum(axis=1)
+        idx.ingest(x, np.full(200, b, np.int64))
+    Q = _random_walks(8, seed=41)
+    for t0, t1 in ((3, 9), (0, 14), (12, 14)):
+        vals, gids, _ = idx.window_knn_approx_batch(Q, t0, t1, k=4, n_blocks=2)
+        per_q = [idx.window_knn(q, t0, t1, k=4, exact=False, n_blocks=2)[0]
+                 for q in Q]
+        _assert_same_result_sets(vals, gids, per_q, f"{scheme} ({t0},{t1})")
+
+
+def test_streaming_approx_recall_vs_exact_oracle():
+    idx = StreamingIndex(StreamConfig(scheme="BTP", summarization=CFG,
+                                      buffer_entries=512, growth_factor=3,
+                                      block_size=128))
+    rng = np.random.default_rng(9)
+    for b in range(12):
+        x = rng.standard_normal((250, 64)).astype(np.float32).cumsum(axis=1)
+        idx.ingest(x, np.full(250, b, np.int64))
+    Q = _random_walks(10, seed=51)
+    _, exact_ids, _ = idx.window_knn_batch(Q, 2, 10, k=10)
+    _, approx_ids, _ = idx.window_knn_approx_batch(Q, 2, 10, k=10, n_blocks=2)
+    loop_ids = np.full_like(approx_ids, -1)
+    for i, q in enumerate(Q):
+        res, _ = idx.window_knn(q, 2, 10, k=10, exact=False, n_blocks=2)
+        loop_ids[i, : len(res)] = [g for _, g in res]
+    r_batch, r_loop = _recall(approx_ids, exact_ids), _recall(loop_ids, exact_ids)
+    assert r_batch == pytest.approx(r_loop)
+    assert r_batch >= r_loop
+    assert r_batch > 0.2

@@ -181,6 +181,22 @@ def test_streaming_whole_history_batch():
     _assert_batch_exact(vals, gids, Q, X, 3)
 
 
+def test_knn_batch_single_query_and_odd_batch_sizes():
+    """Batch sizes that are not verify-pass block multiples (1, 3, 13) give
+    the same answers as any other batching of the same queries."""
+    X = _data(1200)
+    raw = RawStore(64)
+    ids = raw.append(X)
+    ct = CTree(CTreeConfig(summarization=CFG, block_size=256, materialized=True))
+    ct.bulk_build(X, ids)
+    Q = _queries(13)
+    full_v, full_i, _ = ct.knn_batch(Q, k=4, raw=raw)
+    for m in (1, 3, 13):
+        v, i, _ = ct.knn_batch(Q[:m], k=4, raw=raw)
+        np.testing.assert_allclose(v, full_v[:m], rtol=1e-6)
+        np.testing.assert_array_equal(i, full_i[:m])
+
+
 def test_knn_batch_k_exceeds_n_pads_with_inf():
     X = _data(5)
     raw = RawStore(64)

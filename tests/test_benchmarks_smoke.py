@@ -1,0 +1,36 @@
+"""Benchmark drivers are exercised by CI via ``benchmarks.run --smoke``
+(tiny sizes, output-schema assertions) instead of only by hand."""
+import os
+import re
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+ROW_RE = re.compile(r"^[^,\s][^,]*,\d+(\.\d+)?,[^,]*(;[^,]*)*$")
+
+
+@pytest.mark.slow
+def test_benchmarks_run_smoke_mode():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--smoke"],
+        capture_output=True, text=True, cwd=REPO, env=env, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    lines = proc.stdout.strip().splitlines()
+    assert lines[0] == "name,us_per_call,derived"
+    assert len(lines) > 20  # every driver emitted rows
+    for line in lines[1:]:
+        assert ROW_RE.match(line), f"schema violation: {line!r}"
+        assert "/ERROR," not in line, f"driver crashed: {line!r}"
+    # the approximate tier sweep is present with both recall columns equal
+    approx = [l for l in lines if "_knn_approx_batch_" in l]
+    assert approx, "approx-tier sweep missing from query driver"
+    for line in approx:
+        m = re.search(r"recall_at10=([\d.]+);loop_recall_at10=([\d.]+)", line)
+        assert m and m.group(1) == m.group(2), line

@@ -102,6 +102,52 @@ def test_summarize_pipeline_matches_host(rng):
     np.testing.assert_array_equal(np.asarray(sym), sax(x, cfg))
 
 
+def test_ops_empty_batch_returns_empty(rng):
+    """0-row batches must return cleanly shaped empty results instead of
+    tripping the ``_pad_rows`` / ``min(block_b, max(8, 0))`` corner."""
+    cfg = SummarizationConfig(series_len=64, n_segments=8, card_bits=6)
+    out = ops.paa(np.zeros((0, 64), np.float32), cfg)
+    assert out.shape == (0, 8)
+    sym, keys = ops.sax_and_keys(np.zeros((0, 8), np.float32), cfg)
+    assert sym.shape == (0, 8) and keys.shape == (0, cfg.key_words)
+    assert sym.dtype == jnp.int32 and keys.dtype == jnp.uint32
+    p, sym, keys = ops.summarize(np.zeros((0, 64), np.float32), cfg)
+    assert p.shape == (0, 8) and sym.shape == (0, 8)
+    out = ops.mindist(rng.standard_normal(8).astype(np.float32),
+                      np.zeros((0, 8), np.float32),
+                      np.zeros((0, 8), np.float32), cfg)
+    assert out.shape == (0,)
+
+
+def test_topk_ed_empty_queries_and_empty_candidates(rng):
+    x = rng.standard_normal((32, 64)).astype(np.float32)
+    q = rng.standard_normal((4, 64)).astype(np.float32)
+    v, i = ops.topk_ed(np.zeros((0, 64), np.float32), x, 3)
+    assert v.shape == (0, 3) and i.shape == (0, 3)
+    v, i = ops.topk_ed(q, np.zeros((0, 64), np.float32), 3)
+    assert np.all(np.asarray(v) == np.inf) and np.all(np.asarray(i) == -1)
+    md, am = ops.min_ed(np.zeros((0, 64), np.float32), x)
+    assert md.shape == (0,) and am.shape == (0,)
+    md, am = ops.min_ed(q, np.zeros((0, 64), np.float32))
+    assert np.all(np.asarray(md) == np.inf) and np.all(np.asarray(am) == -1)
+
+
+@pytest.mark.parametrize("m,n", [(1, 3), (5, 1), (13, 67)])
+def test_topk_ed_non_block_multiple_batches(m, n, rng):
+    """Batch sizes far from block multiples (and below the min block) go
+    through the same padding path and still match the oracle."""
+    q = rng.standard_normal((m, 64)).astype(np.float32)
+    x = rng.standard_normal((n, 64)).astype(np.float32)
+    k = 4
+    v, i = ops.topk_ed(q, x, k, block_m=8, block_n=64)
+    kk = min(k, n)
+    rv, ri = ref.topk_ed_ref(jnp.asarray(q), jnp.asarray(x), kk)
+    np.testing.assert_array_equal(np.asarray(v)[:, :kk], np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(i)[:, :kk], np.asarray(ri))
+    assert np.all(np.asarray(v)[:, kk:] == np.inf)
+    assert np.all(np.asarray(i)[:, kk:] == -1)
+
+
 def test_min_ed_kernel_argmin_is_exact_on_separated_data(rng):
     q = rng.standard_normal((4, 64)).astype(np.float32)
     x = rng.standard_normal((256, 64)).astype(np.float32) + 10.0

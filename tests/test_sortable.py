@@ -7,7 +7,12 @@ import numpy as np
 import pytest
 
 from repro.core import SummarizationConfig, interleave, deinterleave, sort_by_keys
-from repro.core.sortable import keys_less_equal, searchsorted_keys
+from repro.core.sortable import (
+    keys_less,
+    keys_less_equal,
+    searchsorted_keys,
+    searchsorted_keys_batch,
+)
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -124,3 +129,26 @@ def test_keys_less_equal_and_searchsorted(rng):
         assert keys_less_equal(skeys[pos - 1][None], q[None])[0]
     tq = tuple(q)
     assert tuple(skeys[pos]) >= tq
+
+
+def test_searchsorted_keys_batch_agrees_with_scalar(rng):
+    """The vectorized lockstep binary search is the scalar oracle, m-wide
+    (exhaustive parity on duplicates, hits, misses and both boundaries)."""
+    cfg = SummarizationConfig(64, 8, 4)
+    sym = rng.integers(0, 16, (300, 8)).astype(np.int32)  # small alphabet => dups
+    skeys = sort_by_keys(interleave(sym, cfg))[0]
+    qsym = rng.integers(0, 16, (150, 8)).astype(np.int32)
+    qkeys = interleave(qsym, cfg)
+    qkeys[:40] = skeys[rng.integers(0, 300, 40)]  # exact (duplicate) hits
+    qkeys[40] = 0  # below everything
+    qkeys[41] = 0xFFFFFFFF  # above everything
+    got = searchsorted_keys_batch(skeys, qkeys)
+    want = np.array([searchsorted_keys(skeys, q) for q in qkeys])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_keys_less_is_strict_lexicographic():
+    a = np.array([[1, 5], [1, 5], [1, 5], [2, 0]], np.uint32)
+    b = np.array([[1, 5], [1, 6], [2, 0], [1, 9]], np.uint32)
+    np.testing.assert_array_equal(keys_less(a, b), [False, True, True, False])
+    np.testing.assert_array_equal(keys_less(b, a), [False, False, False, True])
