@@ -2,6 +2,11 @@ import time
 
 import numpy as np
 
+# machine-readable row registry: every row() lands here too, so the driver
+# (benchmarks.run) can emit per-module BENCH_*.json perf-trajectory
+# artifacts next to the human CSV on stdout
+ROWS: list[dict] = []
+
 
 def timeit(fn, *, repeat=3, number=1):
     """Median wall time per call in microseconds."""
@@ -14,5 +19,28 @@ def timeit(fn, *, repeat=3, number=1):
     return float(np.median(times)) * 1e6
 
 
+def _parse_derived(derived: str) -> dict:
+    """``k=v;k=v`` derived columns as a typed dict (numbers where possible)."""
+    out = {}
+    for part in filter(None, derived.split(";")):
+        if "=" not in part:
+            out[part] = True
+            continue
+        key, val = part.split("=", 1)
+        try:
+            out[key] = int(val)
+        except ValueError:
+            try:
+                out[key] = float(val)
+            except ValueError:
+                out[key] = val
+    return out
+
+
 def row(name, us, derived=""):
     print(f"{name},{us:.1f},{derived}")
+    rec = {"name": name, "us_per_call": round(float(us), 3)}
+    if us > 0:
+        rec["throughput_per_s"] = round(1e6 / float(us), 3)
+    rec.update(_parse_derived(derived))
+    ROWS.append(rec)

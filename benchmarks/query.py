@@ -86,13 +86,15 @@ def main(smoke: bool = False):
             us_loop = timeit(
                 lambda: [idx.knn_exact(q, k=10, raw=raw) for q in Qb], repeat=2
             )
+            disk.reset()
             _, _, st = idx.knn_batch(Qb, k=10, raw=raw)
             row(
                 f"query/{name}_knn_batch_b{bsz}",
                 us_batch / bsz,
                 f"speedup_vs_loop={us_loop / max(us_batch, 1e-9):.2f};"
                 f"loop_us_per_q={us_loop / bsz:.1f};"
-                f"verified={st.entries_verified}",
+                f"verified={st.entries_verified};"
+                f"modeled_io_s={disk.modeled_seconds() / bsz:.5f}",
             )
 
     # batched APPROXIMATE tier: batch-size x n_blocks sweep. For each cell:
@@ -132,5 +134,6 @@ def main(smoke: bool = False):
                     f"speedup_vs_loop={us_loop / max(us_batch, 1e-9):.2f};"
                     f"loop_us_per_q={us_loop / bsz:.1f};"
                     f"recall_at10={rb:.3f};loop_recall_at10={rl:.3f};"
-                    f"seq_read_mb={seq_mb:.2f};verified={st.entries_verified}",
+                    f"seq_read_mb={seq_mb:.2f};verified={st.entries_verified};"
+                    f"modeled_io_s={disk.modeled_seconds() / bsz:.5f}",
                 )

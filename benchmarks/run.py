@@ -1,4 +1,7 @@
-# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV
+# and writes machine-readable BENCH_<module>.json perf-trajectory artifacts
+# (throughput, recall, modeled I/O per config) so future changes can diff
+# performance against the committed numbers.
 #
 # ``--smoke`` runs every driver at tiny sizes (<60 s total) and asserts the
 # output schema, so CI exercises the benchmark code paths instead of leaving
@@ -6,11 +9,33 @@
 import argparse
 import contextlib
 import io
+import json
+import os
 import re
 import sys
+import time
 import traceback
 
 ROW_RE = re.compile(r"^[^,\s][^,]*,\d+(\.\d+)?,[^,]*(;[^,]*)*$")
+
+# modules whose rows form the tracked perf trajectory
+ARTIFACT_MODS = ("query", "streaming")
+
+
+def _write_artifact(name: str, rows: list, out_dir: str, smoke: bool) -> None:
+    # smoke artifacts get their own (gitignored) name so CI runs never
+    # overwrite the committed perf trajectory
+    suffix = ".smoke.json" if smoke else ".json"
+    path = os.path.join(out_dir, f"BENCH_{name}{suffix}")
+    payload = {
+        "benchmark": name,
+        "smoke": smoke,  # smoke numbers are schema checks, not perf points
+        "unix_time": int(time.time()),
+        "rows": rows,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
 
 
 def main(argv=None) -> int:
@@ -19,9 +44,14 @@ def main(argv=None) -> int:
                     help="tiny sizes + output-schema assertions")
     ap.add_argument("--only", default=None,
                     help="comma-separated module names (e.g. query,streaming)")
+    ap.add_argument(
+        "--out-dir",
+        default=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        help="where BENCH_<module>.json artifacts are written (repo root)")
     args = ap.parse_args(argv)
 
-    from . import construction, kernels_bench, memory, query, roofline, streaming
+    from . import (common, construction, kernels_bench, memory, query, roofline,
+                   streaming)
 
     mods = [construction, query, streaming, memory, kernels_bench, roofline]
     if args.only:
@@ -32,6 +62,7 @@ def main(argv=None) -> int:
     print("name,us_per_call,derived")
     for mod in mods:
         name = mod.__name__.split(".")[-1]
+        common.ROWS.clear()
         try:
             if args.smoke:
                 buf = io.StringIO()
@@ -46,6 +77,8 @@ def main(argv=None) -> int:
                 sys.stdout.write(out)
             else:
                 mod.main()
+            if name in ARTIFACT_MODS:
+                _write_artifact(name, list(common.ROWS), args.out_dir, args.smoke)
         except Exception:  # noqa: BLE001 — keep the harness running
             failures += 1
             print(f"{name}/ERROR,0.0,")

@@ -59,8 +59,12 @@ def main(smoke: bool = False):
             us_l = timeit(
                 lambda: [idx.window_knn(q2, t0, t1, k=5) for q2 in Qb], repeat=2
             )
+            d = idx.raw.disk
+            d.reset()
+            idx.window_knn_batch(Qb, t0, t1, k=5)
             row(f"streaming/{scheme}_window_mid_batch_b{m}", us_b / m,
-                f"speedup_vs_loop={us_l / max(us_b, 1e-9):.2f}")
+                f"speedup_vs_loop={us_l / max(us_b, 1e-9):.2f};"
+                f"modeled_io_s={d.modeled_seconds() / m:.5f}")
 
         # batched approximate tier: batch x n_blocks with recall@5 vs exact
         _, exact_ids, _ = idx.window_knn_batch(QB, t0, t1, k=5)

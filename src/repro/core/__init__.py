@@ -9,10 +9,15 @@ from .sortable import (
 from .lower_bounds import ed2, mindist_paa_sax2, mindist_region2, topk_ed2
 from .io_model import DiskModel, IOStats, coalesce_ranges, render_heatmap
 from .external_sort import external_sort_order
-from .ctree import (
-    CTree, CTreeConfig, RawStore, SortedRun, QueryStats, heap_to_sorted,
-    empty_topk_state, merge_topk_state, recall_at_k,
+from .plan import (
+    BlockSource, DenseSource, GroupSource, QueryPlan, QueryStats, RangeSource,
+    SourceOps,
 )
+from .execute import (
+    execute, empty_topk_state, heap_to_sorted, merge_topk_state, recall_at_k,
+    state_to_list,
+)
+from .ctree import CTree, CTreeConfig, RawStore, SortedRun
 from .clsm import CLSM, CLSMConfig
 from .streaming import StreamConfig, StreamingIndex
 from .adsplus import ADSConfig, ADSIndex
@@ -25,7 +30,9 @@ __all__ = [
     "ed2", "mindist_paa_sax2", "mindist_region2", "topk_ed2",
     "DiskModel", "IOStats", "coalesce_ranges", "render_heatmap",
     "external_sort_order",
-    "CTree", "CTreeConfig", "RawStore", "SortedRun", "QueryStats", "heap_to_sorted",
+    "BlockSource", "DenseSource", "GroupSource", "QueryPlan", "QueryStats",
+    "RangeSource", "SourceOps", "execute", "state_to_list",
+    "CTree", "CTreeConfig", "RawStore", "SortedRun", "heap_to_sorted",
     "empty_topk_state", "merge_topk_state", "recall_at_k",
     "CLSM", "CLSMConfig", "StreamConfig", "StreamingIndex",
     "ADSConfig", "ADSIndex", "Scenario", "Recommendation", "recommend",

@@ -12,26 +12,30 @@ Modes:
     the leaves they touch down to ``query_leaf_size`` and fetch raw series
     lazily from the RawStore (random reads at query time).
 
+Queries compile to the shared plan/execute engine: the tree's non-empty
+leaves become the blocks of a :class:`repro.core.plan.BlockSource` (their
+iSAX node regions are the zone maps), and ADS+'s query-time adaptive
+splitting is the plan's ``refine`` hook — when the executor selects an
+oversized leaf for verification, the leaf splits and its children re-enter
+the traversal with their own (tighter) bounds, exactly the lazy refinement
+of the scalar algorithm. This gives ADS+ the full batched exact tier
+(``knn_batch``) through the same executor as every Coconut index.
+
 Implementation note: inserts are batched and partitioned vectorially for
 host speed, but the I/O accounting matches per-entry top-down insertion.
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
 from typing import Optional
 
 import numpy as np
 
-from .ctree import (
-    QueryStats,
-    RawStore,
-    empty_topk_state,
-    heap_to_sorted,
-    merge_topk_state,
-)
+from .ctree import QueryStats, RawStore, state_to_list
+from .execute import execute
 from .io_model import DiskModel
-from .lower_bounds import ed2, mindist_paa_sax2, mindist_region2, topk_ed2
+from .lower_bounds import mindist_region2
+from .plan import BlockSource, GroupSource, QueryPlan, SourceOps
 from .summarization import SummarizationConfig, paa, sax_from_paa
 
 
@@ -72,6 +76,7 @@ class ADSIndex:
         self._c = cfg.summarization.card_bits
         self.n = 0
         self.n_splits = 0
+        self._flat_cache: Optional[dict] = None  # flattened leaf view
 
     # ---------------------------------------------------------------- build
     def insert_batch(
@@ -89,6 +94,7 @@ class ADSIndex:
         # per-entry top-down insertion cost: descend (read) + leaf write
         self.disk.read_rand(len(ids) * self.disk.page_bytes)
         self.disk.write_rand(len(ids) * self.disk.page_bytes)
+        self._flat_cache = None
         # root fan-out on the MSB of each segment
         msb = (syms >> (self._c - 1)).astype(np.int8)  # (B, w) in {0,1}
         groups: dict[tuple, np.ndarray] = {}
@@ -162,6 +168,7 @@ class ADSIndex:
         node.sax = node.ids = node.ts = node.series = None
         node.n = 0
         self.n_splits += 1
+        self._flat_cache = None
         # split rewrites both child pages
         self.disk.read_rand(self.disk.page_bytes)
         self.disk.write_rand(2 * self.disk.page_bytes)
@@ -175,103 +182,234 @@ class ADSIndex:
         max_sym = ((node.prefix.astype(np.int32) + 1) << shift) - 1
         return min_sym, max_sym
 
-    def _leaf_verify(self, node: _Node, q, qp, k, bsf, raw, window, stats, worst_fn):
-        stats.blocks_visited += 1
-        self.disk.read_rand(max(1, node.n) * (self._w + 8))
-        elb = mindist_paa_sax2(qp, node.sax.astype(np.int64), self.cfg.summarization)
-        mask = elb < worst_fn()
-        if window is not None:
-            mask &= (node.ts >= window[0]) & (node.ts <= window[1])
-        stats.entries_pruned += int((~mask).sum())
-        cand = np.nonzero(mask)[0]
-        if cand.size == 0:
-            return bsf
-        if node.series is not None:
-            data = node.series[cand]
-            self.disk.read_rand(data.nbytes)
-        else:
-            if raw is None:
-                raise ValueError("adaptive ADS+ requires a RawStore")
-            data = raw.fetch(node.ids[cand])
-        d2 = ed2(np.asarray(q, np.float32), data)
-        stats.entries_verified += cand.size
-        for dist, pos in zip(d2, cand):
-            item = (-float(dist), int(node.ids[pos]))
-            if len(bsf) < k:
-                heapq.heappush(bsf, item)
-            elif item[0] > bsf[0][0]:
-                heapq.heapreplace(bsf, item)
-        return bsf
+    def _flat(self) -> dict:
+        """Lazily flattened view of the non-empty leaves: one contiguous
+        position space for the planner. The entry arrays are copies keyed
+        to the leaves at build time, so query-time adaptive splits never
+        invalidate positions (``fetch``/``index_read`` keep resolving
+        through the original ``offsets``/``series`` refs). The evolving
+        leaf partition lives in ``blocks`` — ``[node, positions]`` cells
+        that the refine hook patches in place (split parents nulled,
+        children appended), so a split costs O(children), not an O(N)
+        rebuild on the next query. Inserts rebuild from the real tree."""
+        if self._flat_cache is None:
+            leaves: list[_Node] = []
+            stack = list(self.root_children.values())
+            while stack:
+                node = stack.pop()
+                if node.is_leaf:
+                    if node.n:
+                        leaves.append(node)
+                else:
+                    stack.extend(node.children.values())
+            offsets = np.cumsum([0] + [lf.n for lf in leaves])
+            if leaves:
+                sax = np.concatenate([lf.sax for lf in leaves])
+                ids = np.concatenate([lf.ids for lf in leaves])
+                ts = np.concatenate([lf.ts for lf in leaves])
+            else:
+                sax = np.zeros((0, self._w), np.int16)
+                ids = np.zeros((0,), np.int64)
+                ts = np.zeros((0,), np.int64)
+            self._flat_cache = {
+                "offsets": offsets,
+                "sax": sax,
+                "ids": ids,
+                "ts": ts,
+                "series": [lf.series for lf in leaves],  # refs survive splits
+                "blocks": [
+                    [lf, np.arange(offsets[i], offsets[i + 1])]
+                    for i, lf in enumerate(leaves)
+                ],
+            }
+        return self._flat_cache
 
-    def _maybe_adaptive_split(self, node: _Node) -> None:
-        """ADS+ hardening: split a touched oversized leaf once; the PQ search
-        re-pushes its children, which re-split on pop until within target."""
+    def _flat_blocks(self, flat: dict) -> list:
+        """The live (node, positions) leaf partition — split parents drop."""
+        return [e for e in flat["blocks"] if e[0] is not None]
+
+    def _flat_ops(self, flat: dict, raw: Optional[RawStore], *,
+                  screen: bool) -> SourceOps:
+        """Executor accessors over the flattened leaf space (I/O accounted
+        per leaf, matching the top-down tree's random-read cost profile)."""
+        offsets = flat["offsets"]
+        L = self.cfg.summarization.series_len
+
+        def fetch(pos: np.ndarray) -> np.ndarray:
+            if self.cfg.mode != "full":
+                if raw is None:
+                    raise ValueError("adaptive ADS+ requires a RawStore")
+                return raw.fetch(flat["ids"][pos])
+            out = np.empty((pos.size, L), np.float32)
+            leaf_of = np.searchsorted(offsets, pos, side="right") - 1
+            for li in np.unique(leaf_of):
+                sel = leaf_of == li
+                data = flat["series"][li][pos[sel] - offsets[li]]
+                self.disk.read_rand(data.nbytes)
+                out[sel] = data
+            return out
+
+        def index_read(pos: np.ndarray) -> None:
+            # one node-page touch + one summarization read per leaf visited
+            leaf_of = np.searchsorted(offsets, pos, side="right") - 1
+            for li, cnt in zip(*np.unique(leaf_of, return_counts=True)):
+                self.disk.read_rand(self.disk.page_bytes)
+                self.disk.read_rand(int(max(1, cnt)) * (self._w + 8))
+
+        return SourceOps(
+            ids=flat["ids"],
+            ts=flat["ts"],
+            fetch=fetch,
+            index_read=index_read,
+            sax=flat["sax"] if screen else None,
+            scfg=self.cfg.summarization,
+        )
+
+    def _make_refine(self, flat: dict, blocks_tbl: list, qp: np.ndarray):
+        """The adaptive-split plan hook: when the executor selects an
+        oversized leaf, split it (same tree mutation + I/O accounting as
+        the scalar path) and hand back the children as new blocks with
+        their own bounds. Children re-split on re-selection until within
+        ``query_leaf_size`` — the PQ re-push of the old best-first loop.
+        Splits patch the shared ``flat["blocks"]`` partition in place, so
+        later queries start from the refined leaves without an O(N)
+        cache rebuild."""
         if self.cfg.mode != "adaptive":
-            return
-        if node.is_leaf and node.n > self.cfg.query_leaf_size:
-            self._split(node)
+            return None
+        scfg = self.cfg.summarization
+        local: list = list(blocks_tbl)  # executor block index -> shared cell
+
+        def refine(b: int):
+            entry = local[b]
+            node = entry[0]
+            if not (node.is_leaf and node.n > self.cfg.query_leaf_size):
+                return None
+            self._split(node)  # nulls _flat_cache (general safety) ...
+            self._flat_cache = flat  # ... but the flat arrays are copies:
+            # reinstate the cache and patch its partition instead
+            if node.is_leaf:  # could not split further (cardinality exhausted)
+                return None
+            pos = entry[1]
+            entry[0] = None  # parent replaced in the shared partition
+            seg = node.split_seg
+            depth = int(node.card[seg]) + 1
+            bit = (flat["sax"][pos][:, seg].astype(np.int32) >> (self._c - depth)) & 1
+            out = []
+            for bval in (0, 1):
+                child = node.children[bval]
+                cpos = pos[bit == bval]
+                mn, mx = self._node_bounds(child)
+                col = mindist_region2(qp, mn, mx, scfg)  # (m,)
+                cell = [child, cpos]
+                local.append(cell)
+                if cpos.size:
+                    flat["blocks"].append(cell)
+                out.append((col, cpos))
+            return out
+
+        return refine
+
+    def plan(
+        self,
+        Q: np.ndarray,
+        *,
+        tier: str = "exact",
+        raw: Optional[RawStore] = None,
+        window: Optional[tuple[int, int]] = None,
+    ) -> QueryPlan:
+        """Compile a query batch into a plan over the tree's leaves.
+
+        ``tier="exact"``: every non-empty leaf is a lower-bounded block
+        (its iSAX region is the zone map) with the adaptive-split refine
+        hook. ``tier="approx"``: descend every query to its mapped leaf
+        and verify each DISTINCT leaf once against its query group."""
+        Q = np.asarray(Q, np.float32)
+        m = Q.shape[0]
+        flat = self._flat()
+        blocks_tbl = self._flat_blocks(flat)
+        scfg = self.cfg.summarization
+        if not blocks_tbl or m == 0:
+            return QueryPlan(m=m, sources=[], window=window)
+        if tier == "exact":
+            qp = np.asarray(paa(Q, scfg))  # (m, w)
+            mn = np.stack([self._node_bounds(n)[0] for n, _ in blocks_tbl])
+            mx = np.stack([self._node_bounds(n)[1] for n, _ in blocks_tbl])
+            lb = mindist_region2(qp[:, None, :], mn, mx, scfg)  # (m, n_leaves)
+            src = BlockSource(
+                ops=self._flat_ops(flat, raw, screen=True),
+                lb=lb,
+                blocks=[pos for _, pos in blocks_tbl],
+                refine=self._make_refine(flat, blocks_tbl, qp),
+            )
+            return QueryPlan(m=m, sources=[src], window=window)
+        # approximate tier: per-query leaf descent, deduplicated by leaf
+        qsym = sax_from_paa(np.asarray(paa(Q, scfg)), scfg).astype(np.int16)
+        leaf_index = {id(n): i for i, (n, _) in enumerate(blocks_tbl)}
+        groups: dict[int, list[int]] = {}
+        node_touches = 0
+        for i in range(m):
+            key = tuple((qsym[i] >> (self._c - 1)).tolist())
+            node = self.root_children.get(key)
+            while node is not None and not node.is_leaf:
+                node_touches += 1
+                depth = int(node.card[node.split_seg]) + 1
+                b = int((qsym[i, node.split_seg] >> (self._c - depth)) & 1)
+                node = node.children[b]
+            if node is None or node.n == 0:
+                continue
+            groups.setdefault(leaf_index[id(node)], []).append(i)
+        group_list = [
+            (np.asarray(qlist), blocks_tbl[li][1])
+            for li, qlist in groups.items()
+        ]
+        group_reads = [
+            (lambda n=blocks_tbl[li][0].n: self.disk.read_rand(
+                max(1, n) * (self._w + 8)))
+            for li in groups
+        ]
+        pre_read = None
+        if node_touches:
+            pre_read = lambda t=node_touches: self.disk.read_rand(
+                t * self.disk.page_bytes)
+        src = GroupSource(
+            ops=self._flat_ops(flat, raw, screen=False),
+            groups=group_list,
+            group_reads=group_reads,
+            pre_read=pre_read,
+        )
+        return QueryPlan(m=m, sources=[src], window=window)
 
     def knn_exact(self, q, k=1, *, raw: Optional[RawStore] = None, window=None):
-        scfg = self.cfg.summarization
-        qp = np.asarray(paa(np.asarray(q, np.float32), scfg))
-        stats = QueryStats()
-        bsf: list = []
+        """Scalar exact kNN — a batch-of-1 plan through the shared executor
+        (adaptive leaves still split lazily via the plan's refine hook).
+        Returns ([(d2, id)] ascending, stats)."""
+        vals, gids, stats = self.knn_batch(
+            np.asarray(q, np.float32).reshape(1, -1), k, raw=raw, window=window
+        )
+        return state_to_list(vals[0], gids[0]), stats
 
-        def worst():
-            return -bsf[0][0] if len(bsf) >= k else np.inf
+    def knn_batch(self, Q, k=1, *, raw: Optional[RawStore] = None, window=None,
+                  backend="numpy", shard=None, mesh=None):
+        """Batched exact kNN: ((m, k) d2 ascending, (m, k) ids), stats.
 
-        pq: list = []
-        counter = 0
-        for node in self.root_children.values():
-            mn, mx = self._node_bounds(node)
-            lb = float(mindist_region2(qp, mn, mx, scfg))
-            counter += 1
-            heapq.heappush(pq, (lb, counter, node))
-        while pq:
-            lb, _, node = heapq.heappop(pq)
-            if lb >= worst():
-                stats.blocks_pruned += 1 + len(pq)
-                break
-            self.disk.read_rand(self.disk.page_bytes)  # node page touch
-            if node.is_leaf:
-                if node.n == 0:
-                    continue
-                if self.cfg.mode == "adaptive" and node.n > self.cfg.query_leaf_size:
-                    self._maybe_adaptive_split(node)
-                    if not node.is_leaf:
-                        for child in node.children.values():
-                            mn, mx = self._node_bounds(child)
-                            clb = float(mindist_region2(qp, mn, mx, scfg))
-                            counter += 1
-                            heapq.heappush(pq, (clb, counter, child))
-                        continue
-                bsf = self._leaf_verify(node, q, qp, k, bsf, raw, window, stats, worst)
-            else:
-                for child in node.children.values():
-                    mn, mx = self._node_bounds(child)
-                    clb = float(mindist_region2(qp, mn, mx, scfg))
-                    counter += 1
-                    heapq.heappush(pq, (clb, counter, child))
-        return heap_to_sorted(bsf), stats
+        The iSAX leaves traverse through the same executor as every
+        Coconut run — shared verification passes for the whole batch, with
+        adaptive leaves splitting on first touch (``refine``). Unfilled
+        slots are (inf, -1). ``shard="mesh"`` executes the plan on the
+        device mesh."""
+        Q = np.asarray(Q, np.float32)
+        plan = self.plan(Q, tier="exact", raw=raw, window=window)
+        (vals, gids), stats = execute(plan, Q, k, backend=backend, shard=shard,
+                                      mesh=mesh)
+        return vals, gids, stats
 
     def knn_approx(self, q, k=1, *, raw=None, window=None):
-        """Descend to the single leaf the query maps to and verify it."""
-        scfg = self.cfg.summarization
-        qp = np.asarray(paa(np.asarray(q, np.float32), scfg))
-        qsym = sax_from_paa(qp, scfg).astype(np.int16)
-        stats = QueryStats()
-        bsf: list = []
-        key = tuple((qsym >> (self._c - 1)).tolist())
-        node = self.root_children.get(key)
-        while node is not None and not node.is_leaf:
-            self.disk.read_rand(self.disk.page_bytes)
-            depth = int(node.card[node.split_seg]) + 1
-            b = int((qsym[node.split_seg] >> (self._c - depth)) & 1)
-            node = node.children[b]
-        if node is None or node.n == 0:
-            return [], stats
-        bsf = self._leaf_verify(node, q, qp, k, bsf, raw, window, stats, lambda: np.inf)
-        return heap_to_sorted(bsf), stats
+        """Descend to the single leaf the query maps to and verify it.
+        Batch-of-1 plan; returns ([(d2, id)] ascending, stats)."""
+        vals, gids, stats = self.knn_approx_batch(
+            np.asarray(q, np.float32).reshape(1, -1), k, raw=raw, window=window
+        )
+        return state_to_list(vals[0], gids[0]), stats
 
     def knn_approx_batch(self, Q, k=1, *, raw: Optional[RawStore] = None,
                          window=None):
@@ -288,55 +426,10 @@ class ADSIndex:
         are (inf, -1). Stats follow the batched convention: logical
         per-query ``blocks_visited``, physical shared ``entries_verified``.
         """
-        scfg = self.cfg.summarization
         Q = np.asarray(Q, np.float32)
-        m = Q.shape[0]
-        vals, ids = empty_topk_state(m, k)
-        stats = QueryStats()
-        if m == 0 or self.n == 0:
-            return vals, ids, stats
-        qsym = sax_from_paa(np.asarray(paa(Q, scfg)), scfg).astype(np.int16)
-        groups: dict[int, list[int]] = {}
-        leaves: dict[int, _Node] = {}
-        node_touches = 0
-        for i in range(m):
-            key = tuple((qsym[i] >> (self._c - 1)).tolist())
-            node = self.root_children.get(key)
-            while node is not None and not node.is_leaf:
-                node_touches += 1
-                depth = int(node.card[node.split_seg]) + 1
-                b = int((qsym[i, node.split_seg] >> (self._c - depth)) & 1)
-                node = node.children[b]
-            if node is None or node.n == 0:
-                continue
-            leaves[id(node)] = node
-            groups.setdefault(id(node), []).append(i)
-        if node_touches:
-            self.disk.read_rand(node_touches * self.disk.page_bytes)
-        for nid, qlist in groups.items():
-            node = leaves[nid]
-            qidx = np.asarray(qlist)
-            stats.blocks_visited += qidx.size  # per-query logical accounting
-            self.disk.read_rand(max(1, node.n) * (self._w + 8))  # one shared leaf read
-            mask = np.ones(node.n, bool)
-            if window is not None:
-                mask &= (node.ts >= window[0]) & (node.ts <= window[1])
-            stats.entries_pruned += int((~mask).sum())
-            cand = np.nonzero(mask)[0]
-            if cand.size == 0:
-                continue
-            if node.series is not None:
-                data = node.series[cand]
-                self.disk.read_rand(data.nbytes)
-            else:
-                if raw is None:
-                    raise ValueError("adaptive ADS+ requires a RawStore")
-                data = raw.fetch(node.ids[cand])
-            stats.entries_verified += cand.size
-            nv, ni = topk_ed2(Q[qidx], data, k)
-            mv, mi = merge_topk_state(vals[qidx], ids[qidx], nv, node.ids[cand][ni])
-            vals[qidx], ids[qidx] = mv, mi
-        return vals, ids, stats
+        plan = self.plan(Q, tier="approx", raw=raw, window=window)
+        (vals, gids), stats = execute(plan, Q, k)
+        return vals, gids, stats
 
     def index_bytes(self) -> int:
         total = 0

@@ -11,9 +11,12 @@ window queries skip runs whose time range misses the window.
 The ``growth_factor`` knob trades writes (merge work) against reads (number
 of runs a query must probe) — paper §2 "Better Read vs. Write Trade-Offs".
 
-Batched traffic uses ``knn_batch``: the (m, k) best-so-far state threads
-through buffer + runs newest-first exactly like the scalar bsf heap, with
-one shared verification pass per (run, batch) — see ``SortedRun.knn_batch``.
+Queries compile to one :class:`repro.core.plan.QueryPlan` — the in-memory
+buffer as a dense source plus one source per live run, newest first — and
+the shared executor folds a single (m, k) state across them, so distances
+verified against recent runs prune blocks of the older, larger runs for
+the whole batch. The PP/TP/BTP run-level skip is the plan's ``time_skip``
+flag, decided per run at plan build (no run metadata is ever touched).
 """
 from __future__ import annotations
 
@@ -22,17 +25,11 @@ from typing import Optional
 
 import numpy as np
 
-from .ctree import (
-    QueryStats,
-    RawStore,
-    SortedRun,
-    empty_topk_state,
-    heap_to_sorted,
-    merge_topk_state,
-)
+from .ctree import QueryStats, RawStore, SortedRun, state_to_list
+from .execute import execute
 from .io_model import DiskModel
-from .lower_bounds import topk_ed2
-from .summarization import SummarizationConfig, paa, sax_from_paa
+from .plan import DenseSource, QueryPlan, SourceOps, run_time_skipped
+from .summarization import SummarizationConfig
 
 
 @dataclasses.dataclass
@@ -147,127 +144,116 @@ class CLSM:
             out.extend(reversed(self.levels[level]))
         return out
 
-    def _buffer_scan(self, q, k, bsf, window):
-        import heapq
-
-        from .lower_bounds import ed2
-
+    def _buffer_source(self) -> Optional[DenseSource]:
+        """The in-memory write buffer as a brute-force plan source."""
         if self._buf_n == 0:
-            return bsf
+            return None
         series = np.concatenate(self._buf_series)
         ids = np.concatenate(self._buf_ids)
         ts = np.concatenate(self._buf_ts)
-        m = np.ones(series.shape[0], bool)
-        if window is not None:
-            m = (ts >= window[0]) & (ts <= window[1])
-        if m.any():
-            d2 = ed2(np.asarray(q, np.float32), series[m])
-            for dist, i in zip(d2, ids[m]):
-                item = (-float(dist), int(i))
-                if len(bsf) < k:
-                    heapq.heappush(bsf, item)
-                elif item[0] > bsf[0][0]:
-                    heapq.heapreplace(bsf, item)
-        return bsf
+        return DenseSource(
+            ops=SourceOps(ids=ids, ts=ts, fetch=lambda p, s=series: s[p]),
+            n=series.shape[0],
+        )
 
-    def _buffer_scan_batch(self, Q, k, state, window):
-        """Batched brute force over the in-memory write buffer."""
-        if self._buf_n == 0:
-            return state
-        series = np.concatenate(self._buf_series)
-        ids = np.concatenate(self._buf_ids)
-        ts = np.concatenate(self._buf_ts)
-        m = np.ones(series.shape[0], bool)
-        if window is not None:
-            m = (ts >= window[0]) & (ts <= window[1])
-        if not m.any():
-            return state
-        vals, sids = state
-        nv, ni = topk_ed2(Q, series[m], k)
-        return merge_topk_state(vals, sids, nv, ids[m][ni])
+    def plan(
+        self,
+        Q: np.ndarray,
+        *,
+        tier: str = "exact",
+        n_blocks: int = 1,
+        raw: Optional[RawStore] = None,
+        window: Optional[tuple[int, int]] = None,
+        time_skip: bool = True,
+        backend: str = "numpy",
+    ) -> QueryPlan:
+        """Compile a query batch into one plan over buffer + live runs.
 
-    def knn_exact(self, q, k=1, *, raw: Optional[RawStore] = None, window=None):
-        bsf: list = []
-        stats = QueryStats()
-        bsf = self._buffer_scan(q, k, bsf, window)
+        Runs go in newest-first so the executor's folded state prunes the
+        older, larger runs hardest. ``time_skip`` is the PP/TP/BTP flag:
+        False (PP) plans every run and relies on entry-level window
+        filtering; True (TP/BTP) drops runs whose [t_min, t_max] misses the
+        window at plan build — side-effect-free either way."""
+        sources: list = []
+        pruned = 0
+        buf = self._buffer_source()
+        if buf is not None:
+            sources.append(buf)
         for run in self.runs_newest_first():
-            bsf, stats = run.knn_exact(
-                q, k, raw=raw, disk=self.disk, bsf=bsf, window=window, stats=stats
-            )
-        return heap_to_sorted(bsf), stats
+            if run.n == 0:
+                continue
+            skip = run_time_skipped(run.t_min, run.t_max, window,
+                                    time_skip and run.ts is not None)
+            if tier == "exact":
+                if skip:
+                    pruned += run.n_blocks
+                    continue
+                sources.append(run.plan_exact(Q, raw=raw, disk=self.disk))
+            else:
+                if skip:
+                    continue
+                sources.append(run.plan_approx(Q, n_blocks=n_blocks, raw=raw,
+                                               disk=self.disk, backend=backend))
+        return QueryPlan(m=len(Q), sources=sources, window=window,
+                         time_skip=time_skip, pruned_blocks=pruned)
+
+    def knn_exact(self, q, k=1, *, raw: Optional[RawStore] = None, window=None,
+                  time_skip=True):
+        """Scalar exact kNN over buffer + runs — a batch-of-1 plan through
+        the shared executor. Returns ([(d2, id)] ascending, stats)."""
+        vals, gids, stats = self.knn_batch(
+            np.asarray(q, np.float32).reshape(1, -1), k, raw=raw, window=window,
+            time_skip=time_skip,
+        )
+        return state_to_list(vals[0], gids[0]), stats
 
     def knn_batch(self, Q, k=1, *, raw: Optional[RawStore] = None, window=None,
-                  backend="numpy", time_skip=True):
+                  backend="numpy", time_skip=True, shard=None, mesh=None):
         """Batched exact kNN across buffer + every live run.
 
         The batched best-so-far state threads through the runs newest-first
-        (exactly like the bsf heap in ``knn_exact``), so distances verified
-        against recent runs prune blocks of the older, larger runs for the
-        whole batch at once. ``time_skip=False`` keeps entry-level window
-        filtering but probes every run (PP). Returns ((m, k) d2, (m, k)
-        ids, stats)."""
+        (exactly like the bsf heap did), so distances verified against
+        recent runs prune blocks of the older, larger runs for the whole
+        batch at once. ``time_skip=False`` keeps entry-level window
+        filtering but probes every run (PP). ``shard="mesh"`` executes the
+        plan on the device mesh (queries x runs 2-D ``shard_map``).
+        Returns ((m, k) d2, (m, k) ids, stats)."""
         Q = np.asarray(Q, np.float32)
-        stats = QueryStats()
-        state = self._buffer_scan_batch(Q, k, empty_topk_state(Q.shape[0], k), window)
-        for run in self.runs_newest_first():
-            state, stats = run.knn_batch(
-                Q, k, raw=raw, disk=self.disk, window=window, state=state,
-                stats=stats, backend=backend, time_skip=time_skip,
-            )
-        return state[0], state[1], stats
+        plan = self.plan(Q, tier="exact", raw=raw, window=window,
+                         time_skip=time_skip)
+        (vals, gids), stats = execute(plan, Q, k, backend=backend, shard=shard,
+                                      mesh=mesh)
+        return vals, gids, stats
 
-    def knn_approx(self, q, k=1, *, n_blocks=1, raw=None, window=None):
-        """Approximate search probes the adjacent blocks of every live run
-        (BTP bounds the run count, so this is a bounded number of I/Os)."""
-        import heapq
-
-        bsf: list = []
-        stats = QueryStats()
-        bsf = self._buffer_scan(q, k, bsf, window)
-        for run in self.runs_newest_first():
-            if window is not None and run.ts is not None and (
-                run.t_max < window[0] or run.t_min > window[1]
-            ):
-                continue
-            part, st = run.knn_approx(
-                q, k, n_blocks=n_blocks, raw=raw, disk=self.disk, window=window
-            )
-            stats = stats.merge(st)
-            for nd, i in part:
-                item = (nd, i)
-                if len(bsf) < k:
-                    heapq.heappush(bsf, item)
-                elif item[0] > bsf[0][0]:
-                    heapq.heapreplace(bsf, item)
-        return heap_to_sorted(bsf), stats
+    def knn_approx(self, q, k=1, *, n_blocks=1, raw=None, window=None,
+                   time_skip=True):
+        """Scalar approximate kNN: probe the adjacent blocks of every live
+        run (BTP bounds the run count, so this is a bounded number of
+        I/Os). Batch-of-1 plan; returns ([(d2, id)] ascending, stats)."""
+        vals, gids, stats = self.knn_approx_batch(
+            np.asarray(q, np.float32).reshape(1, -1), k, n_blocks=n_blocks,
+            raw=raw, window=window, time_skip=time_skip,
+        )
+        return state_to_list(vals[0], gids[0]), stats
 
     def knn_approx_batch(self, Q, k=1, *, n_blocks=1, raw=None, window=None,
                          backend="numpy", time_skip=True):
         """Batched approximate kNN across buffer + every live run.
 
-        The (m, k) best-so-far state folds over the runs newest-first via
-        ``merge_topk_state`` — the batched analogue of the per-run heap
-        merge in ``knn_approx``. Each run contributes one vectorized key
-        seek plus one coalesced sequential block read for the whole batch
-        (BTP bounds the run count, so the I/O stays bounded). Results are a
-        subset of the exact answer: every query sees only its ``n_blocks``
-        adjacent blocks per run, so ``n_blocks`` trades sequential bytes
-        for recall@k. ``time_skip=False`` probes every run while keeping
-        entry-level window filtering (PP semantics). Returns ((m, k) d2,
-        (m, k) ids, stats)."""
+        The (m, k) best-so-far state folds over the runs newest-first — the
+        batched analogue of the per-run heap merge. Each run contributes
+        one vectorized key seek plus one coalesced sequential block read
+        for the whole batch (BTP bounds the run count, so the I/O stays
+        bounded). Results are a subset of the exact answer: every query
+        sees only its ``n_blocks`` adjacent blocks per run, so ``n_blocks``
+        trades sequential bytes for recall@k. ``time_skip=False`` probes
+        every run while keeping entry-level window filtering (PP
+        semantics). Returns ((m, k) d2, (m, k) ids, stats)."""
         Q = np.asarray(Q, np.float32)
-        stats = QueryStats()
-        state = self._buffer_scan_batch(Q, k, empty_topk_state(Q.shape[0], k), window)
-        for run in self.runs_newest_first():
-            if time_skip and window is not None and run.ts is not None and (
-                run.t_max < window[0] or run.t_min > window[1]
-            ):
-                continue
-            state, stats = run.knn_approx_batch(
-                Q, k, n_blocks=n_blocks, raw=raw, disk=self.disk, window=window,
-                state=state, stats=stats, backend=backend,
-            )
-        return state[0], state[1], stats
+        plan = self.plan(Q, tier="approx", n_blocks=n_blocks, raw=raw,
+                         window=window, time_skip=time_skip, backend=backend)
+        (vals, gids), stats = execute(plan, Q, k, backend=backend)
+        return vals, gids, stats
 
     @property
     def n_runs(self) -> int:

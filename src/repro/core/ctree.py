@@ -17,13 +17,14 @@ Variants (paper §2):
 ``SortedRun`` is shared with CoconutLSM (a CLSM level run is the same
 structure plus a time range).
 
-Queries come in two shapes: the scalar per-query path (``knn_exact`` /
-``knn_approx``, best-first heap loops) and the batched top-k engine
-(``knn_batch``), which answers a whole (m, n) query batch with shared
-dense verification passes — the host twin of the ``topk_ed`` Pallas kernel
-(``backend="kernel"`` launches the kernel itself, one launch per (run,
-batch, pass)). Batched results are ((m, k) distances, (m, k) ids) arrays
-padded with (inf, -1).
+Queries go through the plan/execute split (:mod:`repro.core.plan`,
+:mod:`repro.core.execute`): a run *plans* its candidates — block lower
+bounds from zone maps for the exact tier (``plan_exact``), per-query
+sortable-key-seek entry spans for the approximate tier (``plan_approx``) —
+and the shared executor performs the traversal, coalesced reads and
+verification passes. The scalar ``knn_exact``/``knn_approx`` entry points
+are batch-of-1 wrappers over the same engine; batched results are
+((m, k) distances, (m, k) ids) arrays padded with (inf, -1).
 """
 from __future__ import annotations
 
@@ -33,27 +34,33 @@ from typing import Optional
 
 import numpy as np
 
+from .execute import (
+    empty_topk_state,
+    execute,
+    heap_to_sorted,
+    merge_topk_state,
+    recall_at_k,
+    state_to_list,
+)
 from .external_sort import SortReport, external_sort_order
-from .io_model import DiskModel, coalesce_ranges
-from .lower_bounds import ed2, mindist_paa_sax2, mindist_region2, topk_ed2
-from .sortable import interleave, searchsorted_keys, searchsorted_keys_batch
+from .io_model import DiskModel
+from .lower_bounds import mindist_region2
+from .plan import (
+    BlockSource,
+    DenseSource,
+    QueryPlan,
+    QueryStats,
+    RangeSource,
+    SourceOps,
+    run_time_skipped,
+)
+from .sortable import interleave, searchsorted_keys_batch
 from .summarization import SummarizationConfig, paa, sax_from_paa
 
-
-@dataclasses.dataclass
-class QueryStats:
-    blocks_pruned: int = 0
-    blocks_visited: int = 0
-    entries_pruned: int = 0
-    entries_verified: int = 0
-
-    def merge(self, o: "QueryStats") -> "QueryStats":
-        return QueryStats(
-            self.blocks_pruned + o.blocks_pruned,
-            self.blocks_visited + o.blocks_visited,
-            self.entries_pruned + o.entries_pruned,
-            self.entries_verified + o.entries_verified,
-        )
+__all__ = [
+    "CTree", "CTreeConfig", "QueryStats", "RawStore", "SortedRun",
+    "empty_topk_state", "heap_to_sorted", "merge_topk_state", "recall_at_k",
+]
 
 
 class RawStore:
@@ -271,19 +278,114 @@ class SortedRun:
             data = raw.fetch(self.ids[idx])
         return data
 
-    def _verify_entries(
+    def _ops(self, raw: Optional[RawStore], disk: Optional[DiskModel],
+             *, sequential: bool, screen: bool) -> SourceOps:
+        """Physical accessor bundle for the executor (all I/O accounted)."""
+        norms2 = None
+        if self.materialized:
+            norms2 = lambda p: self.entry_norms2()[p]
+        elif raw is not None:
+            norms2 = lambda p: raw.norms2(self.ids[p])
+        index_read = None
+        if disk is not None:
+            per = self.cfg.key_words * 4 + self.cfg.n_segments
+            index_read = lambda p: disk.read_rand(p.size * per)
+        return SourceOps(
+            ids=self.ids,
+            ts=self.ts,
+            fetch=lambda p: self._fetch_entries(p, raw, disk, sequential=sequential),
+            index_read=index_read,
+            sax=self.sax if screen else None,
+            scfg=self.cfg,
+            norms2=norms2,
+            series=self.series,
+        )
+
+    def plan_exact(
         self,
-        idx: np.ndarray,
-        q: np.ndarray,
-        raw: Optional[RawStore],
-        disk: Optional[DiskModel],
-        sequential: bool,
-    ) -> np.ndarray:
-        """True squared ED for entries at positions ``idx``."""
-        if idx.size == 0:
-            return np.zeros((0,), np.float32)
-        data = self._fetch_entries(idx, raw, disk, sequential)
-        return ed2(q, data).astype(np.float32)
+        Q: np.ndarray,
+        *,
+        raw: Optional[RawStore] = None,
+        disk: Optional[DiskModel] = None,
+    ) -> BlockSource:
+        """Exact-tier candidate generation: per-(query, block) lower bounds
+        from the zone maps; the executor's adaptive traversal does the rest."""
+        Q = np.asarray(Q, np.float32)
+        qp = np.asarray(paa(Q, self.cfg))  # (m, w)
+        blb = mindist_region2(
+            qp[:, None, :], self.bmin.astype(np.int64), self.bmax.astype(np.int64),
+            self.cfg,
+        )  # (m, nb)
+        bs = self.block_size
+        blocks = [
+            np.arange(b * bs, min(self.n, (b + 1) * bs))
+            for b in range(self.n_blocks)
+        ]
+        return BlockSource(
+            ops=self._ops(raw, disk, sequential=self.materialized, screen=True),
+            lb=blb,
+            blocks=blocks,
+        )
+
+    def _query_keys_batch(self, Q: np.ndarray, backend: str) -> np.ndarray:
+        """Sortable keys for a query batch: (m, n) series -> (m, nw) uint32.
+
+        ``backend="kernel"`` produces PAA, symbols and interleaved keys in
+        one fused device pass (``kernels.ops.summarize`` — a single Pallas
+        launch per pipeline stage); ``"numpy"`` is the host twin."""
+        if backend == "kernel":
+            from ..kernels import ops as kernel_ops  # lazy: host engine stays jax-free
+
+            _, _, keys = kernel_ops.summarize(Q, self.cfg)
+            return np.asarray(keys).reshape(-1, self.cfg.key_words)
+        qp = paa(Q, self.cfg)
+        qsym = sax_from_paa(qp, self.cfg).astype(np.int32)
+        return interleave(qsym, self.cfg).reshape(-1, self.cfg.key_words)
+
+    def plan_approx(
+        self,
+        Q: np.ndarray,
+        *,
+        n_blocks: int = 1,
+        raw: Optional[RawStore] = None,
+        disk: Optional[DiskModel] = None,
+        backend: str = "numpy",
+    ) -> RangeSource:
+        """Approximate-tier candidate generation: each query is answered
+        from the ``n_blocks`` blocks adjacent to its sortable-key position.
+
+        The whole batch shares one pipeline: query keys are produced in one
+        batched summarization pass (``backend="kernel"``: one Pallas launch
+        chain via ``kernels.ops.summarize``), all m key seeks run as ONE
+        vectorized lexicographic binary search (``searchsorted_keys_batch``
+        — O(log N) fancy-indexed probes for the batch), and the resulting
+        per-query entry spans go to the executor, which coalesces them into
+        deduplicated sequential reads. Results are a subset of the exact
+        answer — recall@k grows with ``n_blocks`` (more sequential bytes
+        per query)."""
+        Q = np.asarray(Q, np.float32)
+        qkeys = self._query_keys_batch(Q, backend)
+        pos = searchsorted_keys_batch(self.keys, qkeys)  # (m,) one batched seek
+        bs = self.block_size
+        # clamp: keys above every stored key still probe the tail block
+        bc = np.minimum(pos, self.n - 1) // bs
+        b0 = np.maximum(0, bc - (n_blocks - 1) // 2)
+        b1 = np.minimum(self.n_blocks, b0 + n_blocks)
+        spans = np.stack([b0 * bs, np.minimum(self.n, b1 * bs)], axis=1)
+        eb = self._entry_bytes()
+        read_index = read_payload = None
+        if disk is not None:
+            read_index = lambda rs: disk.read_seq_ranges(rs, unit_bytes=eb)
+            read_payload = lambda rs: disk.read_seq_ranges(
+                rs, unit_bytes=self.cfg.series_len * 4
+            )
+        return RangeSource(
+            ops=self._ops(raw, disk, sequential=True, screen=False),
+            spans=spans,
+            logical_blocks=int(np.maximum(0, b1 - b0).sum()),
+            read_index_ranges=read_index,
+            read_payload_ranges=read_payload,
+        )
 
     def knn_exact(
         self,
@@ -298,54 +400,23 @@ class SortedRun:
     ) -> tuple[list, QueryStats]:
         """Exact kNN within this run, sharing a best-so-far heap across runs.
 
-        ``bsf`` is a max-heap of (-dist2, id) of current best k. Returns the
-        updated heap. ``window=(t0, t1)`` filters by timestamp (inclusive).
+        A batch-of-1 plan through the shared executor. ``bsf`` is a
+        max-heap of (-dist2, id) of current best k; returns the updated
+        heap. ``window=(t0, t1)`` filters by timestamp (inclusive).
         """
         stats = stats or QueryStats()
         bsf = bsf if bsf is not None else []
         if self.n == 0:
             return bsf, stats
-        if window is not None and self.ts is not None:
-            if self.t_max < window[0] or self.t_min > window[1]:
-                stats.blocks_pruned += self.n_blocks
-                return bsf, stats
-        qp = np.asarray(paa(np.asarray(q, np.float32), self.cfg))
-
-        # block-level lower bounds from zone maps (vectorized)
-        blb = mindist_region2(qp, self.bmin.astype(np.int64), self.bmax.astype(np.int64), self.cfg)
-        order = np.argsort(blb, kind="stable")
-        bs = self.block_size
-        for oi, b in enumerate(order):
-            worst = -bsf[0][0] if len(bsf) >= k else np.inf
-            if blb[b] >= worst:
-                stats.blocks_pruned += len(order) - oi
-                break
-            stats.blocks_visited += 1
-            lo, hi = b * bs, min(self.n, (b + 1) * bs)
-            sl = slice(lo, hi)
-            if disk is not None:
-                disk.read_rand(
-                    (hi - lo) * (self.cfg.key_words * 4 + self.cfg.n_segments),
-                    offset=lo * self._entry_bytes(),
-                )
-            mask = np.ones(hi - lo, bool)
-            if window is not None and self.ts is not None:
-                mask &= (self.ts[sl] >= window[0]) & (self.ts[sl] <= window[1])
-            elb = mindist_paa_sax2(qp, self.sax[sl].astype(np.int64), self.cfg)
-            keep = mask & (elb < worst)
-            stats.entries_pruned += int((~keep).sum())
-            cand = np.nonzero(keep)[0]
-            if cand.size == 0:
-                continue
-            d2 = self._verify_entries(cand + lo, q, raw, disk, sequential=self.materialized)
-            stats.entries_verified += cand.size
-            for dist, pos in zip(d2, cand + lo):
-                item = (-float(dist), int(self.ids[pos]))
-                if len(bsf) < k:
-                    heapq.heappush(bsf, item)
-                elif item[0] > bsf[0][0]:
-                    heapq.heapreplace(bsf, item)
-        return bsf, stats
+        if run_time_skipped(self.t_min, self.t_max, window, self.ts is not None):
+            stats.blocks_pruned += self.n_blocks
+            return bsf, stats
+        Q = np.asarray(q, np.float32).reshape(1, -1)
+        plan = QueryPlan(m=1, sources=[self.plan_exact(Q, raw=raw, disk=disk)],
+                         window=window)
+        (vals, ids), stats = execute(plan, Q, k, state=_heap_to_state(bsf, k),
+                                     stats=stats)
+        return _state_to_heap(vals[0], ids[0]), stats
 
     def knn_batch(
         self,
@@ -363,148 +434,31 @@ class SortedRun:
     ) -> tuple[tuple[np.ndarray, np.ndarray], QueryStats]:
         """Exact kNN for a whole query batch in one pass over this run.
 
-        The batched replacement for per-query ``knn_exact`` heap loops.
-        Block lower bounds are computed for the full (m, n_blocks) cross
-        product at once, then verification runs in shared passes over block
-        unions instead of per-(query, block) Python work:
-
-        1. a seed pass over each query's best-bounded block tightens every
-           radius cheaply;
-        2. bounded passes cover the union of blocks any query still needs —
-           each pass is ONE dense evaluation of the whole batch against the
-           pass's entries (``backend="kernel"``: a single ``topk_ed`` Pallas
-           launch per (run, batch, pass); ``backend="numpy"``: the host twin
-           — one shared f64 GEMM + per-query top-k).
-
-        Like the dense ED scan kernel, this trades per-entry early
-        abandoning (a disk/CPU scalar idiom) for large regular passes whose
-        extra (query, entry) pairs only ever tighten other queries' radii;
-        every entry of a pass is fetched and evaluated once for the whole
-        batch. Blocks no query needs are never touched.
-
-        ``state`` is the batched best-so-far — ((m, k) distances ascending,
-        (m, k) global ids, inf/-1 padded) — shared across runs the way the
-        ``bsf`` heap is in ``knn_exact``. Returns the updated state.
-        ``time_skip=False`` disables the run-level time-range skip while
-        keeping per-entry window filtering (the PP scheme's semantics).
-
-        Stats semantics under batching: ``blocks_visited``/``blocks_pruned``
-        count per-(query, block) logical work (comparable to summed
-        ``knn_exact`` stats); ``entries_verified`` counts physical fetches
-        (shared per batch); ``entries_pruned`` counts window filtering.
+        Plans this run's blocks (``plan_exact``) and hands the traversal to
+        the shared executor; see :func:`repro.core.execute.execute` for the
+        pass structure and stats semantics. ``state`` is the batched
+        best-so-far — ((m, k) distances ascending, (m, k) global ids,
+        inf/-1 padded) — shared across runs the way the ``bsf`` heap is in
+        ``knn_exact``. ``time_skip=False`` disables the run-level time
+        range skip while keeping per-entry window filtering (PP semantics).
         """
         if backend not in ("numpy", "kernel"):
             raise ValueError(f"unknown batch verify backend {backend!r}")
         Q = np.asarray(Q, np.float32)
         m = Q.shape[0]
         stats = stats if stats is not None else QueryStats()
-        vals, ids = state if state is not None else empty_topk_state(m, k)
+        if state is None:
+            state = empty_topk_state(m, k)
         if self.n == 0 or m == 0:
-            return (vals, ids), stats
-        if time_skip and window is not None and self.ts is not None:
-            if self.t_max < window[0] or self.t_min > window[1]:
-                stats.blocks_pruned += self.n_blocks * m  # per-query semantics
-                return (vals, ids), stats
-        qp = np.asarray(paa(Q, self.cfg))  # (m, w)
-        blb = mindist_region2(
-            qp[:, None, :], self.bmin.astype(np.int64), self.bmax.astype(np.int64), self.cfg
-        )  # (m, nb)
-        nb, bs = self.n_blocks, self.block_size
-        done = np.zeros(nb, bool)  # verified blocks (against the whole batch)
-
-        def verify_blocks(blocks: np.ndarray) -> None:
-            """Verify ``blocks`` against every query in one shared pass."""
-            nonlocal vals, ids
-            done[blocks] = True
-            pos = (blocks[:, None] * bs + np.arange(bs)[None, :]).reshape(-1)
-            pos = pos[pos < self.n]
-            if disk is not None:
-                disk.read_rand(
-                    pos.size * (self.cfg.key_words * 4 + self.cfg.n_segments)
-                )
-            if window is not None and self.ts is not None:
-                in_win = (self.ts[pos] >= window[0]) & (self.ts[pos] <= window[1])
-                stats.entries_pruned += int((~in_win).sum())
-                pos = pos[in_win]
-            if pos.size == 0:
-                return
-            data_u = self._fetch_entries(
-                pos, raw, disk, sequential=self.materialized
-            )  # (U, n)
-            stats.entries_verified += int(pos.size)
-            if backend == "kernel":
-                # ONE all-pairs topk_ed Pallas launch per (run, batch, pass)
-                nv, ni = _kernel_topk_dists(Q, data_u, k)
-            else:
-                # host twin of the kernel: screen with one shared f32 sgemm,
-                # then exactly re-rank the provably sufficient tail. The
-                # screen's only error source is the f32 cross product, whose
-                # classical bound (2 n u |q||x|) widens the kth-best radius;
-                # everything inside the widened radius is recomputed in f64,
-                # so the result is exact while the sgemm does ~all the work.
-                u = data_u.shape[0]
-                kk = min(k, u)
-                x32 = np.ascontiguousarray(data_u, np.float32)
-                g = x32 @ Q.T  # (U, m) f32 sgemm — the shared heavy pass
-                xsq = np.einsum("un,un->u", x32, x32, dtype=np.float64)
-                qsq = np.einsum("mn,mn->m", Q, Q, dtype=np.float64)
-                d2a = qsq[:, None] + xsq[None, :] - 2.0 * g.T  # (m, U) f64-ish
-                if kk < u:
-                    part = np.argpartition(d2a, kk - 1, axis=1)[:, :kk]
-                else:
-                    part = np.broadcast_to(np.arange(kk), (m, kk)).copy()
-                kth = np.take_along_axis(d2a, part, axis=1).max(axis=1)  # (m,)
-                qn = np.sqrt(qsq)
-                xn_max = float(np.sqrt(xsq.max()))
-                bound = 4.0 * data_u.shape[1] * np.finfo(np.float32).eps * qn * xn_max
-                cand = d2a <= (kth + 2.0 * bound)[:, None]  # (m, U)
-                sel = np.nonzero(cand.any(axis=0))[0]  # (S,) small tail
-                x64 = data_u[sel].astype(np.float64)
-                d2e = (
-                    qsq[:, None]
-                    + np.einsum("sn,sn->s", x64, x64)[None, :]
-                    - 2.0 * (Q.astype(np.float64) @ x64.T)
-                )  # (m, S) exact
-                d2e = np.maximum(d2e, 0.0).astype(np.float32)
-                kks = min(kk, d2e.shape[1])
-                if kks < d2e.shape[1]:
-                    p2 = np.argpartition(d2e, kks - 1, axis=1)[:, :kks]
-                else:
-                    p2 = np.broadcast_to(np.arange(kks), (m, kks)).copy()
-                nv = np.take_along_axis(d2e, p2, axis=1)
-                o = np.argsort(nv, axis=1, kind="stable")
-                nv = np.take_along_axis(nv, o, axis=1)
-                ni = sel[np.take_along_axis(p2, o, axis=1)]
-            gids = np.where(ni >= 0, self.ids[pos][np.maximum(ni, 0)], -1)
-            vals, ids = merge_topk_state(vals, ids, nv, gids)
-
-        # pass 1 (seed): every query's single best-bounded block — tightens
-        # all radii with one small shared verification
-        seed = np.unique(np.argmin(blb, axis=1))
-        verify_blocks(seed)
-        # pass 2: the union of blocks any query still needs. Extra (query,
-        # block) pairs in the shared pass only tighten other queries' radii,
-        # so — like the dense ED scan kernel — batching trades per-entry
-        # early abandoning for one large regular pass. Blocks no query needs
-        # are pruned for the whole batch.
-        worst = vals[:, -1]  # (m,) kth-best after seeding
-        need = (blb < worst[:, None]) & ~done[None, :]  # (m, nb)
-        todo = np.nonzero(need.any(axis=0))[0]
-        # best-bounded blocks first, so earlier passes tighten later ones
-        todo = todo[np.argsort(blb[:, todo].min(axis=0), kind="stable")]
-        for start in range(0, todo.size, blocks_per_round):
-            # bounded passes: radii keep tightening between them
-            worst = vals[:, -1]
-            chunk = todo[start : start + blocks_per_round]
-            chunk = chunk[(blb[:, chunk] < worst[:, None]).any(axis=0)]
-            if chunk.size:
-                verify_blocks(chunk)
-        # per-query logical accounting, comparable to summed knn_exact stats
-        worst = vals[:, -1]
-        visited_q = (done[None, :] & (blb < worst[:, None])).sum(axis=1)
-        stats.blocks_visited += int(visited_q.sum())
-        stats.blocks_pruned += int((nb - visited_q).sum())
-        return (vals, ids), stats
+            return state, stats
+        if run_time_skipped(self.t_min, self.t_max, window,
+                            time_skip and self.ts is not None):
+            stats.blocks_pruned += self.n_blocks * m  # per-query semantics
+            return state, stats
+        plan = QueryPlan(m=m, sources=[self.plan_exact(Q, raw=raw, disk=disk)],
+                         window=window, time_skip=time_skip)
+        return execute(plan, Q, k, state=state, stats=stats, backend=backend,
+                       blocks_per_round=blocks_per_round)
 
     def knn_approx(
         self,
@@ -517,52 +471,19 @@ class SortedRun:
         window: Optional[tuple[int, int]] = None,
     ) -> tuple[list, QueryStats]:
         """Approximate kNN: verify only the blocks adjacent to the query key
-        position (one sequential read — the sortable-summarization payoff)."""
+        position (one sequential read — the sortable-summarization payoff).
+        Batch-of-1 over the shared executor; returns a (-d2, id) heap."""
         stats = QueryStats()
         if self.n == 0:
             return [], stats
-        qp = np.asarray(paa(np.asarray(q, np.float32), self.cfg))
-        qsym = sax_from_paa(qp, self.cfg).astype(np.int32)
-        qkey = interleave(qsym, self.cfg).reshape(-1)
-        pos = searchsorted_keys(self.keys, qkey)
-        bs = self.block_size
-        # clamp: a key above every stored key (pos == n) still probes the
-        # tail block instead of an empty range
-        bc = min(pos, self.n - 1) // bs
-        b0 = max(0, bc - (n_blocks - 1) // 2)
-        b1 = min(self.n_blocks, b0 + n_blocks)
-        lo, hi = b0 * bs, min(self.n, b1 * bs)
-        stats.blocks_visited += b1 - b0
-        if disk is not None:
-            disk.read_seq((hi - lo) * self._entry_bytes(), offset=lo * self._entry_bytes())
-        idx = np.arange(lo, hi)
-        if window is not None and self.ts is not None:
-            idx = idx[(self.ts[idx] >= window[0]) & (self.ts[idx] <= window[1])]
-        d2 = self._verify_entries(idx, q, raw, disk, sequential=True)
-        stats.entries_verified += idx.size
-        bsf: list = []
-        for dist, pos_i in zip(d2, idx):
-            item = (-float(dist), int(self.ids[pos_i]))
-            if len(bsf) < k:
-                heapq.heappush(bsf, item)
-            elif item[0] > bsf[0][0]:
-                heapq.heapreplace(bsf, item)
-        return bsf, stats
-
-    def _query_keys_batch(self, Q: np.ndarray, backend: str) -> np.ndarray:
-        """Sortable keys for a query batch: (m, n) series -> (m, nw) uint32.
-
-        ``backend="kernel"`` produces PAA, symbols and interleaved keys in
-        one fused device pass (``kernels.ops.summarize`` — a single Pallas
-        launch per pipeline stage); ``"numpy"`` is the host twin."""
-        if backend == "kernel":
-            from ..kernels import ops as kernel_ops  # lazy: host engine stays jax-free
-
-            _, _, keys = kernel_ops.summarize(Q, self.cfg)
-            return np.asarray(keys).reshape(-1, self.cfg.key_words)
-        qp = paa(Q, self.cfg)
-        qsym = sax_from_paa(qp, self.cfg).astype(np.int32)
-        return interleave(qsym, self.cfg).reshape(-1, self.cfg.key_words)
+        Q = np.asarray(q, np.float32).reshape(1, -1)
+        plan = QueryPlan(
+            m=1,
+            sources=[self.plan_approx(Q, n_blocks=n_blocks, raw=raw, disk=disk)],
+            window=window,
+        )
+        (vals, ids), stats = execute(plan, Q, k, stats=stats)
+        return _state_to_heap(vals[0], ids[0]), stats
 
     def knn_approx_batch(
         self,
@@ -580,201 +501,43 @@ class SortedRun:
         """Approximate kNN for a whole query batch — the batched form of
         ``knn_approx`` (same per-query answers, shared physical work).
 
-        Each query is answered from the ``n_blocks`` blocks adjacent to its
-        sortable-key position, exactly as in the scalar path, but the whole
-        batch shares one pipeline: query keys are produced in one batched
-        summarization pass (``backend="kernel"``: one Pallas launch chain
-        via ``kernels.ops.summarize``), all m key seeks run as ONE
-        vectorized lexicographic binary search (``searchsorted_keys_batch``
-        — O(log N) fancy-indexed probes for the batch), and the per-query
-        block ranges are coalesced into deduplicated sequential reads before
-        verification, so overlapping queries touch each block once and the
-        DiskModel sees few long sequential reads instead of m seeks.
-
-        Recall semantics: results are a subset of the exact answer — only
-        candidates inside a query's adjacent blocks are considered, so
-        recall@k grows with ``n_blocks`` (more sequential bytes per query)
-        and equals the per-query ``knn_approx`` at the same ``n_blocks`` by
-        construction. ``state``/``stats`` thread across runs exactly like
-        ``knn_batch`` (CLSM folds one state over all levels).
-
-        Stats semantics mirror ``knn_batch``: ``blocks_visited`` counts
-        per-(query, block) logical work, ``entries_verified`` physical
-        fetches (shared per batch), ``entries_pruned`` window filtering.
-        """
+        Plans the per-query adjacent-block spans (``plan_approx``) and lets
+        the executor coalesce them into deduplicated sequential reads with
+        one shared top-k pass per distinct span. ``state``/``stats`` thread
+        across runs exactly like ``knn_batch`` (CLSM folds one state over
+        all levels)."""
         if backend not in ("numpy", "kernel"):
             raise ValueError(f"unknown batch verify backend {backend!r}")
         Q = np.asarray(Q, np.float32)
         m = Q.shape[0]
         stats = stats if stats is not None else QueryStats()
-        if state is not None:  # copy: group merges below write rows in place
-            vals, ids = state[0].copy(), state[1].copy()
-        else:
-            vals, ids = empty_topk_state(m, k)
         if self.n == 0 or m == 0:
-            return (vals, ids), stats
-        qkeys = self._query_keys_batch(Q, backend)
-        pos = searchsorted_keys_batch(self.keys, qkeys)  # (m,) one batched seek
-        bs = self.block_size
-        # clamp: keys above every stored key still probe the tail block
-        bc = np.minimum(pos, self.n - 1) // bs
-        b0 = np.maximum(0, bc - (n_blocks - 1) // 2)
-        b1 = np.minimum(self.n_blocks, b0 + n_blocks)
-        lo = b0 * bs
-        hi = np.minimum(self.n, b1 * bs)
-        stats.blocks_visited += int(np.maximum(0, b1 - b0).sum())
-        # coalesce the per-query [lo, hi) entry ranges: overlapping queries
-        # collapse into few long sequential index reads
-        ranges = coalesce_ranges(zip(lo.tolist(), hi.tolist()))
-        if disk is not None:
-            disk.read_seq_ranges(ranges, unit_bytes=self._entry_bytes())
-        if not ranges:
-            return (vals, ids), stats
-        upos = np.concatenate([np.arange(r0, r1) for r0, r1 in ranges])
-        if window is not None and self.ts is not None:
-            in_win = (self.ts[upos] >= window[0]) & (self.ts[upos] <= window[1])
-            stats.entries_pruned += int((~in_win).sum())
-            upos = upos[in_win]
-        if upos.size == 0:
-            return (vals, ids), stats
-        stats.entries_verified += int(upos.size)
-        if self.materialized and upos.size == sum(r1 - r0 for r0, r1 in ranges):
-            # contiguous materialized ranges: slice views per group below —
-            # no 10s-of-MB union gather; only the I/O accounting happens here
-            data_u = None
-            gid_u = None
-            if disk is not None:
-                disk.read_seq_ranges(ranges, unit_bytes=self.cfg.series_len * 4)
-        else:
-            data_u = self._fetch_entries(upos, raw, disk, sequential=True)  # (U, n)
-            gid_u = self.ids[upos]
-        # one shared top-k pass per DISTINCT block range: queries that seek
-        # into the same neighborhood share a pass (one topk_ed Pallas launch
-        # under backend="kernel", one f64 matmul-form GEMM under "numpy"),
-        # and disjoint ranges never multiply each other's distance work —
-        # total compute equals the per-query loop's, batched into GEMMs
-        spans, inv = np.unique(np.stack([lo, hi], axis=1), axis=0,
-                               return_inverse=True)
-        if backend != "kernel":
-            # cached squared norms (nothing union-sized is recomputed or
-            # cast to f64 — the slate re-rank below is tiny)
-            if self.materialized:
-                all_n2 = self.entry_norms2()
-                xsq = None if data_u is None else all_n2[upos]
-            else:
-                xsq = raw.norms2(self.ids[upos])
-            q64 = Q.astype(np.float64)
-        for g, (glo, ghi) in enumerate(spans):
-            qidx = np.nonzero(inv == g)[0]
-            j0, j1 = np.searchsorted(upos, (glo, ghi))
-            if j0 == j1:
-                continue
-            if data_u is None:  # contiguous materialized range: a view
-                sub = self.series[glo:ghi]
-                gid = self.ids[glo:ghi]
-            else:
-                sub = data_u[j0:j1]
-                gid = gid_u[j0:j1]
-            if backend == "kernel":
-                nv, ni = _kernel_topk_dists(Q[qidx], sub, k)
-                gi = np.where(ni >= 0, gid[np.maximum(ni, 0)], -1)
-            else:
-                # f32 sgemm screen with a +8 slack, then exact f64 re-rank
-                # of the selected slate — the host twin of the kernel path.
-                # |q|^2 is constant per row so the screen ranks by
-                # |x|^2 - 2<q, x> only; the re-rank restores true distances.
-                xsq_g = all_n2[glo:ghi] if xsq is None else xsq[j0:j1]
-                d2a = Q[qidx] @ sub.T  # (|g|, U) f32 sgemm — the heavy pass
-                np.multiply(d2a, -2.0, out=d2a)
-                np.add(d2a, xsq_g[None, :], out=d2a)
-                u = sub.shape[0]
-                ksel = min(k + 8, u)  # slack absorbs f32 near-tie reordering
-                if ksel < u:
-                    part = np.argpartition(d2a, ksel - 1, axis=1)[:, :ksel]
-                else:
-                    part = np.broadcast_to(np.arange(u), (len(qidx), u)).copy()
-                diff = sub[part].astype(np.float64) - q64[qidx][:, None, :]
-                d2e = np.einsum("mkn,mkn->mk", diff, diff).astype(np.float32)
-                kk = min(k, u)
-                o = np.argsort(d2e, axis=1, kind="stable")[:, :kk]
-                nv = np.take_along_axis(d2e, o, axis=1)
-                gi = gid[np.take_along_axis(part, o, axis=1)]
-            mv, mi = merge_topk_state(vals[qidx], ids[qidx], nv, gi)
-            vals[qidx], ids[qidx] = mv, mi
-        return (vals, ids), stats
+            if state is not None:
+                return (state[0].copy(), state[1].copy()), stats
+            return empty_topk_state(m, k), stats
+        plan = QueryPlan(
+            m=m,
+            sources=[self.plan_approx(Q, n_blocks=n_blocks, raw=raw, disk=disk,
+                                      backend=backend)],
+            window=window,
+        )
+        return execute(plan, Q, k, state=state, stats=stats, backend=backend)
 
 
-def heap_to_sorted(bsf: list) -> list[tuple[float, int]]:
-    """Convert a (-d2, id) max-heap into [(d2, id)] ascending by distance."""
-    return sorted(((-nd, i) for nd, i in bsf))
+def _heap_to_state(bsf: list, k: int) -> tuple[np.ndarray, np.ndarray]:
+    """A scalar (-d2, id) heap as a (1, k) batched best-so-far state."""
+    vals, ids = empty_topk_state(1, k)
+    for j, (d, i) in enumerate(sorted((-nd, i) for nd, i in bsf)[:k]):
+        vals[0, j] = d
+        ids[0, j] = i
+    return vals, ids
 
 
-# ---------------------------------------------------------------------------
-# batched top-k state: the array analogue of the per-query bsf heap
-# ---------------------------------------------------------------------------
-def empty_topk_state(m: int, k: int) -> tuple[np.ndarray, np.ndarray]:
-    """Fresh batched best-so-far: ((m, k) inf distances, (m, k) -1 ids)."""
-    return np.full((m, k), np.inf, np.float32), np.full((m, k), -1, np.int64)
-
-
-def merge_topk_state(
-    vals: np.ndarray, ids: np.ndarray, new_vals: np.ndarray, new_ids: np.ndarray
-) -> tuple[np.ndarray, np.ndarray]:
-    """Row-wise merge of a (m, k) running top-k with (m, j) new candidates.
-
-    Stable sort keeps existing entries ahead on distance ties. Callers must
-    not feed an id twice (each index entry is verified at most once per
-    batch, so this holds by construction)."""
-    cv = np.concatenate([vals, new_vals.astype(vals.dtype)], axis=1)
-    ci = np.concatenate([ids, new_ids.astype(ids.dtype)], axis=1)
-    order = np.argsort(cv, axis=1, kind="stable")[:, : vals.shape[1]]
-    return np.take_along_axis(cv, order, axis=1), np.take_along_axis(ci, order, axis=1)
-
-
-def recall_at_k(approx_ids: np.ndarray, exact_ids: np.ndarray) -> float:
-    """Micro-averaged recall of a batched approximate answer against the
-    exact oracle: |approx ∩ exact| / |exact| over all queries, ignoring
-    (-1) pad slots. Both args are (m, k) id arrays."""
-    hits = sum(
-        len(set(map(int, a[a >= 0])) & set(map(int, e[e >= 0])))
-        for a, e in zip(approx_ids, exact_ids)
-    )
-    return hits / max(1, sum(int((e >= 0).sum()) for e in exact_ids))
-
-
-def _kernel_topk_dists(
-    Q: np.ndarray, data: np.ndarray, k: int
-) -> tuple[np.ndarray, np.ndarray]:
-    """Top-k distances of Q (m, n) against data (E, n) via one ``topk_ed``
-    Pallas launch, with the candidate count padded up to a power of two so
-    jit sees a handful of stable shapes.
-
-    The kernel selects candidates at device (f32 matmul-form) precision
-    with a +8 slack, then the selected slate is re-ranked exactly in f64 —
-    so returned distances are exact and the best-so-far radius they feed is
-    never underestimated. Returns ((m, kk) d2 ascending, (m, kk) rows into
-    ``data``), kk = min(k, E), unfillable slots (inf, -1)."""
-    from ..kernels import ops as kernel_ops  # lazy: keeps the host engine jax-free
-
-    e = data.shape[0]
-    data = np.asarray(data, np.float32)
-    bucket = 1 << max(6, (e - 1).bit_length())
-    if bucket > e:
-        pad = np.full((bucket - e, data.shape[1]), 1e15, np.float32)
-        data = np.concatenate([data, pad])
-    ksel = min(k + 8, e)  # slack absorbs f32 near-tie reordering
-    v, i = kernel_ops.topk_ed(Q, data, ksel)
-    i = np.asarray(i).astype(np.int64)
-    invalid = i >= e  # shape-padding rows can only surface when E < ksel
-    # exact f64 re-rank of the selected slate
-    sel = np.where(invalid, 0, i)
-    diff = data[sel].astype(np.float64) - Q[:, None, :].astype(np.float64)
-    d2 = np.einsum("mkn,mkn->mk", diff, diff)
-    d2 = np.where(invalid, np.inf, d2.astype(np.float32))
-    i = np.where(invalid, -1, i)
-    kk = min(k, e)
-    o = np.argsort(d2, axis=1, kind="stable")[:, :kk]
-    return np.take_along_axis(d2, o, axis=1), np.take_along_axis(i, o, axis=1)
+def _state_to_heap(vals_row: np.ndarray, ids_row: np.ndarray) -> list:
+    """One (k,) state row back into the scalar (-d2, id) heap form."""
+    h = [(-float(v), int(g)) for v, g in zip(vals_row, ids_row) if g >= 0]
+    heapq.heapify(h)
+    return h
 
 
 @dataclasses.dataclass
@@ -876,67 +639,76 @@ class CTree:
         self._pending, self._pending_n = [], 0
 
     # ---------------------------------------------------------------- query
-    def _pending_scan(self, q, k, bsf, raw, window):
-        """Brute-force the (small) gap-absorbed set."""
-        scfg = self.cfg.summarization
-        for syms, ids, series, ts in self._pending:
-            if window is not None and ts is not None:
-                m = (ts >= window[0]) & (ts <= window[1])
+    def _pending_sources(self, raw: Optional[RawStore]) -> list[DenseSource]:
+        """The (small) gap-absorbed set as brute-force plan sources."""
+        out = []
+        for _syms, pids, series, ts in self._pending:
+            if series is not None:
+                fetch = lambda p, s=series: s[p]
             else:
-                m = np.ones(len(ids), bool)
-            if not m.any():
-                continue
-            data = series[m] if series is not None else raw.fetch(ids[m])
-            d2 = ed2(np.asarray(q, np.float32), data)
-            for dist, i in zip(d2, ids[m]):
-                item = (-float(dist), int(i))
-                if len(bsf) < k:
-                    heapq.heappush(bsf, item)
-                elif item[0] > bsf[0][0]:
-                    heapq.heapreplace(bsf, item)
-        return bsf
+                fetch = lambda p, i=pids: raw.fetch(i[p])
+            out.append(DenseSource(ops=SourceOps(ids=pids, ts=ts, fetch=fetch),
+                                   n=len(pids)))
+        return out
 
-    def _pending_scan_batch(self, Q, k, state, raw, window):
-        """Batched brute force over the (small) gap-absorbed set."""
-        vals, ids = state
-        for syms, pids, series, ts in self._pending:
-            m = np.ones(len(pids), bool)
-            if window is not None and ts is not None:
-                m = (ts >= window[0]) & (ts <= window[1])
-            if not m.any():
-                continue
-            data = series[m] if series is not None else raw.fetch(pids[m])
-            nv, ni = topk_ed2(Q, data, k)
-            vals, ids = merge_topk_state(vals, ids, nv, pids[m][ni])
-        return vals, ids
+    def plan(
+        self,
+        Q: np.ndarray,
+        *,
+        tier: str = "exact",
+        n_blocks: int = 1,
+        raw: Optional[RawStore] = None,
+        window: Optional[tuple[int, int]] = None,
+        backend: str = "numpy",
+    ) -> QueryPlan:
+        """Compile a query batch into a declarative plan: the sorted run's
+        candidate source (exact blocks or approximate spans) plus one dense
+        source per pending gap-absorbed chunk."""
+        sources: list = []
+        pruned = 0
+        if self.run is not None and self.run.n:
+            r = self.run
+            if tier == "exact":
+                if run_time_skipped(r.t_min, r.t_max, window, r.ts is not None):
+                    pruned += r.n_blocks
+                else:
+                    sources.append(r.plan_exact(Q, raw=raw, disk=self.disk))
+            else:
+                sources.append(r.plan_approx(Q, n_blocks=n_blocks, raw=raw,
+                                             disk=self.disk, backend=backend))
+        sources.extend(self._pending_sources(raw))
+        return QueryPlan(m=len(Q), sources=sources, window=window,
+                         pruned_blocks=pruned)
 
     def knn_exact(self, q, k=1, *, raw=None, window=None):
-        if self.run is None:
-            return [], QueryStats()
-        bsf, stats = self.run.knn_exact(q, k, raw=raw, disk=self.disk, window=window)
-        bsf = self._pending_scan(q, k, bsf, raw, window)
-        return heap_to_sorted(bsf), stats
+        """Scalar exact kNN — a batch-of-1 plan through the shared executor.
+        Returns ([(d2, id)] ascending, stats)."""
+        vals, gids, stats = self.knn_batch(
+            np.asarray(q, np.float32).reshape(1, -1), k, raw=raw, window=window
+        )
+        return state_to_list(vals[0], gids[0]), stats
 
-    def knn_batch(self, Q, k=1, *, raw=None, window=None, backend="numpy"):
+    def knn_batch(self, Q, k=1, *, raw=None, window=None, backend="numpy",
+                  shard=None, mesh=None):
         """Batched exact kNN: ((m, k) d2 ascending, (m, k) ids), stats.
 
-        Unfilled slots (fewer than k in-window entries) are (inf, -1)."""
+        Unfilled slots (fewer than k in-window entries) are (inf, -1).
+        ``shard="mesh"`` executes on the device mesh (queries x runs 2-D
+        ``shard_map``) with host f64 re-ranking — same answers."""
         Q = np.asarray(Q, np.float32)
-        if self.run is None:
-            vals, ids = empty_topk_state(Q.shape[0], k)
-            return vals, ids, QueryStats()
-        state, stats = self.run.knn_batch(
-            Q, k, raw=raw, disk=self.disk, window=window, backend=backend
-        )
-        vals, ids = self._pending_scan_batch(Q, k, state, raw, window)
-        return vals, ids, stats
+        plan = self.plan(Q, tier="exact", raw=raw, window=window)
+        (vals, gids), stats = execute(plan, Q, k, backend=backend, shard=shard,
+                                      mesh=mesh)
+        return vals, gids, stats
 
     def knn_approx(self, q, k=1, *, n_blocks=1, raw=None, window=None):
-        if self.run is None:
-            return [], QueryStats()
-        bsf, stats = self.run.knn_approx(q, k, n_blocks=n_blocks, raw=raw, disk=self.disk, window=window)
-        bsf = self._pending_scan(q, k, bsf, raw, window)
-        return heap_to_sorted(bsf), stats
+        """Scalar approximate kNN — a batch-of-1 plan through the executor.
+        Returns ([(d2, id)] ascending, stats)."""
+        vals, gids, stats = self.knn_approx_batch(
+            np.asarray(q, np.float32).reshape(1, -1), k, n_blocks=n_blocks,
+            raw=raw, window=window,
+        )
+        return state_to_list(vals[0], gids[0]), stats
 
     def knn_approx_batch(self, Q, k=1, *, n_blocks=1, raw=None, window=None,
                          backend="numpy"):
@@ -945,20 +717,17 @@ class CTree:
         Per-query answers match a loop of ``knn_approx`` at the same
         ``n_blocks``; physically the batch shares one key-summarization
         pass, one vectorized key seek and coalesced sequential block reads
-        (see ``SortedRun.knn_approx_batch``). Results are a subset of the
-        exact ``knn_batch`` answer — only each query's ``n_blocks`` adjacent
-        blocks are verified, so ``n_blocks`` trades sequential bytes read
-        for recall@k. Unfilled slots are (inf, -1)."""
+        (see ``SortedRun.plan_approx`` + the executor). Results are a
+        subset of the exact ``knn_batch`` answer — only each query's
+        ``n_blocks`` adjacent blocks are verified, so ``n_blocks`` trades
+        sequential bytes read for recall@k. Unfilled slots are (inf, -1)."""
+        if backend not in ("numpy", "kernel"):
+            raise ValueError(f"unknown batch verify backend {backend!r}")
         Q = np.asarray(Q, np.float32)
-        if self.run is None:
-            vals, ids = empty_topk_state(Q.shape[0], k)
-            return vals, ids, QueryStats()
-        state, stats = self.run.knn_approx_batch(
-            Q, k, n_blocks=n_blocks, raw=raw, disk=self.disk, window=window,
-            backend=backend,
-        )
-        vals, ids = self._pending_scan_batch(Q, k, state, raw, window)
-        return vals, ids, stats
+        plan = self.plan(Q, tier="approx", n_blocks=n_blocks, raw=raw,
+                         window=window, backend=backend)
+        (vals, gids), stats = execute(plan, Q, k, backend=backend)
+        return vals, gids, stats
 
     def index_bytes(self) -> int:
         return 0 if self.run is None else self.run.index_bytes()

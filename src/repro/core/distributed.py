@@ -32,13 +32,15 @@ import dataclasses
 import functools
 from typing import Sequence
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .summarization import SummarizationConfig, breakpoints
-from ..compat import axis_size as _compat_axis_size, shard_map
+from ..compat import axis_size as _compat_axis_size, make_mesh, shard_map
 from ..kernels import ref
 
 _SENTINEL = jnp.uint32(0xFFFFFFFF)
@@ -220,6 +222,130 @@ def make_build_fn(mesh, axes: Sequence[str], cfg: DistBuildConfig):
         return f(series, ids)
 
     return build
+
+
+# --------------------------------------------------------------------------
+# mesh-sharded batch serving: queries x runs 2-D screening for the executor
+# --------------------------------------------------------------------------
+@functools.lru_cache(maxsize=1)
+def default_batch_mesh():
+    """The default (queries, runs) serving mesh over every local device:
+    the query axis gets the largest power-of-two <= sqrt(n_devices) that
+    divides the device count, the runs axis the rest."""
+    n = jax.device_count()
+    qs = 1
+    while (qs * 2) * (qs * 2) <= n and n % (qs * 2) == 0:
+        qs *= 2
+    return make_mesh((qs, n // qs), ("q", "r"))
+
+
+_mesh_topk_cache: dict = {}
+
+
+def _mesh_topk_fn(mesh, ksel: int):
+    """jit'd shard_map: query rows sharded over the first mesh axis, the
+    stacked candidate groups over the remaining axes. Each device screens
+    its (query shard, candidate shard) tile with one f32 matmul-form
+    distance pass and a local top-ksel; the per-shard slates fold with ONE
+    ``all_gather`` over the runs axes plus a re-select — the device-side
+    analogue of :func:`repro.core.execute.merge_topk_state`."""
+    key = (mesh, ksel)
+    fn = _mesh_topk_cache.get(key)
+    if fn is not None:
+        return fn
+    axes = mesh.axis_names
+    axis_q, axes_r = axes[0], tuple(axes[1:])
+
+    def body(q, x):
+        xl = x.reshape(-1, x.shape[-1])  # (E_local, n)
+        g = q @ xl.T  # f32 matmul-form screen — the MXU pass
+        qsq = jnp.sum(q * q, axis=1)
+        xsq = jnp.sum(xl * xl, axis=1)
+        d2 = qsq[:, None] + xsq[None, :] - 2.0 * g
+        kk = min(ksel, xl.shape[0])
+        nv, ni = lax.top_k(-d2, kk)  # (mq, kk) of -d2, local rows
+        if not axes_r:
+            return -nv, ni.astype(jnp.int32)
+        ridx = jnp.int32(0)
+        for a in axes_r:  # flatten the runs axes into one shard index
+            ridx = ridx * _compat_axis_size(a) + lax.axis_index(a)
+        gi = ni.astype(jnp.int32) + ridx * xl.shape[0]
+        av = lax.all_gather(nv, axes_r, tiled=False)  # (nr, mq, kk)
+        ai = lax.all_gather(gi, axes_r, tiled=False)
+        nr = av.shape[0]
+        mq = q.shape[0]
+        av = jnp.moveaxis(av, 0, 1).reshape(mq, nr * kk)
+        ai = jnp.moveaxis(ai, 0, 1).reshape(mq, nr * kk)
+        fv, fi = lax.top_k(av, min(ksel, nr * kk))  # fold the shard slates
+        return -fv, jnp.take_along_axis(ai, fi, axis=1)
+
+    x_spec = P(axes_r) if axes_r else P()
+    f = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis_q), x_spec),
+        out_specs=(P(axis_q), P(axis_q)),
+        # runs-axis outputs are all_gather-reduced (identical on every r
+        # shard); the static replication checker cannot infer that.
+        check_vma=False,
+    )
+    fn = jax.jit(f)
+    _mesh_topk_cache[key] = fn
+    return fn
+
+
+def mesh_topk_candidates(Q, X, ksel: int, *, mesh=None):
+    """Screen a query batch against a candidate table on the device mesh.
+
+    Q (m, n) f32 queries, X (C, n) f32 candidates. The query batch is
+    sharded over the mesh's first axis and the candidates over the rest
+    (queries x runs 2-D parallelism); each device computes f32 matmul-form
+    distances for its tile, and per-shard top-ksel slates fold with one
+    ``all_gather``. Returns ((m, ksel) d2 f32, (m, ksel) rows into X,
+    -1 = invalid) as host arrays — callers re-rank the slate exactly in
+    f64 (see ``execute._rerank_slate``), so the f32 screen never decides
+    final distances.
+
+    Candidate rows are padded to a power-of-two-per-shard grid with +large
+    sentinels so jit sees a handful of stable shapes across serving
+    batches."""
+    mesh = mesh if mesh is not None else default_batch_mesh()
+    axes = mesh.axis_names
+    qs = mesh.shape[axes[0]]
+    rs = 1
+    for a in axes[1:]:
+        rs *= mesh.shape[a]
+    Q = np.asarray(Q, np.float32)
+    X = np.asarray(X, np.float32)
+    m, n = Q.shape
+    c = X.shape[0]
+    if m == 0 or c == 0:
+        return np.zeros((m, 0), np.float32), np.full((m, 0), -1, np.int64)
+    ksel = min(ksel, c)
+    e = -(-c // rs)
+    e = max(8, 1 << (e - 1).bit_length())  # pow2 bucket: few jit shapes
+    xp = np.full((rs * e, n), 1e15, np.float32)
+    xp[:c] = X
+    mp = -(-m // qs) * qs
+    qp = np.zeros((mp, n), np.float32)
+    qp[:m] = Q
+    d2, rows = _mesh_topk_fn(mesh, ksel)(jnp.asarray(qp), xp.reshape(rs, e, n))
+    d2 = np.asarray(d2)[:m]
+    rows = np.asarray(rows).astype(np.int64)[:m]
+    return d2, np.where(rows >= c, -1, rows)
+
+
+def valid_entries(index: dict) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side extraction of the valid (non-sentinel) entries of a
+    sample-sorted build, in global key order — the bridge from the
+    distributed build to the mesh batch executor: the returned (series,
+    ids) feed :func:`mesh_topk_candidates` directly, with each build
+    shard's contiguous key range landing on one runs-axis shard."""
+    inval = np.asarray(index["invalid"]).astype(bool)
+    return (
+        np.asarray(index["series"])[~inval],
+        np.asarray(index["ids"])[~inval].astype(np.int64),
+    )
 
 
 def make_query_fn(mesh, axes: Sequence[str], cfg: DistBuildConfig, *, k=10, verify_budget=128):

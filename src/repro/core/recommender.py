@@ -28,6 +28,10 @@ class Scenario:
     uses_windows: bool = False
     ingest_rate: float = 0.0  # series/sec arriving (streaming)
     read_heavy: Optional[bool] = None  # override read/write balance
+    # serving-tier inputs (None = exact answers required)
+    target_recall: Optional[float] = None  # acceptable recall@k vs exact
+    latency_budget_ms: Optional[float] = None  # per-query modeled I/O budget
+    query_batch: int = 1  # concurrent queries per serving batch
 
 
 @dataclasses.dataclass
@@ -39,15 +43,97 @@ class Recommendation:
     fill_factor: float
     mem_budget_entries: int
     rationale: list[str] = dataclasses.field(default_factory=list)
+    tier: str = "exact"  # "exact" | "approx" serving tier
+    n_blocks: int = 0  # approx tier: adjacent blocks per (query, run)
 
     def describe(self) -> str:
         mat = "materialized" if self.materialized else "non-materialized"
         head = f"{mat} {self.index.upper()}" + (f" with {self.scheme}" if self.scheme != "-" else "")
+        if self.tier == "approx":
+            head += f", approx tier (n_blocks={self.n_blocks})"
         return head + "\n  because:\n" + "\n".join(f"  - {r}" for r in self.rationale)
 
 
 # cost-model constants used by the break-even analysis (bytes)
 _RAW_BYTES = 4
+_BLOCK_ENTRIES = 1024  # nominal entries per sequential block read
+_SEQ_MBPS = 500.0  # modeled disk (io_model.DiskModel defaults)
+_RAND_IOPS = 10_000.0
+_EXACT_VERIFIED_FRAC = 0.002  # fraction of N verified per exact query
+
+
+def _approx_recall_model(n_blocks: int) -> float:
+    """Modeled recall@k of the approximate tier at ``n_blocks`` adjacent
+    blocks per (query, run). Sortable keys keep a query's true neighbors
+    clustered around its seek position, with coverage saturating roughly
+    geometrically as the window widens — calibrated against the repo's
+    recall-validation harness on the random-walk datasets (n_blocks=1 ~0.5,
+    2 ~0.7, 8 ~0.95)."""
+    return 1.0 - 0.55 * (0.72 ** (n_blocks - 1))
+
+
+def _serving_tier(s: Scenario, r: list[str]) -> tuple[str, int]:
+    """Decision-tree node: pick the serving tier + its recall knob from the
+    target recall and per-query latency budget."""
+    n = s.n_series
+    entry_bytes = s.series_len * _RAW_BYTES
+    # modeled per-query exact cost: LB-surviving random fetches (amortized
+    # ~linearly by batching, which shares verification passes)
+    batch_amort = max(1.0, min(float(s.query_batch), 8.0))
+    exact_rand_reads = n * _EXACT_VERIFIED_FRAC / batch_amort
+    exact_ms = exact_rand_reads / _RAND_IOPS * 1e3
+    if s.target_recall is None and s.latency_budget_ms is None:
+        return "exact", 0
+    if s.target_recall is not None and s.target_recall >= 1.0:
+        r.append(
+            "target recall 1.0 -> only the exact tier guarantees it; "
+            "the approximate tier is a strict subset of the exact answer"
+        )
+        return "exact", 0
+    if s.latency_budget_ms is not None and exact_ms <= s.latency_budget_ms \
+            and s.target_recall is None:
+        r.append(
+            f"modeled exact query I/O ~{exact_ms:.2f} ms fits the "
+            f"{s.latency_budget_ms:.2f} ms budget at batch {s.query_batch} "
+            "-> keep exact answers"
+        )
+        return "exact", 0
+    # approximate tier: choose the smallest n_blocks whose modeled recall
+    # clears the target and whose sequential bytes fit the budget
+    target = s.target_recall if s.target_recall is not None else 0.9
+    nb = 1
+    while nb < 64 and _approx_recall_model(nb) < target:
+        nb *= 2
+    seq_ms = nb * _BLOCK_ENTRIES * entry_bytes / (_SEQ_MBPS * 1e6) * 1e3
+    r.append(
+        f"target recall@k {target:.2f} < 1 -> approximate tier: one key "
+        f"seek + {nb} adjacent block(s) read sequentially per (query, run) "
+        f"(modeled recall ~{_approx_recall_model(nb):.2f})"
+    )
+    if s.latency_budget_ms is not None:
+        uncapped = nb
+        while nb > 1 and seq_ms > s.latency_budget_ms:
+            nb //= 2
+            seq_ms = nb * _BLOCK_ENTRIES * entry_bytes / (_SEQ_MBPS * 1e6) * 1e3
+        r.append(
+            f"latency budget {s.latency_budget_ms:.2f} ms/query caps the "
+            f"sequential read at n_blocks={nb} (~{seq_ms:.2f} ms modeled); "
+            f"exact would cost ~{exact_ms:.2f} ms"
+        )
+        if nb < uncapped and _approx_recall_model(nb) < target:
+            r.append(
+                f"WARNING: at the capped n_blocks={nb} the modeled recall "
+                f"drops to ~{_approx_recall_model(nb):.2f}, below the "
+                f"{target:.2f} target — the recall and latency goals "
+                "conflict; relax one of them"
+            )
+    if s.query_batch > 1:
+        r.append(
+            f"batch of {s.query_batch} concurrent queries shares one "
+            "vectorized key seek and coalesced sequential reads per run, so "
+            "the per-query seek cost amortizes toward zero"
+        )
+    return "approx", nb
 
 
 def recommend(s: Scenario) -> Recommendation:
@@ -97,7 +183,10 @@ def recommend(s: Scenario) -> Recommendation:
             "streaming ingest + merges rewrite data repeatedly -> keep runs "
             "non-materialized; verification reads fetch from the raw log"
         )
-        return Recommendation(index, materialized, scheme, growth, 1.0, mem_entries, r)
+        # node 1d: serving tier from the recall/latency targets
+        tier, n_blocks = _serving_tier(s, r)
+        return Recommendation(index, materialized, scheme, growth, 1.0,
+                              mem_entries, r, tier=tier, n_blocks=n_blocks)
 
     # --- static data ----------------------------------------------------------
     index = "ctree"
@@ -150,4 +239,8 @@ def recommend(s: Scenario) -> Recommendation:
     fill = 1.0 if s.ingest_rate == 0 else 0.8
     if fill < 1.0:
         r.append("occasional updates expected -> leaf fill factor 0.8 leaves gaps")
-    return Recommendation(index, materialized, scheme, 3, fill, mem_entries, r)
+
+    # node 5: serving tier from the recall/latency targets
+    tier, n_blocks = _serving_tier(s, r)
+    return Recommendation(index, materialized, scheme, 3, fill, mem_entries, r,
+                          tier=tier, n_blocks=n_blocks)

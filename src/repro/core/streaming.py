@@ -19,10 +19,17 @@ stream. They differ in how the temporal dimension is physically organized:
   runs (like PP); the number of partitions any query touches is bounded by
   growth_factor * log(N).
 
-Concurrent query traffic goes through the batched engine: ``knn_batch`` /
-``window_knn_batch`` answer a whole (m, n) query batch with one shared
-verification pass per (run, batch) — see ``SortedRun.knn_batch`` — and
-return ((m, k) distances, (m, k) ids, stats) instead of per-query lists.
+The scheme maps onto the query plan's ``time_skip`` flag (see
+``repro.core.plan``): TP/BTP drop runs whose time range misses the window
+at plan build; PP plans every run and filters entries — no run metadata is
+ever mutated, so concurrent PP queries are side-effect-free (the old
+save/restore t_min/t_max hack is gone).
+
+Scalar ``window_knn`` is a batch-of-1 plan; concurrent traffic goes
+through ``window_knn_batch`` / ``window_knn_approx_batch``, which answer a
+whole (m, n) query batch with one shared verification pass per (run,
+batch) and return ((m, k) distances, (m, k) ids, stats). Exact batches
+accept ``shard="mesh"`` for device-mesh execution.
 """
 from __future__ import annotations
 
@@ -32,7 +39,7 @@ from typing import Optional
 import numpy as np
 
 from .clsm import CLSM, CLSMConfig
-from .ctree import QueryStats, RawStore, heap_to_sorted
+from .ctree import QueryStats, RawStore, state_to_list
 from .summarization import SummarizationConfig
 
 
@@ -65,6 +72,8 @@ class StreamingIndex:
             merge=cfg.scheme != "TP",
         )
         self.lsm = CLSM(lsm_cfg, disk=self.raw.disk)
+        # the PP/TP/BTP plan flag: PP never skips runs by time, it only
+        # filters entries during verification
         self._window_skip = cfg.scheme in ("TP", "BTP")
 
     # ---------------------------------------------------------------- ingest
@@ -77,44 +86,19 @@ class StreamingIndex:
     # ---------------------------------------------------------------- query
     def window_knn(self, q, t0: int, t1: int, k: int = 1, exact: bool = True,
                    n_blocks: int = 1):
-        window = (int(t0), int(t1))
-        if not self._window_skip:
-            # PP: disable run-level temporal skipping but keep entry filtering
-            bsf: list = []
-            stats = QueryStats()
-            bsf = self.lsm._buffer_scan(q, k, bsf, window)
-            for run in self.lsm.runs_newest_first():
-                saved = (run.t_min, run.t_max)
-                run.t_min, run.t_max = window  # force overlap => no skip
-                try:
-                    if exact:
-                        bsf, stats = run.knn_exact(
-                            q, k, raw=self.raw, disk=self.lsm.disk, bsf=bsf,
-                            window=window, stats=stats,
-                        )
-                    else:
-                        import heapq
-
-                        part, st = run.knn_approx(
-                            q, k, n_blocks=n_blocks, raw=self.raw,
-                            disk=self.lsm.disk, window=window,
-                        )
-                        stats = stats.merge(st)
-                        for item in part:
-                            if len(bsf) < k:
-                                heapq.heappush(bsf, item)
-                            elif item[0] > bsf[0][0]:
-                                heapq.heapreplace(bsf, item)
-                finally:
-                    run.t_min, run.t_max = saved
-            return heap_to_sorted(bsf), stats
+        """Scalar window query — a batch-of-1 plan with the scheme's
+        ``time_skip`` flag (side-effect-free under every scheme).
+        Returns ([(d2, id)] ascending, stats)."""
+        Q = np.asarray(q, np.float32).reshape(1, -1)
         if exact:
-            return self.lsm.knn_exact(q, k, raw=self.raw, window=window)
-        return self.lsm.knn_approx(q, k, n_blocks=n_blocks, raw=self.raw,
-                                   window=window)
+            vals, gids, stats = self.window_knn_batch(Q, t0, t1, k=k)
+        else:
+            vals, gids, stats = self.window_knn_approx_batch(
+                Q, t0, t1, k=k, n_blocks=n_blocks)
+        return state_to_list(vals[0], gids[0]), stats
 
     def window_knn_batch(self, Q, t0: int, t1: int, k: int = 1, *,
-                         backend: str = "numpy"):
+                         backend: str = "numpy", shard=None, mesh=None):
         """Batched exact window query: ((m, k) d2, (m, k) ids, stats).
 
         One batched pass per live run (see ``CLSM.knn_batch``); under PP
@@ -123,11 +107,14 @@ class StreamingIndex:
         window = (int(t0), int(t1))
         return self.lsm.knn_batch(Q, k, raw=self.raw, window=window,
                                   backend=backend,
-                                  time_skip=self._window_skip)
+                                  time_skip=self._window_skip,
+                                  shard=shard, mesh=mesh)
 
-    def knn_batch(self, Q, k: int = 1, *, backend: str = "numpy"):
+    def knn_batch(self, Q, k: int = 1, *, backend: str = "numpy", shard=None,
+                  mesh=None):
         """Batched whole-history exact query: ((m, k) d2, (m, k) ids, stats)."""
-        return self.lsm.knn_batch(Q, k, raw=self.raw, backend=backend)
+        return self.lsm.knn_batch(Q, k, raw=self.raw, backend=backend,
+                                  shard=shard, mesh=mesh)
 
     def window_knn_approx_batch(self, Q, t0: int, t1: int, k: int = 1, *,
                                 n_blocks: int = 1, backend: str = "numpy"):

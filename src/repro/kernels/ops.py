@@ -155,6 +155,30 @@ def topk_ed(
     return vals, idxs
 
 
+def topk_ed_bucketed(
+    q: jnp.ndarray, x: jnp.ndarray, k: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """``topk_ed`` with the candidate count padded up to a power-of-two
+    bucket (min 64) so jit sees a handful of stable shapes across serving
+    passes — the launcher used by the shared query executor.
+
+    Bucket-padding rows carry a +large sentinel; any that surface (only
+    possible when the true candidate count < k) are mapped to (inf, -1),
+    so results are indistinguishable from an unpadded launch. Returns host
+    ((m, kk) f32 d2, (m, kk) int64 rows into ``x``), kk = min(k, |x|)."""
+    x = jnp.asarray(x, jnp.float32)
+    e = x.shape[0]
+    bucket = 1 << max(6, (e - 1).bit_length())
+    if bucket > e:
+        pad = jnp.full((bucket - e, x.shape[1]), 1e15, jnp.float32)
+        x = jnp.concatenate([x, pad])
+    v, i = topk_ed(q, x, min(k, e))
+    i = np.asarray(i).astype(np.int64)
+    v = np.asarray(v)
+    invalid = (i < 0) | (i >= e)  # bucket padding / never-filled slots
+    return np.where(invalid, np.inf, v), np.where(invalid, -1, i)
+
+
 def mindist(
     q_paa: jnp.ndarray,
     lo: jnp.ndarray,

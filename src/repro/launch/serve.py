@@ -32,8 +32,18 @@ def serve_coconut(args):
     is the approximate tier's recall knob — more adjacent blocks read
     sequentially per query raise recall@k toward exact at sequential-I/O
     prices. Approximate recall@k vs the exact oracle is measured on every
-    served batch."""
+    served batch.
+
+    ``--shard mesh`` executes the exact tier on the local device mesh: the
+    query batch sharded over one mesh axis and the live runs over the
+    other (queries x runs 2-D ``shard_map``), per-shard top-k states
+    folded with one all_gather — answers are identical to the
+    single-device engine (host f64 re-rank)."""
     tier = "approx" if args.approx else args.tier
+    shard = args.shard if args.shard != "none" else None
+    if shard == "mesh" and tier == "approx":
+        raise SystemExit("--shard mesh serves the exact tier only "
+                         "(the approx tier's seek/coalesce I/O model is host-side)")
     scfg = SummarizationConfig(series_len=args.series_len, n_segments=16,
                                card_bits=8)
     idx = StreamingIndex(StreamConfig(scheme=args.scheme, summarization=scfg,
@@ -52,11 +62,13 @@ def serve_coconut(args):
                 _, got_ids, _ = idx.window_knn_approx_batch(
                     qs, t0b, t1b, k=args.k, n_blocks=args.n_blocks)
             else:
-                _, got_ids, _ = idx.window_knn_batch(qs, t0b, t1b, k=args.k)
+                _, got_ids, _ = idx.window_knn_batch(qs, t0b, t1b, k=args.k,
+                                                     shard=shard)
             dt = (time.time() - t0) / args.query_batch
             lat.append(dt)
             line = (f"[serve] batch {b+1}: {args.query_batch} queries "
-                    f"({tier}), {dt*1e3:.2f} ms/query, "
+                    f"({tier}{'+mesh' if shard == 'mesh' else ''}), "
+                    f"{dt*1e3:.2f} ms/query, "
                     f"partitions={idx.n_partitions}")
             if tier == "approx":
                 # score recall without letting the oracle's reads pollute the
@@ -128,6 +140,9 @@ def main():
     ap.add_argument("--n-blocks", type=int, default=2,
                     help="approx tier: adjacent blocks read per (query, run) "
                          "— the recall vs I/O knob")
+    ap.add_argument("--shard", default="none", choices=["none", "mesh"],
+                    help="exact tier execution: single-device or the device "
+                         "mesh (queries x runs 2-D shard_map)")
     ap.add_argument("--approx", action="store_true",
                     help="deprecated alias for --tier approx")
     ap.add_argument("--arch", default="smollm-360m")

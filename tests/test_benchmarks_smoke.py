@@ -1,9 +1,11 @@
 """Benchmark drivers are exercised by CI via ``benchmarks.run --smoke``
 (tiny sizes, output-schema assertions) instead of only by hand."""
+import json
 import os
 import re
 import subprocess
 import sys
+import tempfile
 
 import pytest
 
@@ -12,13 +14,14 @@ ROW_RE = re.compile(r"^[^,\s][^,]*,\d+(\.\d+)?,[^,]*(;[^,]*)*$")
 
 
 @pytest.mark.slow
-def test_benchmarks_run_smoke_mode():
+def test_benchmarks_run_smoke_mode(tmp_path):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src") + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
     )
     proc = subprocess.run(
-        [sys.executable, "-m", "benchmarks.run", "--smoke"],
+        [sys.executable, "-m", "benchmarks.run", "--smoke",
+         "--out-dir", str(tmp_path)],
         capture_output=True, text=True, cwd=REPO, env=env, timeout=600,
     )
     assert proc.returncode == 0, proc.stderr[-2000:]
@@ -34,3 +37,16 @@ def test_benchmarks_run_smoke_mode():
     for line in approx:
         m = re.search(r"recall_at10=([\d.]+);loop_recall_at10=([\d.]+)", line)
         assert m and m.group(1) == m.group(2), line
+    # machine-readable perf-trajectory artifacts are emitted per module
+    # (smoke suffix so CI never clobbers the committed trajectory)
+    for mod in ("query", "streaming"):
+        path = tmp_path / f"BENCH_{mod}.smoke.json"
+        assert path.exists(), f"missing artifact {path}"
+        payload = json.loads(path.read_text())
+        assert payload["benchmark"] == mod and payload["smoke"] is True
+        assert payload["rows"], "artifact has no rows"
+        for rec in payload["rows"]:
+            assert "name" in rec and "us_per_call" in rec
+        if mod == "query":
+            assert any("recall_at10" in rec for rec in payload["rows"])
+            assert any("modeled_io_s" in rec for rec in payload["rows"])

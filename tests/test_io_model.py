@@ -1,0 +1,111 @@
+"""Direct unit coverage for the I/O accounting layer (DiskModel,
+coalesce_ranges, read_seq_ranges, heatmap) — previously exercised only
+indirectly through the indexes."""
+import numpy as np
+import pytest
+
+from repro.core.io_model import DiskModel, IOStats, coalesce_ranges, render_heatmap
+
+
+# ---------------------------------------------------------------------------
+# coalesce_ranges
+# ---------------------------------------------------------------------------
+def test_coalesce_empty_and_degenerate():
+    assert coalesce_ranges([]) == []
+    assert coalesce_ranges([(3, 3)]) == []  # empty range drops out
+    assert coalesce_ranges([(9, 2)]) == []  # inverted range drops out
+    assert coalesce_ranges([(0, 0), (5, 4), (7, 7)]) == []
+
+
+def test_coalesce_overlapping_nested_and_touching():
+    # overlap, containment, back-to-back all fuse; gaps stay separate
+    assert coalesce_ranges([(0, 4), (2, 6)]) == [(0, 6)]
+    assert coalesce_ranges([(0, 10), (2, 3)]) == [(0, 10)]  # nested
+    assert coalesce_ranges([(0, 4), (4, 8)]) == [(0, 8)]  # touching
+    assert coalesce_ranges([(0, 2), (5, 7)]) == [(0, 2), (5, 7)]
+
+
+def test_coalesce_unsorted_input_and_duplicates():
+    got = coalesce_ranges([(10, 12), (0, 4), (10, 12), (3, 5)])
+    assert got == [(0, 5), (10, 12)]
+
+
+def test_coalesce_is_idempotent_and_minimal():
+    rng = np.random.default_rng(0)
+    spans = [(int(a), int(a + w)) for a, w in
+             zip(rng.integers(0, 100, 50), rng.integers(0, 10, 50))]
+    once = coalesce_ranges(spans)
+    assert coalesce_ranges(once) == once
+    # disjoint, ascending, non-empty
+    for (a0, a1), (b0, b1) in zip(once, once[1:]):
+        assert a0 < a1 and b0 < b1 and a1 < b0
+
+
+# ---------------------------------------------------------------------------
+# read_seq_ranges
+# ---------------------------------------------------------------------------
+def test_read_seq_ranges_accounts_bytes_and_ops():
+    d = DiskModel()
+    d.read_seq_ranges([(0, 4), (10, 12)], unit_bytes=8)
+    assert d.stats.seq_read_bytes == (4 + 2) * 8
+    assert d.stats.seq_ops == 2  # one sequential read per range
+    assert d.stats.rand_read_bytes == 0
+
+
+def test_read_seq_ranges_empty_and_unit_bytes_default():
+    d = DiskModel()
+    d.read_seq_ranges([])
+    assert d.stats == IOStats()
+    d.read_seq_ranges([(5, 9)])  # unit_bytes=1
+    assert d.stats.seq_read_bytes == 4
+
+
+def test_read_seq_ranges_offsets_land_in_log():
+    d = DiskModel(keep_log=True, page_bytes=16)
+    d.read_seq_ranges([(4, 8)], unit_bytes=16)  # offset 4*16 = page 4
+    assert d.log == [(4, 4, "rs")]
+
+
+# ---------------------------------------------------------------------------
+# heatmap
+# ---------------------------------------------------------------------------
+def test_heatmap_empty_log_is_all_zero():
+    d = DiskModel(keep_log=True)
+    assert d.heatmap(n_bins=8) == [0] * 8
+
+
+def test_heatmap_bins_accesses_and_respects_max_page():
+    d = DiskModel(keep_log=True, page_bytes=1)
+    d.read_seq(4, offset=0)  # pages [0, 4)
+    d.read_rand(2, offset=6)  # pages [6, 8)
+    bins = d.heatmap(n_bins=8, max_page=8)
+    assert bins[0] > 0 and bins[6] > 0
+    assert sum(bins) >= 2
+    # a span covering everything touches every bin
+    d2 = DiskModel(keep_log=True, page_bytes=1)
+    d2.read_seq(64, offset=0)
+    assert all(v == 1 for v in d2.heatmap(n_bins=8, max_page=64))
+
+
+def test_heatmap_clamps_out_of_range_pages():
+    d = DiskModel(keep_log=True, page_bytes=1)
+    d.read_rand(1, offset=1000)  # beyond max_page
+    bins = d.heatmap(n_bins=4, max_page=10)
+    assert bins[-1] == 1  # clamped into the final bin
+
+
+def test_render_heatmap_shades_scale():
+    s = render_heatmap([0, 1, 10], width=3)
+    assert len(s) == 3 and s[0] == " " and s[2] == "@"
+
+
+# ---------------------------------------------------------------------------
+# modeled cost
+# ---------------------------------------------------------------------------
+def test_modeled_seconds_seq_vs_rand():
+    seq = DiskModel()
+    seq.read_seq(500_000_000)  # 1 s at 500 MB/s
+    rand = DiskModel()
+    rand.read_rand(500_000_000)  # ~122k page ops at 10k IOPS >> 1 s
+    assert seq.modeled_seconds() == pytest.approx(1.0)
+    assert rand.modeled_seconds() > 10 * seq.modeled_seconds()

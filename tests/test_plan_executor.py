@@ -1,0 +1,299 @@
+"""The plan/execute layer: ADS+'s new batched exact tier, the PP
+side-effect-free window path (regression for the old t_min/t_max
+save/restore mutation hack), and cross-index executor invariants."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ADSConfig,
+    ADSIndex,
+    CTree,
+    CTreeConfig,
+    RawStore,
+    StreamConfig,
+    StreamingIndex,
+    SummarizationConfig,
+    ed2,
+)
+
+CFG = SummarizationConfig(series_len=64, n_segments=8, card_bits=6)
+
+
+def _data(n=3000, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, 64)).astype(np.float32).cumsum(axis=1)
+
+
+def _queries(m=10, seed=99):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((m, 64)).astype(np.float32).cumsum(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# ADS+ batched exact tier (the index x tier matrix gap)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", ["full", "adaptive"])
+@pytest.mark.parametrize("k", [1, 7])
+def test_ads_knn_batch_exact_matches_brute_force(mode, k):
+    X, Q = _data(), _queries()
+    raw = RawStore(64)
+    ids = raw.append(X)
+    ads = ADSIndex(ADSConfig(summarization=CFG, leaf_size=256, mode=mode,
+                             query_leaf_size=64))
+    ads.insert_batch(X, ids)
+    vals, gids, stats = ads.knn_batch(Q, k=k, raw=raw)
+    for i, q in enumerate(Q):
+        bf = np.sort(ed2(q, X))[:k]
+        np.testing.assert_allclose(vals[i], bf, rtol=1e-4)
+        np.testing.assert_allclose(np.sort(ed2(q, X[gids[i]])), bf, rtol=1e-4)
+    assert stats.blocks_visited > 0
+
+
+@pytest.mark.parametrize("mode", ["full", "adaptive"])
+def test_ads_knn_batch_matches_scalar_loop(mode):
+    """Batch-vs-scalar parity: the batched path returns exactly the scalar
+    answers (both are batch-of-N/1 plans over the same executor)."""
+    X, Q = _data(2500, seed=3), _queries(8, seed=11)
+    raw = RawStore(64)
+    ids = raw.append(X)
+    ads = ADSIndex(ADSConfig(summarization=CFG, leaf_size=512, mode=mode,
+                             query_leaf_size=128))
+    ads.insert_batch(X, ids)
+    vals, gids, _ = ads.knn_batch(Q, k=6, raw=raw)
+    for i, q in enumerate(Q):
+        res, _ = ads.knn_exact(q, k=6, raw=raw)
+        np.testing.assert_allclose([d for d, _ in res], vals[i], rtol=1e-6)
+        assert [g for _, g in res] == [int(g) for g in gids[i]]
+
+
+def test_ads_knn_batch_window_filters_entries():
+    X = _data(2000, seed=5)
+    T = np.repeat(np.arange(20), 100).astype(np.int64)
+    raw = RawStore(64)
+    ids = raw.append(X)
+    ads = ADSIndex(ADSConfig(summarization=CFG, leaf_size=256))
+    ads.insert_batch(X, ids, ts=T)
+    Q = _queries(6, seed=7)
+    vals, gids, _ = ads.knn_batch(Q, k=3, raw=raw, window=(4, 9))
+    mask = (T >= 4) & (T <= 9)
+    for i, q in enumerate(Q):
+        bf = np.sort(ed2(q, X[mask]))[:3]
+        np.testing.assert_allclose(vals[i], bf, rtol=1e-4)
+        assert all(mask[g] for g in gids[i] if g >= 0)
+
+
+def test_ads_adaptive_batch_splits_touched_leaves():
+    """The plan's refine hook keeps ADS+'s query-time refinement: a batched
+    query over a skeletal tree splits the oversized leaves it touches."""
+    X = _data(3000)
+    raw = RawStore(64)
+    ids = raw.append(X)
+    ads = ADSIndex(ADSConfig(summarization=CFG, leaf_size=4096, mode="adaptive",
+                             query_leaf_size=128))
+    ads.insert_batch(X, ids)
+    before = ads.n_splits
+    vals, gids, _ = ads.knn_batch(_queries(4), k=3, raw=raw)
+    assert ads.n_splits > before
+    for i, q in enumerate(_queries(4)):
+        bf = np.sort(ed2(q, X))[:3]
+        np.testing.assert_allclose(vals[i], bf, rtol=1e-4)
+
+
+def test_ads_knn_batch_empty_index_and_empty_batch():
+    ads = ADSIndex(ADSConfig(summarization=CFG))
+    vals, gids, _ = ads.knn_batch(_queries(3), k=4)
+    assert (vals == np.inf).all() and (gids == -1).all()
+    X = _data(200)
+    raw = RawStore(64)
+    ads.insert_batch(X, raw.append(X))
+    vals, gids, _ = ads.knn_batch(np.zeros((0, 64), np.float32), k=4, raw=raw)
+    assert vals.shape == (0, 4) and gids.shape == (0, 4)
+
+
+def test_ads_knn_batch_kernel_backend_parity():
+    X, Q = _data(1500), _queries(5)
+    raw = RawStore(64)
+    ids = raw.append(X)
+    ads = ADSIndex(ADSConfig(summarization=CFG, leaf_size=256))
+    ads.insert_batch(X, ids)
+    v_np, g_np, _ = ads.knn_batch(Q, k=5, raw=raw, backend="numpy")
+    v_kr, g_kr, _ = ads.knn_batch(Q, k=5, raw=raw, backend="kernel")
+    np.testing.assert_allclose(v_np, v_kr, rtol=1e-6)
+    np.testing.assert_array_equal(g_np, g_kr)
+
+
+# ---------------------------------------------------------------------------
+# PP window queries are side-effect-free (regression: the old path saved,
+# overwrote and restored run.t_min/t_max around every scalar PP query)
+# ---------------------------------------------------------------------------
+def _build_pp(seed=1, n_batches=12, bsz=200):
+    idx = StreamingIndex(StreamConfig(scheme="PP", summarization=CFG,
+                                      buffer_entries=512, growth_factor=3,
+                                      block_size=128))
+    rng = np.random.default_rng(seed)
+    xs, ts = [], []
+    for b in range(n_batches):
+        x = rng.standard_normal((bsz, 64)).astype(np.float32).cumsum(axis=1)
+        t = np.full(bsz, b, np.int64)
+        idx.ingest(x, t)
+        xs.append(x)
+        ts.append(t)
+    return idx, np.concatenate(xs), np.concatenate(ts)
+
+
+def test_pp_window_knn_never_touches_run_metadata():
+    idx, X, T = _build_pp()
+    runs = idx.lsm.runs_newest_first()
+    saved = [(r.t_min, r.t_max) for r in runs]
+    q = _queries(1)[0]
+    for exact in (True, False):
+        res, _ = idx.window_knn(q, 3, 7, k=4, exact=exact)
+        assert res
+    idx.window_knn_batch(_queries(4), 3, 7, k=4)
+    idx.window_knn_approx_batch(_queries(4), 3, 7, k=4, n_blocks=2)
+    assert [(r.t_min, r.t_max) for r in runs] == saved
+    # and the answers are still exact under PP entry-level filtering
+    res, _ = idx.window_knn(q, 3, 7, k=4)
+    mask = (T >= 3) & (T <= 7)
+    bf = np.sort(ed2(q, X[mask]))[:4]
+    np.testing.assert_allclose([d for d, _ in res], bf, rtol=1e-4)
+
+
+def test_pp_concurrent_window_queries_do_not_corrupt_each_other():
+    """Two PP window queries with different windows running concurrently:
+    under the old mutation hack one thread's save/restore could clobber the
+    other's forced time range; plan-level flags make this race-free."""
+    idx, X, T = _build_pp(seed=2)
+    Q = _queries(6, seed=8)
+    windows = [(0, 4), (7, 11)]
+    results = {}
+    errors = []
+
+    def worker(wi):
+        try:
+            t0, t1 = windows[wi]
+            out = []
+            for q in Q:
+                res, _ = idx.window_knn(q, t0, t1, k=3)
+                out.append(res)
+            results[wi] = out
+        except Exception as e:  # pragma: no cover - failure reporting
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    for wi, (t0, t1) in enumerate(windows):
+        mask = (T >= t0) & (T <= t1)
+        for q, res in zip(Q, results[wi]):
+            bf = np.sort(ed2(q, X[mask]))[:3]
+            np.testing.assert_allclose([d for d, _ in res], bf, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# numerical hardening (review regressions)
+# ---------------------------------------------------------------------------
+def _adversarial(n, seed=0, offset=3000.0, spread=0.01):
+    """Large common offset + tiny relative distances: the f32
+    |q|^2 + |x|^2 - 2<q, x> cancellation trap."""
+    rng = np.random.default_rng(seed)
+    return (offset + spread * rng.standard_normal((n, 64))).astype(np.float32)
+
+
+def test_exact_tier_is_exact_under_f32_cancellation():
+    """knn_exact through the unflushed CLSM buffer (DenseSource) and a
+    built CTree run (BlockSource) must return the true neighbors even when
+    the f32 matmul-form distance cancels catastrophically — the slack-8
+    screen is an approximate-tier tool only."""
+    from repro.core import CLSM, CLSMConfig
+
+    X = _adversarial(500)
+    rng = np.random.default_rng(1)
+    q = X[17] + 0.001 * rng.standard_normal(64).astype(np.float32)
+    bf = ed2(q.astype(np.float64), X.astype(np.float64))
+    want_ids = set(map(int, np.argsort(bf)[:5]))
+    want_d = np.sort(bf)[:5]
+
+    # buffered (DenseSource) path
+    lsm = CLSM(CLSMConfig(summarization=CFG, buffer_entries=4096,
+                          materialized=True))
+    raw = RawStore(64)
+    lsm.insert(X, raw.append(X), np.zeros(500, np.int64))
+    assert lsm._buf_n == 500
+    res, _ = lsm.knn_exact(q, k=5, raw=raw)
+    assert set(g for _, g in res) == want_ids
+    np.testing.assert_allclose([d for d, _ in res], want_d, rtol=1e-5)
+
+    # built-run (BlockSource) path
+    raw2 = RawStore(64)
+    ct = CTree(CTreeConfig(summarization=CFG, block_size=128, materialized=True))
+    ct.bulk_build(X, raw2.append(X))
+    res, _ = ct.knn_exact(q, k=5, raw=raw2)
+    assert set(g for _, g in res) == want_ids
+    np.testing.assert_allclose([d for d, _ in res], want_d, rtol=1e-5)
+
+
+def test_ads_adaptive_split_patches_flat_cache_in_place():
+    """Query-time splits must refine the cached leaf partition, not throw
+    it away — the next query plans over the children without an O(N)
+    rebuild."""
+    X = _data(3000)
+    raw = RawStore(64)
+    ids = raw.append(X)
+    ads = ADSIndex(ADSConfig(summarization=CFG, leaf_size=4096, mode="adaptive",
+                             query_leaf_size=128))
+    ads.insert_batch(X, ids)
+    flat_before = ads._flat()
+    ads.knn_exact(_queries(1)[0], k=1, raw=raw)
+    assert ads.n_splits > 0
+    assert ads._flat_cache is flat_before  # same cache object, patched
+    blocks = ads._flat_blocks(flat_before)
+    assert all(n.is_leaf for n, _ in blocks)  # split parents dropped
+    # position partition is still a disjoint cover of all entries
+    allpos = np.sort(np.concatenate([p for _, p in blocks]))
+    np.testing.assert_array_equal(allpos, np.arange(3000))
+    # and a fresh query over the patched cache stays exact
+    q = _queries(2, seed=17)[1]
+    res, _ = ads.knn_exact(q, k=3, raw=raw)
+    bf = np.sort(ed2(q, X))[:3]
+    np.testing.assert_allclose([d for d, _ in res], bf, rtol=1e-4)
+    # inserts DO invalidate (arrays grow)
+    extra = _data(50, seed=9)
+    ads.insert_batch(extra, raw.append(extra))
+    assert ads._flat_cache is None
+
+
+# ---------------------------------------------------------------------------
+# executor invariants
+# ---------------------------------------------------------------------------
+def test_executor_rejects_unknown_shard_mode():
+    X = _data(300)
+    raw = RawStore(64)
+    ct = CTree(CTreeConfig(summarization=CFG, block_size=128, materialized=True))
+    ct.bulk_build(X, raw.append(X))
+    with pytest.raises(ValueError, match="shard"):
+        ct.knn_batch(_queries(2), k=3, raw=raw, shard="tpu-pod")
+
+
+def test_scalar_wrappers_share_executor_answers():
+    """Scalar knn_exact == row 0 of a batch-of-1 knn_batch, bit for bit,
+    on every index (they are the same plan)."""
+    X = _data(1200, seed=4)
+    raw = RawStore(64)
+    ids = raw.append(X)
+    q = _queries(1, seed=13)[0]
+
+    ct = CTree(CTreeConfig(summarization=CFG, block_size=256, materialized=True))
+    ct.bulk_build(X, ids)
+    ads = ADSIndex(ADSConfig(summarization=CFG, leaf_size=256))
+    ads.insert_batch(X, ids)
+    for index in (ct, ads):
+        res, _ = index.knn_exact(q, k=5, raw=raw)
+        vals, gids, _ = index.knn_batch(q[None], k=5, raw=raw)
+        assert [d for d, _ in res] == [float(v) for v in vals[0]]
+        assert [g for _, g in res] == [int(g) for g in gids[0]]

@@ -45,3 +45,73 @@ def test_describe_renders():
     rec = recommend(Scenario(streaming=True, n_series=1000, uses_windows=True))
     text = rec.describe()
     assert "CLSM" in text and "because" in text
+
+
+# ---------------------------------------------------------------------------
+# serving-tier node: tier + n_blocks from target recall / latency budget
+# ---------------------------------------------------------------------------
+def test_no_targets_keeps_exact_tier():
+    rec = recommend(Scenario(streaming=False, n_series=10**6))
+    assert rec.tier == "exact" and rec.n_blocks == 0
+
+
+def test_target_recall_one_requires_exact_tier():
+    rec = recommend(Scenario(streaming=False, n_series=10**6, target_recall=1.0))
+    assert rec.tier == "exact"
+    assert any("exact tier" in r for r in rec.rationale)
+
+
+def test_relaxed_recall_picks_approx_tier():
+    rec = recommend(Scenario(streaming=True, n_series=10**7, uses_windows=True,
+                             target_recall=0.8))
+    assert rec.tier == "approx" and rec.n_blocks >= 1
+
+
+def test_higher_target_recall_needs_more_blocks():
+    lo = recommend(Scenario(streaming=False, n_series=10**6, target_recall=0.5))
+    hi = recommend(Scenario(streaming=False, n_series=10**6, target_recall=0.95))
+    assert lo.tier == hi.tier == "approx"
+    assert hi.n_blocks > lo.n_blocks
+
+
+def test_tight_latency_budget_flips_to_approx_and_caps_blocks():
+    # exact modeled cost for 10M series >> 0.05 ms -> approx tier
+    tight = recommend(Scenario(streaming=False, n_series=10**7,
+                               latency_budget_ms=0.05))
+    assert tight.tier == "approx"
+    # and the budget caps the sequential read depth
+    loose = recommend(Scenario(streaming=False, n_series=10**7,
+                               target_recall=0.95, latency_budget_ms=100.0))
+    capped = recommend(Scenario(streaming=False, n_series=10**7,
+                                target_recall=0.95, latency_budget_ms=0.3))
+    assert capped.n_blocks <= loose.n_blocks
+
+
+def test_conflicting_recall_and_latency_targets_warn():
+    """When the latency cap pushes n_blocks below what the recall target
+    needs, the rationale must say so instead of silently citing the
+    pre-cap recall."""
+    rec = recommend(Scenario(streaming=False, n_series=10**7,
+                             target_recall=0.95, latency_budget_ms=0.3))
+    from repro.core.recommender import _approx_recall_model
+    if _approx_recall_model(rec.n_blocks) < 0.95:
+        assert any("WARNING" in r for r in rec.rationale)
+
+
+def test_generous_latency_budget_keeps_exact():
+    rec = recommend(Scenario(streaming=False, n_series=10**4,
+                             latency_budget_ms=100.0))
+    assert rec.tier == "exact"
+
+
+def test_query_batch_amortization_in_rationale():
+    rec = recommend(Scenario(streaming=True, n_series=10**6, uses_windows=True,
+                             target_recall=0.7, query_batch=64))
+    assert rec.tier == "approx"
+    assert any("coalesced" in r or "amortiz" in r for r in rec.rationale)
+
+
+def test_approx_tier_renders_in_describe():
+    rec = recommend(Scenario(streaming=True, n_series=10**6, uses_windows=True,
+                             target_recall=0.8))
+    assert "approx tier" in rec.describe()
