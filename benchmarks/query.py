@@ -75,16 +75,30 @@ def main(smoke: bool = False):
     row("query/index_bytes_nonmat", 0.0, f"bytes={ct_n}")
     row("query/index_bytes_mat", 0.0, f"bytes={ct_m};ratio={ct_m / max(ct_n, 1):.1f}")
 
-    # batched top-k engine: batch-size sweep vs the per-query loop
+    # batched top-k engine: batch-size sweep vs the per-query loop. Each
+    # config also records the verification engine's compile/transfer costs
+    # (trace_count + host<->device bytes during the measured calls), so
+    # compile-churn or transfer regressions show up in the artifact.
+    from repro.core.verify_engine import get_engine
+
+    engine = get_engine()
     QB = random_walk(max(BATCH_SIZES), LEN, seed=7)
     for name in ("ctree_mat", "ctree_nonmat"):
         idx, raw, disk = variants[name]
-        idx.knn_batch(QB[:4], k=10, raw=raw)  # warm any jit/caches
+        for bsz in batch_sizes:  # warm the trace cache across the sweep's
+            idx.knn_batch(QB[:bsz], k=10, raw=raw)  # shape buckets
         for bsz in batch_sizes:
             Qb = QB[:bsz]
-            us_batch = timeit(lambda: idx.knn_batch(Qb, k=10, raw=raw), repeat=2)
+            # small batches are sub-20ms calls where 2-sample medians drift
+            # between the batch and loop windows; more reps stabilize them
+            reps = 7 if bsz <= 8 else 3
+            es0 = dict(engine.stats)
+            us_batch = timeit(lambda: idx.knn_batch(Qb, k=10, raw=raw),
+                              repeat=reps)
+            es1 = dict(engine.stats)
             us_loop = timeit(
-                lambda: [idx.knn_exact(q, k=10, raw=raw) for q in Qb], repeat=2
+                lambda: [idx.knn_exact(q, k=10, raw=raw) for q in Qb],
+                repeat=reps,
             )
             disk.reset()
             _, _, st = idx.knn_batch(Qb, k=10, raw=raw)
@@ -94,6 +108,9 @@ def main(smoke: bool = False):
                 f"speedup_vs_loop={us_loop / max(us_batch, 1e-9):.2f};"
                 f"loop_us_per_q={us_loop / bsz:.1f};"
                 f"verified={st.entries_verified};"
+                f"trace_count={es1['traces'] - es0['traces']};"
+                f"h2d_bytes={es1['h2d_bytes'] - es0['h2d_bytes']};"
+                f"d2h_bytes={es1['d2h_bytes'] - es0['d2h_bytes']};"
                 f"modeled_io_s={disk.modeled_seconds() / bsz:.5f}",
             )
 

@@ -22,6 +22,15 @@ ROW_RE = re.compile(r"^[^,\s][^,]*,\d+(\.\d+)?,[^,]*(;[^,]*)*$")
 ARTIFACT_MODS = ("query", "streaming")
 
 
+def _engine_summary() -> dict:
+    """Cumulative verification-engine counters (compile churn + transfer
+    volume) for the artifact, so perf diffs can tell compute regressions
+    from compile/transfer regressions."""
+    from repro.core.verify_engine import get_engine
+
+    return dict(get_engine().stats)
+
+
 def _write_artifact(name: str, rows: list, out_dir: str, smoke: bool) -> None:
     # smoke artifacts get their own (gitignored) name so CI runs never
     # overwrite the committed perf trajectory
@@ -31,6 +40,7 @@ def _write_artifact(name: str, rows: list, out_dir: str, smoke: bool) -> None:
         "benchmark": name,
         "smoke": smoke,  # smoke numbers are schema checks, not perf points
         "unix_time": int(time.time()),
+        "verify_engine": _engine_summary(),
         "rows": rows,
     }
     with open(path, "w") as f:

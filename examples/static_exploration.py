@@ -106,6 +106,10 @@ def main():
     ct = CTree(CTreeConfig(summarization=CFG, block_size=1024,
                            materialized=True), disk)
     ct.bulk_build(X, ids)
+    # knn_batch / knn_approx_batch default to backend="device" since PR 4:
+    # verification runs as fused passes over a device-resident arena
+    # (answers identical to backend="numpy" — certified, with a host
+    # fallback below the engine's size floors)
     _, exact_ids, _ = ct.knn_batch(queries, k=5, raw=raw)
     seek_bins = None
     for n_blocks in (1, 2, 4, 8):

@@ -228,6 +228,23 @@ class ADSIndex:
         """The live (node, positions) leaf partition — split parents drop."""
         return [e for e in flat["blocks"] if e[0] is not None]
 
+    def _flat_device_view(self, flat: dict):
+        """Device arena over the flattened leaf space (full mode): the
+        per-leaf series concatenate once into the flat position space and
+        upload once per flat cache generation (inserts rebuild the cache;
+        query-time splits keep positions stable, so the arena survives)."""
+        if flat.get("_dev_view") is None:
+            from .verify_engine import get_engine  # lazy: numpy paths stay jax-free
+
+            L = self.cfg.summarization.series_len
+            table = (
+                np.concatenate(flat["series"])
+                if flat["series"]
+                else np.zeros((0, L), np.float32)
+            )
+            flat["_dev_view"] = get_engine().build_view(table)
+        return flat["_dev_view"]
+
     def _flat_ops(self, flat: dict, raw: Optional[RawStore], *,
                   screen: bool) -> SourceOps:
         """Executor accessors over the flattened leaf space (I/O accounted
@@ -249,12 +266,35 @@ class ADSIndex:
                 out[sel] = data
             return out
 
+        def fetch_account(pos: np.ndarray) -> None:
+            # the modeled I/O of ``fetch`` without the gather (device path)
+            if self.cfg.mode != "full":
+                raw.account_fetch(flat["ids"][pos])
+                return
+            leaf_of = np.searchsorted(offsets, pos, side="right") - 1
+            for _, cnt in zip(*np.unique(leaf_of, return_counts=True)):
+                self.disk.read_rand(int(cnt) * L * 4)
+
         def index_read(pos: np.ndarray) -> None:
             # one node-page touch + one summarization read per leaf visited
             leaf_of = np.searchsorted(offsets, pos, side="right") - 1
             for li, cnt in zip(*np.unique(leaf_of, return_counts=True)):
                 self.disk.read_rand(self.disk.page_bytes)
                 self.disk.read_rand(int(max(1, cnt)) * (self._w + 8))
+
+        # device arena: full mode owns the flat table (row == flat position);
+        # adaptive mode verifies against the RawStore arena (row == global id)
+        if self.cfg.mode == "full":
+            device_view = lambda: self._flat_device_view(flat)
+            table_rows = None  # identity
+            table_ids = lambda r: flat["ids"][r]
+        elif raw is not None:
+            device_view = raw.device_view
+            table_rows = lambda p: flat["ids"][p]
+            table_ids = lambda r: r  # raw rows ARE global ids
+        else:
+            device_view = table_rows = table_ids = None
+            fetch_account = None
 
         return SourceOps(
             ids=flat["ids"],
@@ -263,6 +303,10 @@ class ADSIndex:
             index_read=index_read,
             sax=flat["sax"] if screen else None,
             scfg=self.cfg.summarization,
+            device_view=device_view,
+            table_rows=table_rows,
+            table_ids=table_ids,
+            fetch_account=fetch_account,
         )
 
     def _make_refine(self, flat: dict, blocks_tbl: list, qp: np.ndarray):
@@ -389,7 +433,7 @@ class ADSIndex:
         return state_to_list(vals[0], gids[0]), stats
 
     def knn_batch(self, Q, k=1, *, raw: Optional[RawStore] = None, window=None,
-                  backend="numpy", shard=None, mesh=None):
+                  backend="device", shard=None, mesh=None):
         """Batched exact kNN: ((m, k) d2 ascending, (m, k) ids), stats.
 
         The iSAX leaves traverse through the same executor as every
@@ -412,7 +456,7 @@ class ADSIndex:
         return state_to_list(vals[0], gids[0]), stats
 
     def knn_approx_batch(self, Q, k=1, *, raw: Optional[RawStore] = None,
-                         window=None):
+                         window=None, backend="device"):
         """Batched approximate kNN: descend every query to its leaf, then
         verify each DISTINCT leaf once against its whole query group.
 
@@ -428,7 +472,7 @@ class ADSIndex:
         """
         Q = np.asarray(Q, np.float32)
         plan = self.plan(Q, tier="approx", raw=raw, window=window)
-        (vals, gids), stats = execute(plan, Q, k)
+        (vals, gids), stats = execute(plan, Q, k, backend=backend)
         return vals, gids, stats
 
     def index_bytes(self) -> int:

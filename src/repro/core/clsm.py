@@ -165,7 +165,7 @@ class CLSM:
         raw: Optional[RawStore] = None,
         window: Optional[tuple[int, int]] = None,
         time_skip: bool = True,
-        backend: str = "numpy",
+        backend: str = "device",
     ) -> QueryPlan:
         """Compile a query batch into one plan over buffer + live runs.
 
@@ -208,7 +208,7 @@ class CLSM:
         return state_to_list(vals[0], gids[0]), stats
 
     def knn_batch(self, Q, k=1, *, raw: Optional[RawStore] = None, window=None,
-                  backend="numpy", time_skip=True, shard=None, mesh=None):
+                  backend="device", time_skip=True, shard=None, mesh=None):
         """Batched exact kNN across buffer + every live run.
 
         The batched best-so-far state threads through the runs newest-first
@@ -237,7 +237,7 @@ class CLSM:
         return state_to_list(vals[0], gids[0]), stats
 
     def knn_approx_batch(self, Q, k=1, *, n_blocks=1, raw=None, window=None,
-                         backend="numpy", time_skip=True):
+                         backend="device", time_skip=True):
         """Batched approximate kNN across buffer + every live run.
 
         The (m, k) best-so-far state folds over the runs newest-first — the

@@ -35,6 +35,7 @@ from typing import Optional
 import numpy as np
 
 from .execute import (
+    BACKENDS,
     empty_topk_state,
     execute,
     heap_to_sorted,
@@ -72,6 +73,7 @@ class RawStore:
         self._chunks: list[np.ndarray] = []
         self._data: Optional[np.ndarray] = None
         self._norms2: Optional[np.ndarray] = None
+        self._dev_view = None  # device arena over the whole store (lazy)
         self.n = 0
 
     def append(self, series: np.ndarray) -> np.ndarray:
@@ -96,13 +98,31 @@ class RawStore:
     def fetch(self, ids: np.ndarray) -> np.ndarray:
         """Random fetch by id (the non-materialized query path)."""
         ids = np.asarray(ids)
+        self.account_fetch(ids)
+        return self._all()[ids]
+
+    def account_fetch(self, ids: np.ndarray) -> None:
+        """The modeled I/O of :meth:`fetch` without the gather — the device
+        verification path reads its arena but pays the same modeled I/O."""
+        ids = np.asarray(ids)
         row = self.series_len * 4
         if self.disk.keep_log and ids.size:
             for i in ids:  # scattered page touches for the heat map
                 self.disk.read_rand(row, offset=int(i) * row)
         else:
             self.disk.read_rand(ids.size * row)
-        return self._all()[ids]
+
+    def device_view(self):
+        """Device arena over the whole store (raw row == global id), built
+        once and extended in place as the append-only store grows."""
+        from .verify_engine import get_engine  # lazy: keeps numpy paths jax-free
+
+        eng = get_engine()
+        if self._dev_view is None:
+            self._dev_view = eng.build_view(self._all())
+        elif self._dev_view.n < self.n:
+            self._dev_view = eng.extend_view(self._dev_view, self._all())
+        return self._dev_view
 
     def scan(self) -> np.ndarray:
         """Full sequential scan (used by builds)."""
@@ -139,6 +159,7 @@ class SortedRun:
     t_min: int = 0
     t_max: int = 0
     _norms2: Optional[np.ndarray] = None  # lazy |x|^2 cache (materialized runs)
+    _dev_view: Optional[object] = None  # lazy device arena (materialized runs)
 
     @property
     def n(self) -> int:
@@ -250,6 +271,16 @@ class SortedRun:
             self._norms2 = np.einsum("ij,ij->i", self.series, self.series)
         return self._norms2
 
+    def device_view(self):
+        """Device arena over the materialized entries (uploaded once — runs
+        are immutable after build, so the view never invalidates)."""
+        assert self.series is not None
+        if self._dev_view is None:
+            from .verify_engine import get_engine  # lazy: numpy paths stay jax-free
+
+            self._dev_view = get_engine().build_view(self.series)
+        return self._dev_view
+
     # ------------------------------------------------------------------ query
     def _entry_bytes(self) -> int:
         per = self.cfg.key_words * 4 + self.cfg.n_segments + 8
@@ -278,6 +309,15 @@ class SortedRun:
             data = raw.fetch(self.ids[idx])
         return data
 
+    def _account_entries(
+        self, idx: np.ndarray, disk: Optional[DiskModel], sequential: bool
+    ) -> None:
+        """The modeled I/O of :meth:`_fetch_entries` for a materialized run
+        without the host gather (the device path reads its arena)."""
+        if disk is not None:
+            nbytes = idx.size * self.cfg.series_len * 4
+            (disk.read_seq if sequential else disk.read_rand)(nbytes)
+
     def _ops(self, raw: Optional[RawStore], disk: Optional[DiskModel],
              *, sequential: bool, screen: bool) -> SourceOps:
         """Physical accessor bundle for the executor (all I/O accounted)."""
@@ -290,6 +330,21 @@ class SortedRun:
         if disk is not None:
             per = self.cfg.key_words * 4 + self.cfg.n_segments
             index_read = lambda p: disk.read_rand(p.size * per)
+        # device arena accessors: materialized runs own their arena (table
+        # row == entry position); non-materialized runs verify against the
+        # RawStore's arena (table row == global id)
+        if self.materialized:
+            device_view = self.device_view
+            table_rows = None  # identity
+            table_ids = lambda r: self.ids[r]
+            fetch_account = lambda p: self._account_entries(p, disk, sequential)
+        elif raw is not None:
+            device_view = raw.device_view
+            table_rows = lambda p: self.ids[p]
+            table_ids = lambda r: r  # raw rows ARE global ids
+            fetch_account = lambda p: raw.account_fetch(self.ids[p])
+        else:
+            device_view = table_rows = table_ids = fetch_account = None
         return SourceOps(
             ids=self.ids,
             ts=self.ts,
@@ -299,6 +354,10 @@ class SortedRun:
             scfg=self.cfg,
             norms2=norms2,
             series=self.series,
+            device_view=device_view,
+            table_rows=table_rows,
+            table_ids=table_ids,
+            fetch_account=fetch_account,
         )
 
     def plan_exact(
@@ -349,7 +408,7 @@ class SortedRun:
         n_blocks: int = 1,
         raw: Optional[RawStore] = None,
         disk: Optional[DiskModel] = None,
-        backend: str = "numpy",
+        backend: str = "device",
     ) -> RangeSource:
         """Approximate-tier candidate generation: each query is answered
         from the ``n_blocks`` blocks adjacent to its sortable-key position.
@@ -429,7 +488,7 @@ class SortedRun:
         state: Optional[tuple[np.ndarray, np.ndarray]] = None,
         stats: Optional[QueryStats] = None,
         blocks_per_round: int = 32,
-        backend: str = "numpy",
+        backend: str = "device",
         time_skip: bool = True,
     ) -> tuple[tuple[np.ndarray, np.ndarray], QueryStats]:
         """Exact kNN for a whole query batch in one pass over this run.
@@ -442,7 +501,7 @@ class SortedRun:
         ``knn_exact``. ``time_skip=False`` disables the run-level time
         range skip while keeping per-entry window filtering (PP semantics).
         """
-        if backend not in ("numpy", "kernel"):
+        if backend not in BACKENDS:
             raise ValueError(f"unknown batch verify backend {backend!r}")
         Q = np.asarray(Q, np.float32)
         m = Q.shape[0]
@@ -496,7 +555,7 @@ class SortedRun:
         window: Optional[tuple[int, int]] = None,
         state: Optional[tuple[np.ndarray, np.ndarray]] = None,
         stats: Optional[QueryStats] = None,
-        backend: str = "numpy",
+        backend: str = "device",
     ) -> tuple[tuple[np.ndarray, np.ndarray], QueryStats]:
         """Approximate kNN for a whole query batch — the batched form of
         ``knn_approx`` (same per-query answers, shared physical work).
@@ -506,7 +565,7 @@ class SortedRun:
         one shared top-k pass per distinct span. ``state``/``stats`` thread
         across runs exactly like ``knn_batch`` (CLSM folds one state over
         all levels)."""
-        if backend not in ("numpy", "kernel"):
+        if backend not in BACKENDS:
             raise ValueError(f"unknown batch verify backend {backend!r}")
         Q = np.asarray(Q, np.float32)
         m = Q.shape[0]
@@ -659,7 +718,7 @@ class CTree:
         n_blocks: int = 1,
         raw: Optional[RawStore] = None,
         window: Optional[tuple[int, int]] = None,
-        backend: str = "numpy",
+        backend: str = "device",
     ) -> QueryPlan:
         """Compile a query batch into a declarative plan: the sorted run's
         candidate source (exact blocks or approximate spans) plus one dense
@@ -688,7 +747,7 @@ class CTree:
         )
         return state_to_list(vals[0], gids[0]), stats
 
-    def knn_batch(self, Q, k=1, *, raw=None, window=None, backend="numpy",
+    def knn_batch(self, Q, k=1, *, raw=None, window=None, backend="device",
                   shard=None, mesh=None):
         """Batched exact kNN: ((m, k) d2 ascending, (m, k) ids), stats.
 
@@ -711,7 +770,7 @@ class CTree:
         return state_to_list(vals[0], gids[0]), stats
 
     def knn_approx_batch(self, Q, k=1, *, n_blocks=1, raw=None, window=None,
-                         backend="numpy"):
+                         backend="device"):
         """Batched approximate kNN: ((m, k) d2 ascending, (m, k) ids), stats.
 
         Per-query answers match a loop of ``knn_approx`` at the same
@@ -721,7 +780,7 @@ class CTree:
         subset of the exact ``knn_batch`` answer — only each query's
         ``n_blocks`` adjacent blocks are verified, so ``n_blocks`` trades
         sequential bytes read for recall@k. Unfilled slots are (inf, -1)."""
-        if backend not in ("numpy", "kernel"):
+        if backend not in BACKENDS:
             raise ValueError(f"unknown batch verify backend {backend!r}")
         Q = np.asarray(Q, np.float32)
         plan = self.plan(Q, tier="approx", n_blocks=n_blocks, raw=raw,

@@ -8,9 +8,17 @@ be copied into every ``knn_*`` method lives here exactly once:
 * the adaptive best-first block traversal of the exact tier (seed pass +
   bounded rounds, entry-level MINDIST screening, ADS+'s query-time leaf
   refinement as a plan hook);
-* candidate verification as one f32-sgemm screen + exact f64 re-rank per
-  pass (``backend="kernel"`` launches the ``topk_ed`` Pallas kernel
-  instead);
+* candidate verification as one fused DEVICE pass per round (the default
+  ``backend="device"``): the source's table lives in a device arena
+  (:mod:`repro.core.verify_engine`), each pass gathers the round's rows on
+  device, screens them in f32 matmul form against cached norms, selects a
+  top-k slate in-kernel, and only the tiny certified slate crosses back for
+  the exact f64 re-rank — one launch instead of einsum + argpartition +
+  host gather, with shape-bucketed traces so steady-state serving never
+  retraces. ``backend="numpy"`` is the retained host twin (one f32-sgemm
+  screen + exact f64 re-rank per pass; also the fallback below the device
+  size floor and for sources without arenas); ``backend="kernel"`` launches
+  the ``topk_ed`` Pallas kernel per pass (the pre-engine opt-in path);
 * folding of the batched (m, k) best-so-far state across sources with
   :func:`merge_topk_state` — the array analogue of the per-query bsf heap.
 
@@ -45,6 +53,8 @@ from .plan import (
     window_mask,
 )
 from .summarization import paa
+
+BACKENDS = ("device", "numpy", "kernel")
 
 
 # ---------------------------------------------------------------------------
@@ -217,6 +227,53 @@ def _screen_topk_slack(
 
 
 # ---------------------------------------------------------------------------
+# the device verification path (the default backend)
+# ---------------------------------------------------------------------------
+def _device_ready(ops, n_candidates: int, backend: str, m: int) -> bool:
+    """Route this pass to the device engine? Requires the source to expose
+    an arena and the pass to clear the candidate/batch size floors — below
+    them the launch overhead rivals the whole host screen, so the host
+    tail runs instead (answers are identical either way)."""
+    if backend != "device" or ops.device_view is None:
+        return False
+    from .verify_engine import (  # lazy: host path stays jax-free
+        MIN_DEVICE_BATCH,
+        MIN_DEVICE_CANDIDATES,
+    )
+
+    return n_candidates >= MIN_DEVICE_CANDIDATES and m >= MIN_DEVICE_BATCH
+
+
+def _account_fetch(ops, pos: np.ndarray) -> None:
+    """Modeled-I/O accounting for a device-verified pass: the engine reads
+    the arena, not the store, but serving still pays the host engine's
+    modeled I/O so stats and heat maps stay comparable."""
+    if ops.fetch_account is not None:
+        ops.fetch_account(pos)
+    elif ops.fetch is not None:  # pragma: no cover - plumbing gap fallback
+        ops.fetch(pos)
+
+
+def _device_topk(
+    Q: np.ndarray, ops, pos: np.ndarray, k: int, *, exact: bool
+) -> tuple[np.ndarray, np.ndarray]:
+    """One fused device pass over the entries at ``pos``: arena gather +
+    f32 screen + in-kernel slate selection, host f64 re-rank of the slate,
+    error-bound certification with host fallback. Returns ((m, kk) exact
+    d2, (m, kk) GLOBAL ids, -1 padded)."""
+    from .verify_engine import get_engine  # lazy: host path stays jax-free
+
+    view = ops.device_view()
+    trows = ops.table_rows(pos) if ops.table_rows is not None else pos
+    nv, nrows = get_engine().screen_topk(view, trows, Q, k, exact=exact)
+    if ops.table_ids is not None:
+        gids = np.where(nrows >= 0, ops.table_ids(np.maximum(nrows, 0)), -1)
+    else:
+        gids = nrows
+    return nv, gids
+
+
+# ---------------------------------------------------------------------------
 # the executor
 # ---------------------------------------------------------------------------
 def execute(
@@ -226,7 +283,7 @@ def execute(
     *,
     state: Optional[tuple[np.ndarray, np.ndarray]] = None,
     stats: Optional[QueryStats] = None,
-    backend: str = "numpy",
+    backend: str = "device",
     blocks_per_round: int = 32,
     shard: Optional[str] = None,
     mesh=None,
@@ -249,7 +306,7 @@ def execute(
     (queries x runs 2-D ``shard_map``), host-re-ranked to match the
     single-device engine; requires block/dense sources only.
     """
-    if backend not in ("numpy", "kernel"):
+    if backend not in BACKENDS:
         raise ValueError(f"unknown batch verify backend {backend!r}")
     if shard not in (None, "none", "mesh"):
         raise ValueError(f"unknown shard mode {shard!r}")
@@ -337,8 +394,14 @@ def _exec_blocks(src: BlockSource, plan, Q, k, vals, ids, stats, backend,
     qp = None
     if ops.sax is not None and m <= 8:
         qp = np.asarray(paa(Q, ops.scfg))  # (m, w) for the entry screen
-    if m == 1:
-        blocks_per_round = 1
+    # Small batches start at ONE block per round — the radius re-checks
+    # before every block, exactly like the pre-plan scalar loop — then the
+    # round size doubles: once the seed + first rounds have tightened the
+    # radii, remaining blocks mostly prune, and grouping what survives
+    # amortizes per-round overhead (and device launches) instead of paying
+    # it per block. Verifying a few extra blocks per round can only confirm
+    # the exact answer, so answers are invariant to the round structure.
+    round_cap = 1 if m <= 8 else blocks_per_round
 
     def try_refine(sel: np.ndarray) -> bool:
         nonlocal lb, done, replaced
@@ -383,14 +446,20 @@ def _exec_blocks(src: BlockSource, plan, Q, k, vals, ids, stats, backend,
             pos = pos[keep]
         if pos.size == 0:
             return
-        data = ops.fetch(pos)
         stats.entries_verified += int(pos.size)
-        if backend == "kernel":
-            # ONE all-pairs topk_ed Pallas launch per (source, batch, pass)
-            nv, ni = _kernel_topk_dists(Q, data, k)
+        if _device_ready(ops, pos.size, backend, Q.shape[0]):
+            # ONE fused arena pass (gather + screen + in-kernel select);
+            # only the certified slate comes back for the f64 re-rank
+            _account_fetch(ops, pos)
+            nv, gids = _device_topk(Q, ops, pos, k, exact=True)
         else:
-            nv, ni = _screen_topk_exact(Q, data, k)
-        gids = np.where(ni >= 0, ops.ids[pos][np.maximum(ni, 0)], -1)
+            data = ops.fetch(pos)
+            if backend == "kernel":
+                # ONE all-pairs topk_ed Pallas launch per (source, batch, pass)
+                nv, ni = _kernel_topk_dists(Q, data, k)
+            else:
+                nv, ni = _screen_topk_exact(Q, data, k)
+            gids = np.where(ni >= 0, ops.ids[pos][np.maximum(ni, 0)], -1)
         vals, ids = merge_topk_state(vals, ids, nv, gids)
 
     # seed pass: every active query's single best-bounded block — tightens
@@ -418,10 +487,11 @@ def _exec_blocks(src: BlockSource, plan, Q, k, vals, ids, stats, backend,
         if todo.size == 0:
             break
         todo = todo[np.argsort(lb[:, todo].min(axis=0), kind="stable")]
-        chunk = todo[:blocks_per_round]
+        chunk = todo[:round_cap]
         if try_refine(chunk):
             continue
         verify(chunk)
+        round_cap = min(round_cap * 2, blocks_per_round)  # adaptive growth
 
     # per-query logical accounting, comparable to summed scalar stats
     worst = vals[:, -1]
@@ -456,6 +526,20 @@ def _exec_range(src: RangeSource, plan, Q, k, vals, ids, stats, backend):
     if upos.size == 0:
         return vals, ids
     stats.entries_verified += int(upos.size)
+    spans_u, inv = np.unique(np.stack([lo, hi], axis=1), axis=0, return_inverse=True)
+    # take the no-fetch device route only when some span group can actually
+    # clear the engine's floors — otherwise building/uploading an arena just
+    # to read its host mirror would cost more than the fetch it avoids
+    use_dev = (
+        backend == "device"
+        and ops.device_view is not None
+        and any(
+            _device_ready(ops, int(np.searchsorted(upos, ghi)
+                                   - np.searchsorted(upos, glo)),
+                          backend, int((inv == g).sum()))
+            for g, (glo, ghi) in enumerate(spans_u)
+        )
+    )
     if ops.series is not None and upos.size == sum(r1 - r0 for r0, r1 in ranges):
         # contiguous materialized ranges: slice views per group below — no
         # 10s-of-MB union gather; only the I/O accounting happens here
@@ -463,10 +547,15 @@ def _exec_range(src: RangeSource, plan, Q, k, vals, ids, stats, backend):
         gid_u = None
         if src.read_payload_ranges is not None:
             src.read_payload_ranges(ranges)
+    elif use_dev:
+        # device path: the engine reads the arena; only the modeled I/O of
+        # the sequential range fetch happens host-side
+        data_u = None
+        gid_u = None
+        _account_fetch(ops, upos)
     else:
         data_u = ops.fetch(upos)  # (U, n)
         gid_u = ops.ids[upos]
-    spans_u, inv = np.unique(np.stack([lo, hi], axis=1), axis=0, return_inverse=True)
     xsq_u = None
     if backend != "kernel" and data_u is not None and ops.norms2 is not None:
         xsq_u = ops.norms2(upos)  # cached |x|^2: nothing union-sized recomputed
@@ -475,9 +564,21 @@ def _exec_range(src: RangeSource, plan, Q, k, vals, ids, stats, backend):
         j0, j1 = np.searchsorted(upos, (glo, ghi))
         if j0 == j1:
             continue
-        if data_u is None:  # contiguous materialized range: a view
-            sub = ops.series[glo:ghi]
+        pos_g = upos[j0:j1]
+        if _device_ready(ops, j1 - j0, backend, qidx.size):
+            # fused arena pass for this distinct span's query group; the
+            # approx tier keeps its slack-screen fallback semantics
+            nv, gi = _device_topk(Q[qidx], ops, pos_g, k, exact=False)
+            mv, mi = merge_topk_state(vals[qidx], ids[qidx], nv, gi)
+            vals[qidx], ids[qidx] = mv, mi
+            continue
+        if data_u is None and ops.series is not None:
+            sub = ops.series[glo:ghi]  # contiguous materialized: a view
             gid = ops.ids[glo:ghi]
+        elif data_u is None:  # small device-tier group: host tail from the
+            view = ops.device_view()  # arena's host mirror, no store fetch
+            sub = view.host[ops.table_rows(pos_g) if ops.table_rows else pos_g]
+            gid = ops.ids[pos_g]
         else:
             sub = data_u[j0:j1]
             gid = gid_u[j0:j1]
@@ -485,8 +586,10 @@ def _exec_range(src: RangeSource, plan, Q, k, vals, ids, stats, backend):
             nv, ni = _kernel_topk_dists(Q[qidx], sub, k)
             gi = np.where(ni >= 0, gid[np.maximum(ni, 0)], -1)
         else:
-            if data_u is None:
+            if data_u is None and ops.series is not None:
                 xsq_g = ops.norms2(np.arange(glo, ghi)) if ops.norms2 else None
+            elif data_u is None:
+                xsq_g = ops.norms2(pos_g) if ops.norms2 else None
             else:
                 xsq_g = None if xsq_u is None else xsq_u[j0:j1]
             nv, ni = _screen_topk_slack(Q[qidx], sub, k, xsq=xsq_g)
@@ -513,14 +616,18 @@ def _exec_group(src: GroupSource, plan, Q, k, vals, ids, stats, backend):
             pos = pos[win]
         if pos.size == 0:
             continue
-        data = ops.fetch(pos)
         stats.entries_verified += int(pos.size)
-        if backend == "kernel":
-            nv, ni = _kernel_topk_dists(Q[qidx], data, k)
-            gi = np.where(ni >= 0, ops.ids[pos][np.maximum(ni, 0)], -1)
-        else:
-            nv, ni = _screen_topk_slack(Q[qidx], data, k)
-            gi = ops.ids[pos][ni]
+        if _device_ready(ops, pos.size, backend, qidx.size):
+            _account_fetch(ops, pos)
+            nv, gi = _device_topk(Q[qidx], ops, pos, k, exact=False)
+        else:  # small leaf groups take the host tail (same answers)
+            data = ops.fetch(pos)
+            if backend == "kernel":
+                nv, ni = _kernel_topk_dists(Q[qidx], data, k)
+                gi = np.where(ni >= 0, ops.ids[pos][np.maximum(ni, 0)], -1)
+            else:
+                nv, ni = _screen_topk_slack(Q[qidx], data, k)
+                gi = ops.ids[pos][ni]
         mv, mi = merge_topk_state(vals[qidx], ids[qidx], nv, gi)
         vals[qidx], ids[qidx] = mv, mi
     return vals, ids

@@ -36,7 +36,12 @@ Physical access is abstracted behind :class:`SourceOps` closures so the
 executor stays storage-agnostic: ``fetch`` returns raw series for entry
 positions (modeled I/O accounted by the closure), ``index_read`` accounts
 index-entry reads, ``norms2`` serves cached squared norms for the
-screen-without-recompute fast path.
+screen-without-recompute fast path. The device accessors
+(``device_view``/``table_rows``/``table_ids``/``fetch_account``) expose
+the source's table to the default device verification backend
+(:mod:`repro.core.verify_engine`) without the executor ever touching jax:
+the arena handle, the position->table-row map, the row->global-id map,
+and modeled-I/O accounting for passes that never materialize on the host.
 """
 from __future__ import annotations
 
@@ -82,6 +87,19 @@ class SourceOps:
     norms2: Optional[Callable[[np.ndarray], np.ndarray]] = None
     # contiguous materialized storage: zero-copy views for dense spans
     series: Optional[np.ndarray] = None
+    # --- device-resident verification (the executor's "device" backend) ---
+    # lazy handle to the source's device arena (a verify_engine.DeviceView,
+    # cached by the data owner so the table uploads once per lifetime)
+    device_view: Optional[Callable[[], object]] = None
+    # entry positions -> row indices into the arena's table (identity for
+    # materialized runs; the raw-store id map for non-materialized ones)
+    table_rows: Optional[Callable[[np.ndarray], np.ndarray]] = None
+    # arena table rows -> global series ids (the inverse answer mapping)
+    table_ids: Optional[Callable[[np.ndarray], np.ndarray]] = None
+    # modeled-I/O accounting of fetching these positions WITHOUT the host
+    # gather — the device path reads the arena, not the store, but pays
+    # the same modeled I/O as the host engine so stats stay comparable
+    fetch_account: Optional[Callable[[np.ndarray], None]] = None
 
 
 @dataclasses.dataclass

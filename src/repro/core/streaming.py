@@ -98,7 +98,7 @@ class StreamingIndex:
         return state_to_list(vals[0], gids[0]), stats
 
     def window_knn_batch(self, Q, t0: int, t1: int, k: int = 1, *,
-                         backend: str = "numpy", shard=None, mesh=None):
+                         backend: str = "device", shard=None, mesh=None):
         """Batched exact window query: ((m, k) d2, (m, k) ids, stats).
 
         One batched pass per live run (see ``CLSM.knn_batch``); under PP
@@ -110,14 +110,14 @@ class StreamingIndex:
                                   time_skip=self._window_skip,
                                   shard=shard, mesh=mesh)
 
-    def knn_batch(self, Q, k: int = 1, *, backend: str = "numpy", shard=None,
+    def knn_batch(self, Q, k: int = 1, *, backend: str = "device", shard=None,
                   mesh=None):
         """Batched whole-history exact query: ((m, k) d2, (m, k) ids, stats)."""
         return self.lsm.knn_batch(Q, k, raw=self.raw, backend=backend,
                                   shard=shard, mesh=mesh)
 
     def window_knn_approx_batch(self, Q, t0: int, t1: int, k: int = 1, *,
-                                n_blocks: int = 1, backend: str = "numpy"):
+                                n_blocks: int = 1, backend: str = "device"):
         """Batched approximate window query — the approximate serving tier.
 
         Every run the window admits contributes one vectorized key seek and
@@ -133,7 +133,7 @@ class StreamingIndex:
                                          time_skip=self._window_skip)
 
     def knn_approx_batch(self, Q, k: int = 1, *, n_blocks: int = 1,
-                         backend: str = "numpy"):
+                         backend: str = "device"):
         """Batched whole-history approximate query: ((m, k) d2, ids, stats)."""
         return self.lsm.knn_approx_batch(Q, k, n_blocks=n_blocks, raw=self.raw,
                                          backend=backend)

@@ -6,7 +6,7 @@ are computed in the matmul form  d2 = |q|^2 + |x|^2 - 2 q.x  on (bm x bn)
 tiles streaming through VMEM, with a fused running reduction so the full
 (m x n) distance matrix is never materialized in HBM.
 
-Two reductions share the tile pipeline:
+Three reductions share the tile pipeline:
 
 * :func:`min_ed_pallas` — per-query running min/argmin (k = 1);
 * :func:`topk_ed_pallas` — per-query running top-k: a (bm, k) VMEM
@@ -15,6 +15,12 @@ Two reductions share the tile pipeline:
   min/where work — no generic sort, so the body also lowers on Mosaic).
   Ties break toward the smaller candidate index, which makes the result
   bit-identical to the lexicographic (d2, index) reference in ref.py.
+* :func:`screen_select_pallas` — the verification engine's fused
+  screen+select: same running top-k, but the candidate |x|^2 term comes in
+  as a precomputed input (the engine's device arena caches centered norms,
+  so nothing table-sized is recomputed per pass) and the per-query |q|^2
+  needed by the error-bound certificate is emitted alongside the slate —
+  one launch replaces the host einsum + argpartition + gather round-trip.
 
 Grid: (m/bm, n/bn) with the candidate axis iterating fastest; the output
 tile (the per-query accumulator) is revisited across the candidate axis —
@@ -63,25 +69,13 @@ def _tile_d2(q_ref, x_ref) -> jnp.ndarray:
     )  # (bm, bn)
 
 
-def _topk_ed_body(q_ref, x_ref, vals_ref, idxs_ref, *, k: int, block_n: int):
-    j = pl.program_id(1)
-
-    @pl.when(j == 0)
-    def _init():
-        vals_ref[...] = jnp.full_like(vals_ref, jnp.inf)
-        idxs_ref[...] = jnp.full_like(idxs_ref, _INT_MAX)
-
-    d2 = _tile_d2(q_ref, x_ref)  # (bm, bn)
+def _merge_topk_tile(vals_ref, idxs_ref, d2, tile_idx, k: int) -> None:
+    """Merge the sorted (bm, k) accumulator with a fresh (bm, bn) distance
+    tile: k rounds of min-extraction over the (bm, k + bn) candidate pool.
+    Candidate indices are globally unique within a launch, so masking by
+    (value, index) removes exactly one real entry per round; empty slots
+    (inf, INT_MAX) collapse together harmlessly."""
     bm = d2.shape[0]
-    tile_idx = (
-        jax.lax.broadcasted_iota(jnp.int32, (bm, block_n), 1) + j * block_n
-    )
-
-    # merge the sorted accumulator with the fresh tile: k rounds of
-    # min-extraction over the (bm, k + bn) candidate pool. Candidate indices
-    # are globally unique within a launch, so masking by (value, index)
-    # removes exactly one real entry per round; empty slots (inf, INT_MAX)
-    # collapse together harmlessly.
     cand_v = jnp.concatenate([vals_ref[...], d2], axis=1)
     cand_i = jnp.concatenate([idxs_ref[...], tile_idx], axis=1)
     slot = jax.lax.broadcasted_iota(jnp.int32, (bm, k), 1)  # (bm, k)
@@ -103,6 +97,53 @@ def _topk_ed_body(q_ref, x_ref, vals_ref, idxs_ref, *, k: int, block_n: int):
     )
     vals_ref[...] = out_v
     idxs_ref[...] = out_i
+
+
+def _topk_ed_body(q_ref, x_ref, vals_ref, idxs_ref, *, k: int, block_n: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        vals_ref[...] = jnp.full_like(vals_ref, jnp.inf)
+        idxs_ref[...] = jnp.full_like(idxs_ref, _INT_MAX)
+
+    d2 = _tile_d2(q_ref, x_ref)  # (bm, bn)
+    tile_idx = (
+        jax.lax.broadcasted_iota(jnp.int32, (d2.shape[0], block_n), 1)
+        + j * block_n
+    )
+    _merge_topk_tile(vals_ref, idxs_ref, d2, tile_idx, k)
+
+
+def _screen_select_body(
+    q_ref, x_ref, xn2_ref, vals_ref, idxs_ref, qn2_ref, *, k: int, block_n: int
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        vals_ref[...] = jnp.full_like(vals_ref, jnp.inf)
+        idxs_ref[...] = jnp.full_like(idxs_ref, _INT_MAX)
+
+    q = q_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    qn2 = jnp.sum(q * q, axis=-1)  # (bm,) — the certificate's |q|^2 term
+    qn2_ref[...] = qn2  # idempotent across the candidate axis
+    # matmul-form screen with the PRECOMPUTED candidate norms: the arena
+    # caches |x|^2 once per table, so the tile pays one MXU contraction and
+    # two rank-1 corrections — never a second pass over x
+    d2 = (
+        qn2[:, None]
+        + xn2_ref[...][None, :]
+        - 2.0 * jax.lax.dot_general(
+            q, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+    )  # (bm, bn)
+    tile_idx = (
+        jax.lax.broadcasted_iota(jnp.int32, (d2.shape[0], block_n), 1)
+        + j * block_n
+    )
+    _merge_topk_tile(vals_ref, idxs_ref, d2, tile_idx, k)
 
 
 @functools.partial(
@@ -146,6 +187,58 @@ def topk_ed_pallas(
         ],
         interpret=interpret,
     )(q, x)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "block_m", "block_n", "interpret")
+)
+def screen_select_pallas(
+    q: jnp.ndarray,
+    x: jnp.ndarray,
+    xn2: jnp.ndarray,
+    k: int,
+    *,
+    block_m: int = 128,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused verification pass: f32 matmul-form screen + in-kernel top-k
+    slate selection + the per-query |q|^2 certificate term, in ONE launch.
+
+    q: (m, d), x: (n, d), xn2: (n,) precomputed candidate squared norms
+    (the device arena's cache; pad rows carry a huge sentinel norm so they
+    never enter a slate). m % block_m == 0, n % block_n == 0, 1 <= k <= n.
+    Returns (d2 (m, k) f32 ascending, candidate rows (m, k) int32,
+    |q|^2 (m,) f32). Tie/sentinel semantics match :func:`topk_ed_pallas`;
+    the error-bound certificate is d2_true >= d2_screen - 2 * (4 n u
+    |q| |x|_max), checked by the engine against the slate's worst entry.
+    """
+    m, d = q.shape
+    n, d2_ = x.shape
+    assert d == d2_ and m % block_m == 0 and n % block_n == 0, (q.shape, x.shape)
+    assert xn2.shape == (n,), (xn2.shape, n)
+    assert 1 <= k <= n, (k, n)
+    grid = (m // block_m, n // block_n)
+    return pl.pallas_call(
+        functools.partial(_screen_select_body, k=k, block_n=block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_m,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.float32),
+            jax.ShapeDtypeStruct((m, k), jnp.int32),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, x, xn2)
 
 
 @functools.partial(

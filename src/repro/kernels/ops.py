@@ -15,12 +15,16 @@ import jax
 import jax.numpy as jnp
 
 from ..core.summarization import SummarizationConfig, breakpoints
-from .ed_scan_kernel import min_ed_pallas, topk_ed_pallas
+from .ed_scan_kernel import min_ed_pallas, screen_select_pallas, topk_ed_pallas
 from .lb_kernel import mindist_pallas
 from .paa_kernel import paa_pallas
 from .sax_pack_kernel import sax_pack_pallas
 
 INTERPRET = jax.default_backend() != "tpu"
+
+# sentinel |x|^2 for pad candidates: dominates any real screened distance
+# without overflowing the f32 d2 arithmetic (see screen_select)
+BIG_NORM2 = 1e30
 
 
 def _pad_rows(x: jnp.ndarray, mult: int, fill=0.0) -> tuple[jnp.ndarray, int]:
@@ -155,6 +159,13 @@ def topk_ed(
     return vals, idxs
 
 
+def candidate_bucket(e: int, min_bucket: int = 64) -> int:
+    """The power-of-two candidate bucket (min ``min_bucket``) ``e`` pads to
+    — the shared shape discipline of every bucketed launcher, so steady
+    state serving hits a handful of cached traces."""
+    return 1 << max(min_bucket.bit_length() - 1, (max(1, e) - 1).bit_length())
+
+
 def topk_ed_bucketed(
     q: jnp.ndarray, x: jnp.ndarray, k: int
 ) -> tuple[np.ndarray, np.ndarray]:
@@ -164,12 +175,21 @@ def topk_ed_bucketed(
 
     Bucket-padding rows carry a +large sentinel; any that surface (only
     possible when the true candidate count < k) are mapped to (inf, -1),
-    so results are indistinguishable from an unpadded launch. Returns host
-    ((m, kk) f32 d2, (m, kk) int64 rows into ``x``), kk = min(k, |x|)."""
-    x = jnp.asarray(x, jnp.float32)
+    so results are indistinguishable from an unpadded launch. When the
+    caller already padded to the bucket (``e == bucket``) the table is
+    passed through without the concat copy — the fast path arenas rely on.
+    Returns host ((m, kk) f32 d2, (m, kk) int64 rows into ``x``), kk =
+    min(k, |x|)."""
+    m = np.asarray(q).shape[0]
     e = x.shape[0]
-    bucket = 1 << max(6, (e - 1).bit_length())
-    if bucket > e:
+    if e == 0:  # no candidates: every requested slot is explicit padding
+        return (
+            np.full((m, k), np.inf, np.float32),
+            np.full((m, k), -1, np.int64),
+        )
+    x = jnp.asarray(x, jnp.float32)
+    bucket = candidate_bucket(e)
+    if bucket != e:  # fast path: already bucket-sized tables skip the copy
         pad = jnp.full((bucket - e, x.shape[1]), 1e15, jnp.float32)
         x = jnp.concatenate([x, pad])
     v, i = topk_ed(q, x, min(k, e))
@@ -177,6 +197,68 @@ def topk_ed_bucketed(
     v = np.asarray(v)
     invalid = (i < 0) | (i >= e)  # bucket padding / never-filled slots
     return np.where(invalid, np.inf, v), np.where(invalid, -1, i)
+
+
+def screen_select(
+    q: jnp.ndarray,
+    x: jnp.ndarray,
+    xn2: jnp.ndarray,
+    k: int,
+    *,
+    block_m: int = 128,
+    block_n: int = 512,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One fused verification launch: f32 matmul-form screen over candidates
+    with PRECOMPUTED squared norms, in-kernel top-k slate selection, and the
+    per-query |q|^2 certificate term.
+
+    q: (m, d), x: (n, d), xn2: (n,) -> ((m, k) f32 d2 ascending, (m, k)
+    int32 rows, (m,) f32 |q|^2). Pads m/n/d to block multiples; candidate
+    pads get zero rows with a :data:`BIG_NORM2` sentinel norm (the screen
+    uses ``xn2``, not the rows, for the |x|^2 term, so the sentinel keeps
+    pads out of every slate without f32 overflow) and surface as (inf, -1).
+    Ties break toward the smaller candidate index (lexicographic (d2, index)
+    — the ``screen_select_ref`` oracle semantics)."""
+    q = jnp.asarray(q, jnp.float32)
+    x = jnp.asarray(x, jnp.float32)
+    xn2 = jnp.asarray(xn2, jnp.float32)
+    m, d = q.shape
+    n = x.shape[0]
+    if m == 0:  # empty query batch
+        return (
+            jnp.zeros((0, k), jnp.float32),
+            jnp.zeros((0, k), jnp.int32),
+            jnp.zeros((0,), jnp.float32),
+        )
+    if n == 0:  # no candidates: every requested slot is explicit padding
+        return (
+            jnp.full((m, k), jnp.inf, jnp.float32),
+            jnp.full((m, k), -1, jnp.int32),
+            jnp.sum(q * q, axis=-1),
+        )
+    kk = max(1, min(k, n))
+    block_m = min(block_m, max(8, m))
+    block_n = min(block_n, max(8, n))
+    dp = (-d) % 128
+    if dp:  # zero-pad the contraction dim: adds 0 to every distance
+        q = jnp.concatenate([q, jnp.zeros((m, dp), q.dtype)], axis=1)
+        x = jnp.concatenate([x, jnp.zeros((n, dp), x.dtype)], axis=1)
+    qp, _ = _pad_rows(q, block_m)
+    xp, _ = _pad_rows(x, block_n)  # zero rows; the sentinel lives in xn2
+    xn2p, _ = _pad_rows(xn2, block_n, fill=BIG_NORM2)
+    vals, idxs, qn2 = screen_select_pallas(
+        qp, xp, xn2p, kk, block_m=block_m, block_n=block_n, interpret=INTERPRET
+    )
+    vals, idxs, qn2 = vals[:m], idxs[:m], qn2[:m]
+    invalid = idxs >= n  # row-pad candidates and never-filled (inf) slots
+    vals = jnp.where(invalid, jnp.inf, vals)
+    idxs = jnp.where(invalid, -1, idxs)
+    if kk < k:  # fewer candidates than requested slate slots
+        vals = jnp.concatenate(
+            [vals, jnp.full((m, k - kk), jnp.inf, vals.dtype)], axis=1)
+        idxs = jnp.concatenate(
+            [idxs, jnp.full((m, k - kk), -1, idxs.dtype)], axis=1)
+    return vals, idxs, qn2
 
 
 def mindist(

@@ -74,6 +74,26 @@ def topk_ed_ref(q: jnp.ndarray, x: jnp.ndarray, k: int) -> tuple[jnp.ndarray, jn
     return sv[:, :k], si[:, :k]
 
 
+def screen_select_ref(
+    q: jnp.ndarray, x: jnp.ndarray, xn2: jnp.ndarray, k: int
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused screen+select oracle: matmul-form d2 with PRECOMPUTED candidate
+    norms (the verification engine's cached |x|^2), lexicographic (d2,
+    index) top-k, plus the per-query |q|^2 certificate term.
+
+    q: (m, d), x: (n, d), xn2: (n,), 1 <= k <= n ->
+    ((m, k) f32 ascending, (m, k) int32, (m,) f32)."""
+    q = q.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    qn2 = jnp.sum(q * q, -1)
+    d2 = qn2[:, None] + xn2.astype(jnp.float32)[None, :] - 2.0 * q @ x.T
+    idx = jnp.broadcast_to(
+        jnp.arange(x.shape[0], dtype=jnp.int32)[None, :], d2.shape
+    )
+    sv, si = jax.lax.sort((d2, idx), num_keys=2, dimension=1)
+    return sv[:, :k], si[:, :k], qn2
+
+
 def mindist_ref(q_paa: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray, seg_len: int) -> jnp.ndarray:
     """Squared MINDIST between a query PAA (w,) and candidate regions (B, w)."""
     below = jnp.maximum(lo - q_paa[None, :], 0.0)

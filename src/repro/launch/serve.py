@@ -38,18 +38,37 @@ def serve_coconut(args):
     query batch sharded over one mesh axis and the live runs over the
     other (queries x runs 2-D ``shard_map``), per-shard top-k states
     folded with one all_gather — answers are identical to the
-    single-device engine (host f64 re-rank)."""
+    single-device engine (host f64 re-rank).
+
+    Verification runs on the device engine by default: at startup the
+    compile cache is pre-warmed with one dummy pass per (arena capacity,
+    candidate bucket) the configured stream can produce, so steady-state
+    serving executes from cached traces with zero retraces; every per-batch
+    log line reports the engine's cumulative ``traces``/``hits`` so compile
+    churn is visible immediately. ``--no-prewarm`` skips the warm-up (the
+    first batches then pay the compiles)."""
+    from ..core.verify_engine import get_engine
+
     tier = "approx" if args.approx else args.tier
     shard = args.shard if args.shard != "none" else None
-    if shard == "mesh" and tier == "approx":
-        raise SystemExit("--shard mesh serves the exact tier only "
-                         "(the approx tier's seek/coalesce I/O model is host-side)")
     scfg = SummarizationConfig(series_len=args.series_len, n_segments=16,
                                card_bits=8)
     idx = StreamingIndex(StreamConfig(scheme=args.scheme, summarization=scfg,
                                       buffer_entries=4096, growth_factor=4,
                                       block_size=512))
     idx.raw.disk.keep_log = True
+    engine = get_engine()
+    if args.prewarm:
+        # the non-materialized stream verifies against the RawStore arena,
+        # whose capacity walks the bucket ladder as ingest grows it — warm
+        # every table size the stream will reach (prewarm dedupes them onto
+        # the ladder's actual capacity rungs)
+        sizes = sorted({args.batch_size * (b + 1) for b in range(args.batches)})
+        t0 = time.time()
+        n = engine.prewarm(args.series_len, args.query_batch, args.k, sizes)
+        print(f"[serve] prewarmed {n} verification traces "
+              f"({time.time()-t0:.1f}s) for stores up to {sizes[-1]} entries",
+              flush=True)
     lat, recalls = [], []
     for b in range(args.batches):
         x = seismic(args.batch_size, args.series_len, seed=b)
@@ -66,10 +85,12 @@ def serve_coconut(args):
                                                      shard=shard)
             dt = (time.time() - t0) / args.query_batch
             lat.append(dt)
+            es = engine.stats
             line = (f"[serve] batch {b+1}: {args.query_batch} queries "
                     f"({tier}{'+mesh' if shard == 'mesh' else ''}), "
                     f"{dt*1e3:.2f} ms/query, "
-                    f"partitions={idx.n_partitions}")
+                    f"partitions={idx.n_partitions}, "
+                    f"traces={es['traces']}, hits={es['hits']}")
             if tier == "approx":
                 # score recall without letting the oracle's reads pollute the
                 # approx tier's modeled-I/O figures and access heat map
@@ -145,9 +166,16 @@ def main():
                          "mesh (queries x runs 2-D shard_map)")
     ap.add_argument("--approx", action="store_true",
                     help="deprecated alias for --tier approx")
+    ap.add_argument("--no-prewarm", dest="prewarm", action="store_false",
+                    help="skip the verification-engine compile-cache "
+                         "warm-up (first batches pay the compiles)")
     ap.add_argument("--arch", default="smollm-360m")
     ap.add_argument("--decode-tokens", type=int, default=32)
     args = ap.parse_args()
+    # reject impossible flag combinations at parse time, not mid-batch
+    if args.shard == "mesh" and (args.approx or args.tier == "approx"):
+        ap.error("--shard mesh serves the exact tier only (the approx "
+                 "tier's seek/coalesce I/O model is host-side)")
     if args.mode == "coconut":
         serve_coconut(args)
     else:

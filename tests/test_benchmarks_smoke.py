@@ -47,6 +47,17 @@ def test_benchmarks_run_smoke_mode(tmp_path):
         assert payload["rows"], "artifact has no rows"
         for rec in payload["rows"]:
             assert "name" in rec and "us_per_call" in rec
+        # the verification engine's compile/transfer counters ride along so
+        # compile-churn regressions fail fast in CI
+        eng = payload["verify_engine"]
+        assert all(key in eng for key in
+                   ("traces", "hits", "h2d_bytes", "d2h_bytes"))
         if mod == "query":
             assert any("recall_at10" in rec for rec in payload["rows"])
             assert any("modeled_io_s" in rec for rec in payload["rows"])
+            batch_rows = [rec for rec in payload["rows"]
+                          if "_knn_batch_b" in rec["name"]]
+            assert batch_rows, "batched exact sweep missing"
+            for rec in batch_rows:  # per-config engine accounting
+                assert all(key in rec for key in
+                           ("trace_count", "h2d_bytes", "d2h_bytes")), rec

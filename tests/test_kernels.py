@@ -155,3 +155,68 @@ def test_min_ed_kernel_argmin_is_exact_on_separated_data(rng):
     md, am = ops.min_ed(q, x, block_m=8, block_n=64)
     np.testing.assert_array_equal(np.asarray(am), [17, 42, 200, 3])
     np.testing.assert_allclose(np.asarray(md), 0.0, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# the fused screen+select kernel (the verification engine's device pass)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("k", [1, 5, 18])
+@pytest.mark.parametrize("m,n,d", [(8, 512, 128), (7, 333, 64), (1, 100, 96),
+                                   (16, 64, 128)])
+def test_screen_select_matches_ref(m, n, d, k, rng):
+    """One fused launch == matmul-form screen with PRECOMPUTED norms +
+    lexicographic top-k + the per-query |q|^2 certificate term."""
+    q = rng.standard_normal((m, d)).astype(np.float32)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    xn2 = np.einsum("nd,nd->n", x, x).astype(np.float32)
+    v, i, qn2 = ops.screen_select(q, x, xn2, k, block_m=8, block_n=64)
+    kk = min(k, n)
+    rv, ri, rqn2 = ref.screen_select_ref(
+        jnp.asarray(q), jnp.asarray(x), jnp.asarray(xn2), kk)
+    np.testing.assert_array_equal(np.asarray(i)[:, :kk], np.asarray(ri))
+    np.testing.assert_allclose(np.asarray(v)[:, :kk], np.asarray(rv),
+                               rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(qn2), np.asarray(rqn2), rtol=1e-6)
+    # requested-but-unfillable slots are explicit (inf, -1) padding
+    assert np.all(np.asarray(v)[:, kk:] == np.inf)
+    assert np.all(np.asarray(i)[:, kk:] == -1)
+
+
+def test_screen_select_sentinel_norm_keeps_pads_out(rng):
+    """Candidate pads carry a BIG_NORM2 sentinel in the norms input (the
+    rows themselves are zeros): they must never displace a real candidate
+    and must not overflow the f32 screen arithmetic."""
+    q = rng.standard_normal((4, 64)).astype(np.float32)
+    x = rng.standard_normal((70, 64)).astype(np.float32)  # pads to 128 rows
+    xn2 = np.einsum("nd,nd->n", x, x).astype(np.float32)
+    v, i, _ = ops.screen_select(q, x, xn2, 70, block_m=8, block_n=64)
+    assert np.isfinite(np.asarray(v)).all()
+    assert (np.asarray(i) >= 0).all() and (np.asarray(i) < 70).all()
+
+
+# ---------------------------------------------------------------------------
+# bucketed launcher boundaries (the e == bucket fast path)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("e", [63, 64, 65, 127, 128])
+def test_topk_ed_bucketed_boundaries_match_ref(e, rng):
+    """Across the bucket boundary (64 = min bucket, 128 = next) — including
+    the exactly-bucket-sized tables that take the no-copy fast path — the
+    launcher must be indistinguishable from an unpadded launch."""
+    q = rng.standard_normal((5, 32)).astype(np.float32)
+    x = rng.standard_normal((e, 32)).astype(np.float32)
+    k = 7
+    v, i = ops.topk_ed_bucketed(q, x, k)
+    kk = min(k, e)
+    rv, ri = ref.topk_ed_ref(jnp.asarray(q), jnp.asarray(x), kk)
+    np.testing.assert_array_equal(i[:, :kk], np.asarray(ri))
+    np.testing.assert_allclose(v[:, :kk], np.asarray(rv), rtol=1e-5, atol=1e-3)
+    from repro.kernels.ops import candidate_bucket
+
+    assert candidate_bucket(64) == 64  # the fast-path boundary itself
+    assert candidate_bucket(63) == 64 and candidate_bucket(65) == 128
+
+
+def test_topk_ed_bucketed_empty_candidates():
+    q = np.zeros((3, 32), np.float32)
+    v, i = ops.topk_ed_bucketed(q, np.zeros((0, 32), np.float32), 4)
+    assert v.shape == (3, 4) and (i == -1).all() and np.isinf(v).all()
