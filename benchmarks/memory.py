@@ -1,8 +1,6 @@
 """Paper §2 'Better Memory vs. Construction Trade-Offs': build cost as the
 memory budget shrinks — two-pass external sort degrades gracefully where
 buffered top-down insertion thrashes."""
-import numpy as np
-
 from repro.core import CTree, CTreeConfig, DiskModel, RawStore, SummarizationConfig
 from repro.data.synthetic import random_walk
 

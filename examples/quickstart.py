@@ -33,7 +33,7 @@ def main():
 
     approx, stats = index.knn_approx(q, k=5, n_blocks=2, raw=raw)
     print("approx 5-NN:", [(round(d, 1), i) for d, i in approx])
-    print(f"  (2 contiguous blocks = one sequential read)")
+    print("  (2 contiguous blocks = one sequential read)")
 
     bf = float(np.sort(ed2(q, X))[0])
     print(f"true NN distance {bf:.1f}; exact found {exact[0][0]:.1f}; "

@@ -16,6 +16,11 @@ from . import (
 )
 from .shapes import SHAPES, SMOKE_SHAPES, Shape
 
+__all__ = [
+    "SHAPES", "SMOKE_SHAPES", "Shape", "ARCH_IDS", "get_config",
+    "cell_is_skipped",
+]
+
 _MODULES = {
     "llava-next-34b": llava_next_34b,
     "rwkv6-3b": rwkv6_3b,

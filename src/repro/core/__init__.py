@@ -18,7 +18,9 @@ from .execute import (
     state_to_list,
 )
 from .ctree import CTree, CTreeConfig, RawStore, SortedRun
+from .run_registry import BufferChunk, RunRegistry, RunSet
 from .clsm import CLSM, CLSMConfig
+from .ingest import IngestPipeline
 from .streaming import StreamConfig, StreamingIndex
 from .adsplus import ADSConfig, ADSIndex
 from .recommender import Scenario, Recommendation, recommend
@@ -35,5 +37,6 @@ __all__ = [
     "CTree", "CTreeConfig", "RawStore", "SortedRun", "heap_to_sorted",
     "empty_topk_state", "merge_topk_state", "recall_at_k",
     "CLSM", "CLSMConfig", "StreamConfig", "StreamingIndex",
+    "BufferChunk", "RunRegistry", "RunSet", "IngestPipeline",
     "ADSConfig", "ADSIndex", "Scenario", "Recommendation", "recommend",
 ]

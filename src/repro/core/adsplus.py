@@ -31,7 +31,7 @@ from typing import Optional
 
 import numpy as np
 
-from .ctree import QueryStats, RawStore, state_to_list
+from .ctree import RawStore, state_to_list
 from .execute import execute
 from .io_model import DiskModel
 from .lower_bounds import mindist_region2

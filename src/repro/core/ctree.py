@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import threading
 from typing import Optional
 
 import numpy as np
@@ -70,6 +71,9 @@ class RawStore:
     def __init__(self, series_len: int, disk: Optional[DiskModel] = None):
         self.series_len = series_len
         self.disk = disk or DiskModel()
+        # guards _chunks/_data/_norms2/_dev_view/n: the serving loop appends
+        # from the ingest thread while query threads fetch concurrently
+        self._lock = threading.RLock()
         self._chunks: list[np.ndarray] = []
         self._data: Optional[np.ndarray] = None
         self._norms2: Optional[np.ndarray] = None
@@ -79,21 +83,23 @@ class RawStore:
     def append(self, series: np.ndarray) -> np.ndarray:
         """Append (B, n) series; returns their ids. Sequential write."""
         series = np.asarray(series, dtype=np.float32)
-        ids = np.arange(self.n, self.n + series.shape[0], dtype=np.int64)
-        self._chunks.append(series)
-        self._data = None
-        self.n += series.shape[0]
+        with self._lock:
+            ids = np.arange(self.n, self.n + series.shape[0], dtype=np.int64)
+            self._chunks.append(series)
+            self._data = None
+            self.n += series.shape[0]
         self.disk.write_seq(series.nbytes, offset=int(ids[0]) * self.series_len * 4)
         return ids
 
     def _all(self) -> np.ndarray:
-        if self._data is None:
-            self._data = (
-                np.concatenate(self._chunks, axis=0)
-                if self._chunks
-                else np.zeros((0, self.series_len), np.float32)
-            )
-        return self._data
+        with self._lock:
+            if self._data is None:
+                self._data = (
+                    np.concatenate(self._chunks, axis=0)
+                    if self._chunks
+                    else np.zeros((0, self.series_len), np.float32)
+                )
+            return self._data
 
     def fetch(self, ids: np.ndarray) -> np.ndarray:
         """Random fetch by id (the non-materialized query path)."""
@@ -118,11 +124,12 @@ class RawStore:
         from .verify_engine import get_engine  # lazy: keeps numpy paths jax-free
 
         eng = get_engine()
-        if self._dev_view is None:
-            self._dev_view = eng.build_view(self._all())
-        elif self._dev_view.n < self.n:
-            self._dev_view = eng.extend_view(self._dev_view, self._all())
-        return self._dev_view
+        with self._lock:  # one thread builds/extends; others reuse
+            if self._dev_view is None:
+                self._dev_view = eng.build_view(self._all())
+            elif self._dev_view.n < self.n:
+                self._dev_view = eng.extend_view(self._dev_view, self._all())
+            return self._dev_view
 
     def scan(self) -> np.ndarray:
         """Full sequential scan (used by builds)."""
@@ -135,12 +142,14 @@ class RawStore:
         batched verify screens only need |x|^2, not another pass over x.
         The store is append-only, so the cache extends incrementally — a
         growing stream never pays a full-store recompute per query batch."""
-        if self._norms2 is None or self._norms2.shape[0] < self.n:
-            a = self._all()
-            done = 0 if self._norms2 is None else self._norms2.shape[0]
-            new = np.einsum("ij,ij->i", a[done:], a[done:])
-            self._norms2 = new if done == 0 else np.concatenate([self._norms2, new])
-        return self._norms2[ids]
+        with self._lock:
+            if self._norms2 is None or self._norms2.shape[0] < self.n:
+                a = self._all()
+                done = 0 if self._norms2 is None else self._norms2.shape[0]
+                new = np.einsum("ij,ij->i", a[done:], a[done:])
+                self._norms2 = (new if done == 0
+                                else np.concatenate([self._norms2, new]))
+            return self._norms2[ids]
 
 
 @dataclasses.dataclass
@@ -255,13 +264,22 @@ class SortedRun:
         n, w = self.n, self.cfg.n_segments
         bs = self.block_size
         nb = max(1, -(-n // bs)) if n else 0
-        bmin = np.full((nb, w), 255, np.uint8)
-        bmax = np.zeros((nb, w), np.uint8)
-        for b in range(nb):
-            blk = self.sax[b * bs : (b + 1) * bs]
-            bmin[b] = blk.min(axis=0)
-            bmax[b] = blk.max(axis=0)
-        self.bmin, self.bmax = bmin, bmax
+        if nb == 0:
+            self.bmin = np.full((0, w), 255, np.uint8)
+            self.bmax = np.zeros((0, w), np.uint8)
+            return
+        # one vectorized reduction over (nb, bs, w) instead of a Python
+        # loop per block: pad the tail block by replicating its last row
+        # (already a member, so block min/max are unchanged) — merges on
+        # the background ingest worker spend less time holding the GIL
+        pad = nb * bs - n
+        sax_p = self.sax
+        if pad:
+            sax_p = np.concatenate(
+                [self.sax, np.broadcast_to(self.sax[-1:], (pad, w))])
+        blocks = sax_p.reshape(nb, bs, w)
+        self.bmin = blocks.min(axis=1)
+        self.bmax = blocks.max(axis=1)
 
     def entry_norms2(self) -> np.ndarray:
         """Cached (N,) squared norms of the materialized entries (runs are
@@ -280,6 +298,18 @@ class SortedRun:
 
             self._dev_view = get_engine().build_view(self.series)
         return self._dev_view
+
+    def release_device_view(self) -> None:
+        """Retire this run's device arena (called by the run registry once
+        no pinned epoch can still plan against the run — in-flight passes
+        keep the buffers alive through their own references). Safe to call
+        on runs that never built an arena; a later ``device_view`` would
+        lazily rebuild."""
+        if self._dev_view is not None:
+            from .verify_engine import get_engine  # lazy: numpy paths stay jax-free
+
+            get_engine().release_view(self._dev_view)
+            self._dev_view = None
 
     # ------------------------------------------------------------------ query
     def _entry_bytes(self) -> int:

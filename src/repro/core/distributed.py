@@ -37,7 +37,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from .summarization import SummarizationConfig, breakpoints
 from ..compat import axis_size as _compat_axis_size, make_mesh, shard_map

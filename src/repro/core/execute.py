@@ -508,7 +508,6 @@ def _exec_range(src: RangeSource, plan, Q, k, vals, ids, stats, backend):
     per DISTINCT span — queries that seek into the same neighborhood share
     a pass, and disjoint spans never multiply each other's distance work."""
     ops = src.ops
-    m = Q.shape[0]
     lo, hi = src.spans[:, 0], src.spans[:, 1]
     stats.blocks_visited += src.logical_blocks
     # coalesce the per-query [lo, hi) entry ranges: overlapping queries

@@ -11,6 +11,7 @@ same accounting can model NVMe or HBM-resident runs.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import List, Tuple
 
 
@@ -54,36 +55,48 @@ class DiskModel:
     # access log for the heat map: (offset_pages, n_pages, kind)
     log: List[Tuple[int, int, str]] = dataclasses.field(default_factory=list)
     keep_log: bool = False
+    # background ingest accounts flush/merge I/O from the worker thread
+    # while queries account reads concurrently — counter updates are
+    # read-modify-write, so they serialize here
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
 
     def reset(self) -> None:
-        self.stats = IOStats()
-        self.log = []
+        with self._lock:
+            self.stats = IOStats()
+            self.log = []
 
     def read_seq(self, nbytes: int, offset: int = 0) -> None:
-        self.stats.seq_read_bytes += int(nbytes)
-        self.stats.seq_ops += 1
-        if self.keep_log and nbytes:
-            self.log.append((offset // self.page_bytes, max(1, int(nbytes) // self.page_bytes), "rs"))
+        with self._lock:
+            self.stats.seq_read_bytes += int(nbytes)
+            self.stats.seq_ops += 1
+            if self.keep_log and nbytes:
+                self.log.append((offset // self.page_bytes,
+                                 max(1, int(nbytes) // self.page_bytes), "rs"))
 
     def read_rand(self, nbytes: int, offset: int = 0) -> None:
-        self.stats.rand_read_bytes += int(nbytes)
-        pages = max(1, (int(nbytes) + self.page_bytes - 1) // self.page_bytes)
-        self.stats.rand_ops += pages
-        if self.keep_log and nbytes:
-            self.log.append((offset // self.page_bytes, pages, "rr"))
+        with self._lock:
+            self.stats.rand_read_bytes += int(nbytes)
+            pages = max(1, (int(nbytes) + self.page_bytes - 1) // self.page_bytes)
+            self.stats.rand_ops += pages
+            if self.keep_log and nbytes:
+                self.log.append((offset // self.page_bytes, pages, "rr"))
 
     def write_seq(self, nbytes: int, offset: int = 0) -> None:
-        self.stats.seq_write_bytes += int(nbytes)
-        self.stats.seq_ops += 1
-        if self.keep_log and nbytes:
-            self.log.append((offset // self.page_bytes, max(1, int(nbytes) // self.page_bytes), "ws"))
+        with self._lock:
+            self.stats.seq_write_bytes += int(nbytes)
+            self.stats.seq_ops += 1
+            if self.keep_log and nbytes:
+                self.log.append((offset // self.page_bytes,
+                                 max(1, int(nbytes) // self.page_bytes), "ws"))
 
     def write_rand(self, nbytes: int, offset: int = 0) -> None:
-        self.stats.rand_write_bytes += int(nbytes)
-        pages = max(1, (int(nbytes) + self.page_bytes - 1) // self.page_bytes)
-        self.stats.rand_ops += pages
-        if self.keep_log and nbytes:
-            self.log.append((offset // self.page_bytes, pages, "wr"))
+        with self._lock:
+            self.stats.rand_write_bytes += int(nbytes)
+            pages = max(1, (int(nbytes) + self.page_bytes - 1) // self.page_bytes)
+            self.stats.rand_ops += pages
+            if self.keep_log and nbytes:
+                self.log.append((offset // self.page_bytes, pages, "wr"))
 
     def read_seq_ranges(self, ranges, unit_bytes: int = 1) -> None:
         """One sequential read per [lo, hi) range (in ``unit_bytes`` units).

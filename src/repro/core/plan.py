@@ -157,6 +157,10 @@ class QueryPlan:
     window: Optional[Tuple[int, int]] = None  # inclusive [t0, t1] predicate
     time_skip: bool = True  # run-level temporal skip applied at build (TP/BTP)
     pruned_blocks: int = 0  # blocks of runs skipped at plan time (per query)
+    # the run-registry epoch the plan was built against (None = the source
+    # index is not registry-backed). Sources resolve against that pinned
+    # snapshot, so the plan stays well-defined under concurrent ingest.
+    epoch: Optional[int] = None
 
 
 def window_mask(ts: Optional[np.ndarray], window: Optional[Tuple[int, int]],

@@ -30,16 +30,25 @@ through ``window_knn_batch`` / ``window_knn_approx_batch``, which answer a
 whole (m, n) query batch with one shared verification pass per (run,
 batch) and return ((m, k) distances, (m, k) ids, stats). Exact batches
 accept ``shard="mesh"`` for device-mesh execution.
+
+``ingest="async"`` moves the flush/external-sort/merge work onto a
+background :class:`repro.core.ingest.IngestPipeline` worker: ``ingest``
+returns as soon as the batch is registry-visible, queries keep serving
+from the previous epoch snapshot while compactions publish new ones, and
+answers stay snapshot-consistent (brute-force-equal over the pinned
+epoch's entries). ``drain()`` waits the backlog out; ``ingest_lag()``
+reports freshness (pending entries, mergeable runs, snapshot age).
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional
 
 import numpy as np
 
 from .clsm import CLSM, CLSMConfig
-from .ctree import QueryStats, RawStore, state_to_list
+from .ctree import RawStore, state_to_list
 from .summarization import SummarizationConfig
 
 
@@ -51,6 +60,12 @@ class StreamConfig:
     growth_factor: int = 4
     block_size: int = 512
     materialized: bool = False
+    ingest: str = "sync"  # sync (flush/merge inline) | async (worker)
+    # async backpressure: block ingest() while this many entries are
+    # unflushed (None = unbounded backlog, queries still never block).
+    # Must be >= buffer_entries — below the flush threshold the worker
+    # could never shrink the backlog (IngestPipeline validates this)
+    max_lag_entries: Optional[int] = None
 
 
 class StreamingIndex:
@@ -59,6 +74,8 @@ class StreamingIndex:
     def __init__(self, cfg: StreamConfig, raw: Optional[RawStore] = None):
         if cfg.scheme not in ("PP", "TP", "BTP"):
             raise ValueError(f"unknown scheme {cfg.scheme}")
+        if cfg.ingest not in ("sync", "async"):
+            raise ValueError(f"unknown ingest mode {cfg.ingest}")
         self.cfg = cfg
         self.raw = raw or RawStore(cfg.summarization.series_len)
         lsm_cfg = CLSMConfig(
@@ -75,13 +92,61 @@ class StreamingIndex:
         # the PP/TP/BTP plan flag: PP never skips runs by time, it only
         # filters entries during verification
         self._window_skip = cfg.scheme in ("TP", "BTP")
+        self.pipeline = None
+        if cfg.ingest == "async":
+            from .ingest import IngestPipeline  # lazy: sync path stays thread-free
+
+            self.pipeline = IngestPipeline(
+                self.lsm, max_lag_entries=cfg.max_lag_entries)
 
     # ---------------------------------------------------------------- ingest
     def ingest(self, series: np.ndarray, ts: np.ndarray) -> np.ndarray:
-        """Append a stream batch; returns assigned ids."""
+        """Append a stream batch; returns assigned ids.
+
+        Sync mode flushes/merges inline; async mode returns once the batch
+        is registry-visible and leaves compaction to the pipeline worker —
+        concurrent queries keep answering from their pinned snapshots."""
         ids = self.raw.append(series)
-        self.lsm.insert(series, ids, ts)
+        if self.pipeline is not None:
+            self.pipeline.insert(series, ids, ts)
+        else:
+            self.lsm.insert(series, ids, ts)
         return ids
+
+    def drain(self, *, flush_buffer: bool = False,
+              timeout: Optional[float] = None) -> bool:
+        """Wait out the async ingest backlog (no-op in sync mode)."""
+        if self.pipeline is None:
+            if flush_buffer:
+                self.lsm.flush_all()
+            return True
+        return self.pipeline.drain(flush_buffer=flush_buffer, timeout=timeout)
+
+    def close(self) -> None:
+        """Stop the async ingest worker (no-op in sync mode)."""
+        if self.pipeline is not None:
+            self.pipeline.close()
+
+    def ingest_lag(self) -> dict:
+        """Freshness of the queryable state vs the ingested stream:
+        ``lag_entries`` (ingested but not yet in a published run),
+        ``runs_pending_merge`` (published runs a level already has enough
+        of to merge), ``epoch`` and ``snapshot_age_s`` (time since the
+        last publish)."""
+        reg = self.lsm.registry
+        snap = reg.current()
+        gf = self.lsm.cfg.growth_factor
+        mergeable = 0
+        if self.lsm.cfg.merge:
+            mergeable = sum((len(runs) // gf) * gf
+                            for _, runs in snap.levels if len(runs) >= gf)
+        return {
+            "epoch": snap.epoch,
+            "lag_entries": snap.buffer_n + snap.flushing_n,
+            "runs_pending_merge": mergeable,
+            "retired_pending": reg.retired_pending,
+            "snapshot_age_s": max(0.0, time.time() - reg.publish_time),
+        }
 
     # ---------------------------------------------------------------- query
     def window_knn(self, q, t0: int, t1: int, k: int = 1, exact: bool = True,

@@ -16,7 +16,6 @@ import functools
 
 import numpy as np
 
-import jax
 import jax.numpy as jnp
 
 

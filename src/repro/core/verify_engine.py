@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 from typing import Optional
 
 import numpy as np
@@ -169,6 +170,11 @@ class VerifyEngine:
     """Process-wide verification engine: arenas + bucketed compile cache."""
 
     def __init__(self):
+        # serializes fused-pass bookkeeping (and the passes themselves)
+        # across query threads: concurrent ingest serving may verify from a
+        # thread pool, and the before/after _TRACES hit accounting is only
+        # meaningful if launches do not interleave
+        self._lock = threading.RLock()
         self.stats = {
             "calls": 0,  # fused verification passes launched
             "traces": 0,  # jit retraces of the fused pass (compile churn)
@@ -177,6 +183,8 @@ class VerifyEngine:
             "d2h_bytes": 0,  # device->host: downloaded slates
             "uploads": 0,  # arena builds/extends
             "fallbacks": 0,  # queries re-screened on host (cert failures)
+            "released_arenas": 0,  # arenas retired by the run registry
+            "released_bytes": 0,  # device bytes those arenas held
         }
 
     # ------------------------------------------------------------- arenas
@@ -200,8 +208,9 @@ class VerifyEngine:
             cap=cap,
             xn2max=float(xn2[:n].max()) if n else 0.0,
         )
-        self.stats["uploads"] += 1
-        self.stats["h2d_bytes"] += buf.nbytes + xn2.nbytes
+        with self._lock:
+            self.stats["uploads"] += 1
+            self.stats["h2d_bytes"] += buf.nbytes + xn2.nbytes
         return view
 
     def extend_view(self, view: DeviceView, host_table: np.ndarray) -> DeviceView:
@@ -225,8 +234,9 @@ class VerifyEngine:
         table, xn2 = _arena_extend(
             view.table, view.xn2, jnp.asarray(chunk), jnp.asarray(cn2),
             np.int64(view.n))
-        self.stats["uploads"] += 1
-        self.stats["h2d_bytes"] += chunk.nbytes + cn2.nbytes
+        with self._lock:
+            self.stats["uploads"] += 1
+            self.stats["h2d_bytes"] += chunk.nbytes + cn2.nbytes
         return DeviceView(
             host=np.ascontiguousarray(host_table, np.float32),
             mu=view.mu,
@@ -237,43 +247,68 @@ class VerifyEngine:
             xn2max=max(view.xn2max, float(cn2[:grow].max())),
         )
 
+    def release_view(self, view: DeviceView) -> None:
+        """Retire an arena: the registry calls this once no pinned epoch
+        can still verify against the table (deferred retirement). The
+        device buffers are freed when the last in-flight pass drops its
+        reference — releasing is accounting plus dropping the owner's
+        handle, never a forced deallocation under a live reader."""
+        with self._lock:
+            self.stats["released_arenas"] += 1
+            self.stats["released_bytes"] += int(view.cap) * (
+                view.host.shape[1] * 4 + 4)  # table rows + cached norms
+
     # ----------------------------------------------------- the fused pass
     def _launch(self, view: DeviceView, trows: np.ndarray, Qc: np.ndarray,
                 s: int):
         """Bucket-pad rows and queries, launch the fused pass, download the
-        slate. Returns host (vals (m, s) f32, rows (m, s) int64, -1 padded)."""
+        slate. Returns host (vals (m, s) f32, rows (m, s) int64, -1 padded).
+        Dispatch and trace/hit accounting are serialized under the engine
+        lock (the before/after _TRACES hit attribution needs launches not
+        to interleave); the expensive part — blocking on the device result
+        — happens OUTSIDE the lock, so concurrent query threads overlap
+        their device work."""
         m = Qc.shape[0]
         mb = _bucket_batch(m)
         qpad = np.zeros((mb, Qc.shape[1]), np.float32)
         qpad[:m] = Qc
-        self.stats["calls"] += 1
-        before = _TRACES[0]
-        bb = max(_bucket_rows(trows.size), _bucket_rows(s, 8))
-        if bb >= view.cap:
-            # full-coverage pass: the gathered bucket would be table-sized
-            # anyway, so screen the resident table through a candidate mask
-            # instead of materializing a table-sized gather
-            mask = np.zeros(view.cap, bool)
-            mask[trows] = True
-            self.stats["h2d_bytes"] += mask.nbytes + qpad.nbytes
-            vals, srows, invalid = _fused_screen_full(
-                view.table, view.xn2, jnp.asarray(mask), jnp.asarray(qpad), s)
-        else:
-            rows = np.full(bb, view.n, np.int32)  # pad: the sentinel row
-            rows[: trows.size] = trows
-            self.stats["h2d_bytes"] += rows.nbytes + qpad.nbytes
-            vals, srows, invalid = _fused_screen(
-                view.table, view.xn2, jnp.asarray(rows), jnp.asarray(qpad), s)
-        if _TRACES[0] == before:  # served from an already-compiled trace
-            self.stats["hits"] += 1
-        self.stats["traces"] = _TRACES[0]
+        with self._lock:
+            self.stats["calls"] += 1
+            before = _TRACES[0]
+            bb = max(_bucket_rows(trows.size), _bucket_rows(s, 8))
+            if bb >= view.cap:
+                # full-coverage pass: the gathered bucket would be
+                # table-sized anyway, so screen the resident table through a
+                # candidate mask instead of materializing a table-sized
+                # gather
+                mask = np.zeros(view.cap, bool)
+                mask[trows] = True
+                self.stats["h2d_bytes"] += mask.nbytes + qpad.nbytes
+                vals, srows, invalid = _fused_screen_full(
+                    view.table, view.xn2, jnp.asarray(mask), jnp.asarray(qpad),
+                    s)
+            else:
+                rows = np.full(bb, view.n, np.int32)  # pad: the sentinel row
+                rows[: trows.size] = trows
+                self.stats["h2d_bytes"] += rows.nbytes + qpad.nbytes
+                vals, srows, invalid = _fused_screen(
+                    view.table, view.xn2, jnp.asarray(rows), jnp.asarray(qpad),
+                    s)
+            if _TRACES[0] == before:  # served from an already-compiled trace
+                self.stats["hits"] += 1
+            self.stats["traces"] = _TRACES[0]
+        # jax dispatch is asynchronous: np.asarray blocks on the result, so
+        # it must not run under the lock
         vals = np.asarray(vals)[:m]
         srows = np.asarray(srows)[:m].astype(np.int64)
         invalid = np.asarray(invalid)[:m]
-        self.stats["d2h_bytes"] += vals.nbytes + srows.nbytes + invalid.nbytes
-        # sentinel/masked-out rows surface only when the slate outsizes the
-        # candidates; their BIG screen value or row index flags them
-        srows = np.where(invalid | (srows >= view.n) | (vals >= 1e29), -1, srows)
+        with self._lock:
+            self.stats["d2h_bytes"] += (vals.nbytes + srows.nbytes
+                                        + invalid.nbytes)
+        # sentinel/masked-out rows surface only when the slate outsizes
+        # the candidates; their BIG screen value or row index flags them
+        srows = np.where(invalid | (srows >= view.n) | (vals >= 1e29), -1,
+                         srows)
         return vals, srows
 
     def screen_topk(

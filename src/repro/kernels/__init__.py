@@ -4,3 +4,5 @@
 # VMEM accumulator — the device path of the batched knn_batch query engine),
 # and the MINDIST lower-bound filter.
 from . import ops, ref
+
+__all__ = ["ops", "ref"]

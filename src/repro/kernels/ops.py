@@ -7,8 +7,6 @@ the validation mode mandated for this repro.
 """
 from __future__ import annotations
 
-import functools
-
 import numpy as np
 
 import jax

@@ -21,9 +21,6 @@ from __future__ import annotations
 
 import math
 import re
-from typing import Any
-
-import numpy as np
 
 from jax.extend import core as jcore
 

@@ -16,7 +16,7 @@ import time
 import numpy as np
 
 from ..core import (
-    DiskModel, StreamConfig, StreamingIndex, SummarizationConfig, recall_at_k,
+    StreamConfig, StreamingIndex, SummarizationConfig, recall_at_k,
     render_heatmap,
 )
 from ..data.synthetic import seismic
@@ -40,6 +40,12 @@ def serve_coconut(args):
     folded with one all_gather — answers are identical to the
     single-device engine (host f64 re-rank).
 
+    ``--ingest async`` moves flush/merge work onto the background ingest
+    pipeline: ingest submissions return immediately, queries serve from
+    pinned epoch snapshots while compactions publish concurrently, and the
+    per-batch log line reports the freshness lag (entries not yet in a
+    published run, runs awaiting merge, snapshot age).
+
     Verification runs on the device engine by default: at startup the
     compile cache is pre-warmed with one dummy pass per (arena capacity,
     candidate bucket) the configured stream can produce, so steady-state
@@ -55,7 +61,7 @@ def serve_coconut(args):
                                card_bits=8)
     idx = StreamingIndex(StreamConfig(scheme=args.scheme, summarization=scfg,
                                       buffer_entries=4096, growth_factor=4,
-                                      block_size=512))
+                                      block_size=512, ingest=args.ingest))
     idx.raw.disk.keep_log = True
     engine = get_engine()
     if args.prewarm:
@@ -69,7 +75,7 @@ def serve_coconut(args):
         print(f"[serve] prewarmed {n} verification traces "
               f"({time.time()-t0:.1f}s) for stores up to {sizes[-1]} entries",
               flush=True)
-    lat, recalls = [], []
+    lat, recalls, lags = [], [], []
     for b in range(args.batches):
         x = seismic(args.batch_size, args.series_len, seed=b)
         idx.ingest(x, np.full(args.batch_size, b, np.int64))
@@ -86,11 +92,16 @@ def serve_coconut(args):
             dt = (time.time() - t0) / args.query_batch
             lat.append(dt)
             es = engine.stats
+            lag = idx.ingest_lag()
+            lags.append(lag["lag_entries"])
             line = (f"[serve] batch {b+1}: {args.query_batch} queries "
                     f"({tier}{'+mesh' if shard == 'mesh' else ''}), "
                     f"{dt*1e3:.2f} ms/query, "
                     f"partitions={idx.n_partitions}, "
-                    f"traces={es['traces']}, hits={es['hits']}")
+                    f"traces={es['traces']}, hits={es['hits']}, "
+                    f"epoch={lag['epoch']}, lag={lag['lag_entries']}, "
+                    f"pending_merge={lag['runs_pending_merge']}, "
+                    f"snap_age={lag['snapshot_age_s']:.2f}s")
             if tier == "approx":
                 # score recall without letting the oracle's reads pollute the
                 # approx tier's modeled-I/O figures and access heat map
@@ -105,6 +116,12 @@ def serve_coconut(args):
                 recalls.append(recall_at_k(got_ids, exact_ids))
                 line += f", recall@{args.k}={recalls[-1]:.3f}"
             print(line, flush=True)
+    if args.ingest == "async":
+        t0 = time.time()
+        idx.drain(timeout=300)
+        idx.close()
+        print(f"[serve] drained ingest backlog in {time.time()-t0:.2f}s "
+              f"(max observed lag {max(lags or [0])} entries)")
     lat = np.array(lat) * 1e3
     print(f"[serve] latency ms p50={np.percentile(lat,50):.2f} "
           f"p95={np.percentile(lat,95):.2f} max={lat.max():.2f}")
@@ -164,6 +181,10 @@ def main():
     ap.add_argument("--shard", default="none", choices=["none", "mesh"],
                     help="exact tier execution: single-device or the device "
                          "mesh (queries x runs 2-D shard_map)")
+    ap.add_argument("--ingest", default="sync", choices=["sync", "async"],
+                    help="sync: flush/merge inline on the serving thread; "
+                         "async: background ingest pipeline (queries never "
+                         "block on compaction, freshness lag is logged)")
     ap.add_argument("--approx", action="store_true",
                     help="deprecated alias for --tier approx")
     ap.add_argument("--no-prewarm", dest="prewarm", action="store_false",
@@ -176,6 +197,14 @@ def main():
     if args.shard == "mesh" and (args.approx or args.tier == "approx"):
         ap.error("--shard mesh serves the exact tier only (the approx "
                  "tier's seek/coalesce I/O model is host-side)")
+    if args.ingest == "async" and (args.approx or args.tier == "approx"):
+        # the approx tier's recall oracle save/restores the shared
+        # DiskModel stats/log in place around the exact re-query — an
+        # in-place mutation of state the background worker is concurrently
+        # accounting into, which would silently corrupt the I/O figures
+        ap.error("--ingest async cannot be combined with --tier approx: "
+                 "the per-batch recall oracle mutates the shared disk "
+                 "accounting in place (serve exact, or use sync ingest)")
     if args.mode == "coconut":
         serve_coconut(args)
     else:

@@ -10,13 +10,9 @@ sharding head_dim).
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from ..models.transformer import ModelConfig
 from ..compat import tree_flatten_with_path
 from .mesh import dp_axes
 

@@ -22,7 +22,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .common import dense_init, rms_norm
+from .common import dense_init
 
 CHUNK = 16
 LOG_DECAY_MIN = -3.5

@@ -8,7 +8,6 @@ form would force an all-gather of the logits).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
 import jax
@@ -20,7 +19,6 @@ from .transformer import (
     decode_step,
     forward,
     logits_fn,
-    make_cache,
     prefill,
 )
 

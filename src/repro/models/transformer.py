@@ -26,10 +26,9 @@ from .attention import (
     mla_attention,
     mla_decode,
     mla_init,
-    mla_qkv,
     sliding_attention,
 )
-from .common import COMPUTE_DTYPE, PARAM_DTYPE, KeyGen, dense_init, embed_init, rms_norm, rope, swiglu
+from .common import COMPUTE_DTYPE, KeyGen, dense_init, embed_init, rms_norm, rope, swiglu
 from .moe import MoEDims, moe_init, moe_mlp
 from .rglru import CONV_W, rglru_block, rglru_decode, rglru_init
 from .rwkv6 import (

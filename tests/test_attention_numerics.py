@@ -1,6 +1,5 @@
 """Numerics of the attention/recurrence implementations against references."""
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp

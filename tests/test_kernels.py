@@ -4,7 +4,7 @@ import pytest
 
 import jax.numpy as jnp
 
-from repro.core import SummarizationConfig, breakpoints, interleave, sax_from_paa
+from repro.core import SummarizationConfig, interleave, sax_from_paa
 from repro.core.summarization import paa as paa_np, sax_region
 from repro.kernels import ops, ref
 

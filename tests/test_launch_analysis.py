@@ -1,5 +1,4 @@
 """Dry-run support machinery: flop/byte counters, skip rules, specs."""
-import numpy as np
 
 import jax
 import jax.numpy as jnp
