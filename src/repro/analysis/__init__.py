@@ -1,0 +1,22 @@
+"""palmlint — repo-specific static analysis + runtime sanitizer.
+
+Static side (stdlib-only, runs in CI's bare lint job):
+
+    python -m repro.analysis src          # lint, exit 1 on findings
+    python -m repro.analysis --list-rules
+
+Runtime side (jax/numpy land, opt-in):
+
+    REPRO_SANITIZE=1 pytest -m slow       # lock-order + snapshot tripwires
+
+The static entry points are re-exported here; :mod:`.sanitize` is NOT
+imported eagerly because it touches ``repro.core`` (numpy/jax) and the
+lint gate must work without either installed.
+"""
+from .base import CHECKERS, RULES, Finding, Module, Project, run_project
+from .cli import build_project, collect_files, lint_source, main
+
+__all__ = [
+    "CHECKERS", "RULES", "Finding", "Module", "Project", "run_project",
+    "build_project", "collect_files", "lint_source", "main",
+]

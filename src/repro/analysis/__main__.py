@@ -1,0 +1,6 @@
+"""``python -m repro.analysis`` — the palmlint CI gate."""
+import sys
+
+from .cli import main
+
+sys.exit(main())

@@ -1,0 +1,196 @@
+"""precision-discipline — keep the f32-screen / f64-certify split honest.
+
+The exactness argument (PR 4) is a precision contract: the device screen
+runs in f32 (fast, error bounded by the ``4 n u |q||x|`` matmul term) and
+everything on the certify/re-rank side runs in f64 (the diff form, immune
+to cancellation). Three statically checkable rules protect it:
+
+1. **f64 into a screen matmul** — a value cast to float64 flowing into a
+   matmul/einsum inside a ``*screen*`` function silently doubles the
+   screen's bandwidth and defeats the f32 kernel path.
+2. **f32 reaching certify/re-rank without an explicit cast** — every
+   matmul/einsum inside a ``*rerank*``/``*certify*`` function must make
+   its precision explicit: a ``.astype(…float64…)`` on an operand or a
+   ``dtype=…float64`` kwarg on the reduction itself. An einsum that
+   silently inherits f32 inputs is exactly the cancellation bug the diff
+   form exists to avoid.
+3. **dtype-less array constructors in ``core/``/``kernels/``** — bare
+   ``jnp.zeros/ones/arange/empty/full`` default to the x64-flag-dependent
+   dtype, so the same code builds f32 on one host and f64 on another;
+   hot-path modules must spell the dtype.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Optional, Set
+
+from .base import (
+    Checker, Finding, Module, Project, attr_chain, call_name, iter_functions,
+    register,
+)
+
+#: jnp constructors that must carry an explicit dtype in core/ and kernels/
+DTYPE_REQUIRED = {"zeros", "ones", "arange", "empty", "full"}
+_ARRAY_MODULES = {"jnp", "jax.numpy"}
+
+MATMUL_CALLEES = {"dot", "matmul", "einsum", "dot_general", "tensordot"}
+
+_SCREEN_MARKERS = ("screen",)
+_CERTIFY_MARKERS = ("rerank", "re_rank", "certify")
+
+
+def _expr_mentions_f64(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and sub.attr == "float64":
+            return True
+        if isinstance(sub, ast.Name) and sub.id == "float64":
+            return True
+        if isinstance(sub, ast.Constant) and sub.value == "float64":
+            return True
+    return False
+
+
+def _f64_locals(fn: ast.AST) -> Set[str]:
+    """Names assigned from expressions that mention float64 (casts,
+    f64 constructors) — the checker's one-function dataflow."""
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and _expr_mentions_f64(node.value):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    out.add(tgt.id)
+    return out
+
+
+def _operands(node: ast.AST):
+    """Matmul operand expressions of a call or ``@`` binop."""
+    if isinstance(node, ast.BinOp):
+        return [node.left, node.right]
+    if isinstance(node, ast.Call):
+        return list(node.args)
+    return []
+
+
+def _operand_is_f64(expr: ast.AST, f64_names: Set[str]) -> bool:
+    if _expr_mentions_f64(expr):
+        return True
+    root = expr
+    while isinstance(root, (ast.Attribute, ast.Subscript)):
+        root = root.value
+    return isinstance(root, ast.Name) and root.id in f64_names
+
+
+def _dtype_kwarg_f64(node: ast.AST) -> bool:
+    if isinstance(node, ast.Call):
+        for kw in node.keywords:
+            if kw.arg == "dtype" and _expr_mentions_f64(kw.value):
+                return True
+    return False
+
+
+def _marked(name: str, markers) -> bool:
+    low = name.lower()
+    return any(m in low for m in markers)
+
+
+@register
+class PrecisionChecker(Checker):
+    name = "precision-discipline"
+    description = ("no f64 into screen-side matmuls, explicit f64 casts on "
+                   "the certify/re-rank path, explicit dtypes on jnp "
+                   "constructors in core/ and kernels/")
+
+    def check(self, project: Project) -> Iterable[Finding]:
+        for mod in project.modules:
+            if mod.is_core or mod.is_kernels:
+                yield from self._check_constructors(mod)
+            for fn, _cls in iter_functions(mod.tree):
+                if _marked(fn.name, _SCREEN_MARKERS) and \
+                        not _marked(fn.name, _CERTIFY_MARKERS):
+                    yield from self._check_screen(mod, fn)
+                if _marked(fn.name, _CERTIFY_MARKERS):
+                    yield from self._check_certify(mod, fn)
+
+    # ------------------------------------------------- rule 3: bare dtypes
+    def _check_constructors(self, mod: Module):
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if not (isinstance(f, ast.Attribute)
+                    and f.attr in DTYPE_REQUIRED):
+                continue
+            owner = attr_chain(f.value)
+            if owner not in _ARRAY_MODULES:
+                continue
+            has_dtype = any(kw.arg == "dtype" for kw in node.keywords)
+            # full(shape, fill) / zeros(shape, dt): a positional beyond the
+            # shape/fill slots is a dtype
+            min_args = 2 if f.attr == "full" else 1
+            if f.attr == "arange":
+                min_args = 3  # arange(start, stop, step, dtype)
+            if not has_dtype and len(node.args) <= min_args:
+                yield Finding(
+                    mod.path, node.lineno, node.col_offset, self.name,
+                    f"dtype-less jnp.{f.attr}(…) in a hot-path module — "
+                    f"the default dtype follows the x64 flag; spell it "
+                    f"(e.g. dtype=jnp.float32)")
+
+    # ---------------------------------------- rule 1: f64 into the screen
+    def _check_screen(self, mod: Module, fn):
+        f64_names = _f64_locals(fn)
+        for node in ast.walk(fn):
+            mm = None
+            if isinstance(node, ast.BinOp) and isinstance(node.op,
+                                                          ast.MatMult):
+                mm = node
+            elif isinstance(node, ast.Call) and \
+                    call_name(node) in MATMUL_CALLEES:
+                mm = node
+            if mm is None:
+                continue
+            if _dtype_kwarg_f64(mm):
+                continue  # einsum(…, dtype=f64) is the certify side's idiom
+            if isinstance(mm, ast.Call):
+                owner = attr_chain(mm.func.value) if isinstance(
+                    mm.func, ast.Attribute) else None
+                if owner in {"np", "numpy"}:
+                    # host-side screens ARE the provably exact fallback —
+                    # np matmuls in f64 are their whole point; the f32
+                    # contract governs the device (jnp) screen
+                    continue
+            for op in _operands(mm):
+                if isinstance(op, ast.Constant):
+                    continue  # einsum subscript strings
+                if _operand_is_f64(op, f64_names):
+                    yield Finding(
+                        mod.path, op.lineno, op.col_offset, self.name,
+                        f"float64 operand in a screen-side matmul "
+                        f"(`{fn.name}`) — the screen runs in f32; f64 "
+                        f"doubles bandwidth and defeats the kernel path")
+
+    # -------------------------------- rule 2: implicit f32 into certify
+    def _check_certify(self, mod: Module, fn):
+        f64_names = _f64_locals(fn)
+        for node in ast.walk(fn):
+            mm = None
+            if isinstance(node, ast.BinOp) and isinstance(node.op,
+                                                          ast.MatMult):
+                mm = node
+            elif isinstance(node, ast.Call) and \
+                    call_name(node) in MATMUL_CALLEES:
+                mm = node
+            if mm is None:
+                continue
+            if _dtype_kwarg_f64(mm):
+                continue
+            ops = [op for op in _operands(mm)
+                   if not isinstance(op, ast.Constant)]
+            if ops and not any(_operand_is_f64(op, f64_names)
+                               for op in ops):
+                yield Finding(
+                    mod.path, mm.lineno, mm.col_offset, self.name,
+                    f"matmul on the certify/re-rank path (`{fn.name}`) "
+                    f"with no explicit float64 cast — f32 accumulation "
+                    f"here is the cancellation bug the f64 re-rank "
+                    f"exists to prevent")

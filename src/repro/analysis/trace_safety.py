@@ -1,0 +1,269 @@
+"""trace-safety — code reachable from traced call sites stays pure.
+
+The zero-retrace serving story (PR 4) assumes the jitted fused passes are
+pure functions of their arguments: a traced function body runs ONCE per
+shape bucket, at trace time — any lock acquisition, DiskModel accounting,
+host RNG draw, ``time.*`` call, or nonlocal-state mutation inside it
+either silently happens once instead of per call, or (locks) can deadlock
+under the tracer. This checker finds every function reachable from a
+``jax.jit`` / ``shard_map`` / ``pallas_call`` root — decorator or call
+site, unwrapping ``functools.partial`` — by walking the project-local
+call graph, then flags host side effects inside the reachable set.
+
+Known deliberate exception in this repo: the ``_TRACES[0] += 1`` retrace
+counter *wants* exactly trace-time-only execution — it carries an
+``# palmlint: ignore[trace-safety]`` annotation at the site.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from .base import (
+    Checker, Finding, FunctionInfo, Module, Project, attr_chain, call_name,
+    register,
+)
+
+JIT_NAMES = {"jax.jit", "jit"}
+ROOT_CALLEES = {"jit", "shard_map", "pallas_call"}
+
+#: DiskModel accounting mutators — I/O charged from inside a trace runs
+#: once per compile, not once per call, silently corrupting the cost model
+DISK_ACCOUNTING = {"read_seq", "read_rand", "write_seq", "write_rand",
+                   "read_seq_ranges", "reset"}
+
+#: host RNG chains (jax.random is functional and explicitly allowed)
+_RNG_PREFIXES = ("np.random.", "numpy.random.", "random.")
+
+_LOCKISH = {"_lock", "_cond"}
+
+
+def _unwrap_partial(node: ast.AST) -> ast.AST:
+    """``functools.partial(f, …)`` -> ``f`` (recursively)."""
+    while isinstance(node, ast.Call) and call_name(node) == "partial":
+        if not node.args:
+            break
+        node = node.args[0]
+    return node
+
+
+def _jit_decorated(fn) -> bool:
+    for dec in fn.decorator_list:
+        chain = attr_chain(dec)
+        if chain in JIT_NAMES:
+            return True
+        if isinstance(dec, ast.Call):
+            fchain = attr_chain(dec.func)
+            if fchain in JIT_NAMES:  # @jax.jit(static_argnames=…)
+                return True
+            if fchain in {"functools.partial", "partial"} and dec.args:
+                if attr_chain(dec.args[0]) in JIT_NAMES:
+                    return True
+    return False
+
+
+def _resolve_edge(project: Project, node: ast.Call, mod: Module,
+                  class_name: Optional[str]) -> Optional[FunctionInfo]:
+    """Call-graph edge resolution, stricter than ``Project.resolve_call``:
+    generic method names (``append``, ``scan``, ``build``) collide with
+    list/dict/jax APIs, and a fabricated edge drags whole subsystems into
+    the reachable set. So: bare-name calls resolve to *functions* (never
+    methods), local-first; ``self.f()`` resolves within the caller's own
+    class; any other attribute call resolves only when the name maps to
+    exactly one definition project-wide and that definition is a plain
+    function (the ``kops.screen_select`` case)."""
+    f = node.func
+    if isinstance(f, ast.Name):
+        cands = [c for c in project.functions.get(f.id, [])
+                 if c.class_name is None]
+        local = [c for c in cands if c.module is mod]
+        if len(local) == 1:
+            return local[0]
+        if len(cands) == 1:
+            return cands[0]
+        return None
+    if isinstance(f, ast.Attribute):
+        all_cands = project.functions.get(f.attr, [])
+        if attr_chain(f.value) == "self" and class_name is not None:
+            own = [c for c in all_cands if c.class_name == class_name]
+            if len(own) == 1:
+                return own[0]
+            return None
+        if len(all_cands) == 1 and all_cands[0].class_name is None:
+            return all_cands[0]
+    return None
+
+
+def _resolve_root_target(project: Project, target: ast.AST,
+                         mod: Module) -> Optional[FunctionInfo]:
+    """Resolve the function argument of a jit/shard_map/pallas_call site.
+    Name targets prefer same-module definitions (nested closures
+    included); attribute targets need a project-wide unique name."""
+    name = None
+    if isinstance(target, ast.Name):
+        name = target.id
+    elif isinstance(target, ast.Attribute):
+        name = target.attr
+    if not name:
+        return None
+    cands = project.functions.get(name, [])
+    if isinstance(target, ast.Name):
+        local = [c for c in cands if c.module is mod]
+        if len(local) == 1:
+            return local[0]
+    if len(cands) == 1:
+        return cands[0]
+    return None
+
+
+def _local_bindings(fn: ast.AST) -> Set[str]:
+    """Names bound inside ``fn``: parameters + every bare-name store
+    (assignments, for targets, with-as, comprehension vars). A write whose
+    root is NOT in this set mutates closure/module state."""
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.arg):
+            out.add(node.arg)
+        elif isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            out.add(node.id)
+    return out
+
+
+@register
+class TraceSafetyChecker(Checker):
+    name = "trace-safety"
+    description = ("functions reachable from jax.jit / shard_map / "
+                   "pallas_call must not touch locks, DiskModel "
+                   "accounting, host RNG, time.*, or nonlocal Python "
+                   "state (they run at trace time, not per call)")
+
+    def check(self, project: Project) -> Iterable[Finding]:
+        roots = self._find_roots(project)
+        reachable = self._reach(project, roots)
+        seen: Set[Tuple[str, int, int]] = set()
+        for (info, root_name) in reachable:
+            for f in self._scan(info, root_name):
+                key = (f.path, f.line, f.col)
+                if key not in seen:
+                    seen.add(key)
+                    yield f
+
+    # --------------------------------------------------------------- roots
+    def _find_roots(self, project: Project) -> List[Tuple[FunctionInfo, str]]:
+        roots: List[Tuple[FunctionInfo, str]] = []
+        for mod in project.modules:
+            for node in ast.walk(mod.tree):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and _jit_decorated(node):
+                    roots.append((FunctionInfo(mod, node, node.name,
+                                               node.name), node.name))
+                elif isinstance(node, ast.Call) and \
+                        call_name(node) in ROOT_CALLEES and node.args:
+                    target = _unwrap_partial(node.args[0])
+                    if isinstance(target, ast.Lambda):
+                        roots.append((FunctionInfo(
+                            mod, target, "<lambda>",
+                            f"<lambda>@{mod.path}:{target.lineno}"),
+                            f"{call_name(node)} lambda"))
+                    else:
+                        fi = _resolve_root_target(project, target, mod)
+                        if fi is not None:
+                            roots.append((fi, fi.qualname))
+        return roots
+
+    # --------------------------------------------------------- reachability
+    def _reach(self, project: Project,
+               roots: List[Tuple[FunctionInfo, str]]
+               ) -> List[Tuple[FunctionInfo, str]]:
+        seen: Dict[int, Tuple[FunctionInfo, str]] = {}
+        queue = list(roots)
+        while queue:
+            info, root = queue.pop()
+            if id(info.node) in seen:
+                continue
+            seen[id(info.node)] = (info, root)
+            for node in ast.walk(info.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = call_name(node)
+                if not name or name in ROOT_CALLEES:
+                    continue
+                callee = _resolve_edge(project, node, info.module,
+                                       info.class_name)
+                if callee is not None and id(callee.node) not in seen:
+                    queue.append((callee, root))
+        return list(seen.values())
+
+    # ------------------------------------------------------------ the scan
+    def _scan(self, info: FunctionInfo, root: str) -> Iterable[Finding]:
+        mod = info.module
+        fn = info.node
+        where = (f"`{info.qualname}` (reachable from traced root "
+                 f"`{root}`)")
+        local = _local_bindings(fn)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.With):
+                for item in node.items:
+                    chain = attr_chain(item.context_expr)
+                    if chain and chain.split(".")[-1] in _LOCKISH:
+                        yield Finding(
+                            mod.path, item.context_expr.lineno,
+                            item.context_expr.col_offset, self.name,
+                            f"{where} acquires `{chain}` — traced code "
+                            f"must not take locks (runs at trace time; "
+                            f"can deadlock under the tracer)")
+            elif isinstance(node, ast.Call):
+                chain = attr_chain(node.func) or ""
+                name = call_name(node)
+                if name in {"acquire", "release"} and any(
+                        part in _LOCKISH for part in chain.split(".")):
+                    yield Finding(
+                        mod.path, node.lineno, node.col_offset, self.name,
+                        f"{where} calls `{chain}()` — traced code must "
+                        f"not touch locks")
+                elif name in DISK_ACCOUNTING:
+                    yield Finding(
+                        mod.path, node.lineno, node.col_offset, self.name,
+                        f"{where} charges DiskModel accounting "
+                        f"(`{chain or name}`) — traced code runs once per "
+                        f"compile, so the I/O figures would be wrong")
+                elif chain.startswith(_RNG_PREFIXES) or \
+                        name == "default_rng":
+                    yield Finding(
+                        mod.path, node.lineno, node.col_offset, self.name,
+                        f"{where} draws host RNG (`{chain or name}`) — "
+                        f"use jax.random with an explicit key")
+                elif chain.startswith("time."):
+                    yield Finding(
+                        mod.path, node.lineno, node.col_offset, self.name,
+                        f"{where} calls `{chain}()` — trace-time "
+                        f"timestamps are compile-time constants")
+            elif isinstance(node, (ast.Global, ast.Nonlocal)):
+                yield Finding(
+                    mod.path, node.lineno, node.col_offset, self.name,
+                    f"{where} declares "
+                    f"{'global' if isinstance(node, ast.Global) else 'nonlocal'}"
+                    f" {', '.join(node.names)} — traced code must not "
+                    f"rebind outer state")
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for tgt in targets:
+                    root_node = tgt
+                    while isinstance(root_node, (ast.Subscript,
+                                                 ast.Attribute)):
+                        root_node = root_node.value
+                    if isinstance(root_node, ast.Name) and \
+                            root_node.id not in local and \
+                            root_node is not tgt:
+                        yield Finding(
+                            mod.path, tgt.lineno, tgt.col_offset, self.name,
+                            f"{where} mutates nonlocal Python state "
+                            f"(`{root_node.id}`) — runs once at trace "
+                            f"time, not per call")
+
+    # re-exported for tests / doc tooling
+    @staticmethod
+    def describe_roots(project: Project) -> List[str]:
+        c = TraceSafetyChecker()
+        return sorted({r for _, r in c._reach(project, c._find_roots(project))})

@@ -40,3 +40,13 @@ __all__ = [
     "BufferChunk", "RunRegistry", "RunSet", "IngestPipeline",
     "ADSConfig", "ADSIndex", "Scenario", "Recommendation", "recommend",
 ]
+
+# Runtime sanitizer (lock-order assertions + snapshot seals): opt-in via
+# env var so the slow-tier stress tests can run with invariants armed
+# while production imports stay untouched. See repro.analysis.sanitize.
+import os as _os
+
+if _os.environ.get("REPRO_SANITIZE") == "1":
+    from ..analysis.sanitize import install as _sanitize_install
+
+    _sanitize_install()

@@ -152,6 +152,29 @@ class RawStore:
             return self._norms2[ids]
 
 
+def _zone_maps(sax_sorted: np.ndarray, block_size: int,
+               w: int) -> tuple[np.ndarray, np.ndarray]:
+    """Per-block (bmin, bmax) zone maps of key-sorted SAX rows.
+
+    One vectorized reduction over (nb, bs, w) instead of a Python loop per
+    block: pad the tail block by replicating its last row (already a
+    member, so block min/max are unchanged) — merges on the background
+    ingest worker spend less time holding the GIL. A free function so a
+    :class:`SortedRun` is constructed complete instead of patched after
+    ``__init__`` (published runs are immutable)."""
+    n = sax_sorted.shape[0]
+    nb = max(1, -(-n // block_size)) if n else 0
+    if nb == 0:
+        return np.full((0, w), 255, np.uint8), np.zeros((0, w), np.uint8)
+    pad = nb * block_size - n
+    sax_p = sax_sorted
+    if pad:
+        sax_p = np.concatenate(
+            [sax_sorted, np.broadcast_to(sax_sorted[-1:], (pad, w))])
+    blocks = sax_p.reshape(nb, block_size, w)
+    return blocks.min(axis=1), blocks.max(axis=1)
+
+
 @dataclasses.dataclass
 class SortedRun:
     """A contiguous sorted-by-key array of summarized entries + zone maps."""
@@ -218,21 +241,24 @@ class SortedRun:
             )
         keys = keys[order]
         sax_sorted = sax_syms[order].astype(np.uint8)
+        ts_sorted = None if ts is None else np.asarray(ts, np.int64)[order]
+        bmin, bmax = _zone_maps(sax_sorted, block_size, cfg.n_segments)
+        # the run is fully formed at construction: published runs are
+        # immutable (the sanitizer's seal tripwire enforces it), so every
+        # derived field is computed before __init__, never patched after
         run = SortedRun(
             cfg=cfg,
             keys=keys,
             sax=sax_sorted,
             ids=np.asarray(ids)[order].astype(np.int64),
             block_size=block_size,
-            bmin=np.zeros((0, cfg.n_segments), np.uint8),
-            bmax=np.zeros((0, cfg.n_segments), np.uint8),
+            bmin=bmin,
+            bmax=bmax,
             series=None if series is None else np.asarray(series, np.float32)[order],
-            ts=None if ts is None else np.asarray(ts, np.int64)[order],
+            ts=ts_sorted,
+            t_min=int(ts_sorted.min()) if ts_sorted is not None and n else 0,
+            t_max=int(ts_sorted.max()) if ts_sorted is not None and n else 0,
         )
-        run._rebuild_zone_maps()
-        if run.ts is not None and run.n:
-            run.t_min = int(run.ts.min())
-            run.t_max = int(run.ts.max())
         return run, report
 
     @staticmethod
@@ -259,27 +285,6 @@ class SortedRun:
             disk=disk,
             mem_budget_entries=mem_budget_entries,
         )
-
-    def _rebuild_zone_maps(self) -> None:
-        n, w = self.n, self.cfg.n_segments
-        bs = self.block_size
-        nb = max(1, -(-n // bs)) if n else 0
-        if nb == 0:
-            self.bmin = np.full((0, w), 255, np.uint8)
-            self.bmax = np.zeros((0, w), np.uint8)
-            return
-        # one vectorized reduction over (nb, bs, w) instead of a Python
-        # loop per block: pad the tail block by replicating its last row
-        # (already a member, so block min/max are unchanged) — merges on
-        # the background ingest worker spend less time holding the GIL
-        pad = nb * bs - n
-        sax_p = self.sax
-        if pad:
-            sax_p = np.concatenate(
-                [self.sax, np.broadcast_to(self.sax[-1:], (pad, w))])
-        blocks = sax_p.reshape(nb, bs, w)
-        self.bmin = blocks.min(axis=1)
-        self.bmax = blocks.max(axis=1)
 
     def entry_norms2(self) -> np.ndarray:
         """Cached (N,) squared norms of the materialized entries (runs are

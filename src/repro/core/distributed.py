@@ -90,7 +90,7 @@ def build_local(series, ids, cfg: DistBuildConfig, axis_names):
     samp = lax.dynamic_slice_in_dim(w0[::stride], 0, min(cfg.samples_per_shard, ln))
     allsamp = lax.all_gather(samp, axis_names, tiled=True)
     ssorted = jnp.sort(allsamp)
-    qidx = (jnp.arange(1, nsh) * allsamp.shape[0]) // nsh
+    qidx = (jnp.arange(1, nsh, dtype=jnp.int32) * allsamp.shape[0]) // nsh
     splitters = ssorted[qidx]  # (nsh-1,) uint32
 
     # --- bucket by most-significant key word (ties stay together)

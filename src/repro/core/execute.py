@@ -177,7 +177,8 @@ def _screen_topk_exact(
     d2e = (
         np.einsum("mn,mn->m", q64, q64)[:, None]
         + np.einsum("sn,sn->s", x64, x64)[None, :]
-        - 2.0 * (q64 @ x64.T)
+        # this matmul IS the exact f64 re-rank tail, not the f32 screen
+        - 2.0 * (q64 @ x64.T)  # palmlint: ignore[precision-discipline]
     )  # (m, S) exact (centered, so the matmul form cannot cancel)
     d2e = np.maximum(d2e, 0.0).astype(np.float32)
     kks = min(kk, d2e.shape[1])

@@ -63,9 +63,13 @@ class IngestPipeline:
 
     # ---------------------------------------------------------- submitting
     def _raise_pending(self) -> None:
-        if self._error is not None:
+        # Condition's default lock is an RLock, so this nests safely under
+        # callers (drain) that already hold the cond
+        with self._cond:
+            if self._error is None:
+                return
             err, self._error = self._error, None
-            raise RuntimeError("ingest worker failed") from err
+        raise RuntimeError("ingest worker failed") from err
 
     def insert(self, series: np.ndarray, ids: np.ndarray,
                ts: np.ndarray) -> None:

@@ -10,6 +10,7 @@ same accounting can model NVMe or HBM-resident runs.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import threading
 from typing import List, Tuple
@@ -60,6 +61,31 @@ class DiskModel:
     # read-modify-write, so they serialize here
     _lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False, compare=False)
+    # per-thread accounting suspension depth (see :meth:`unaccounted`)
+    _tls: threading.local = dataclasses.field(
+        default_factory=threading.local, repr=False, compare=False)
+
+    def _suspended(self) -> bool:
+        return getattr(self._tls, "suspend", 0) > 0
+
+    @contextlib.contextmanager
+    def unaccounted(self):
+        """Suspend accounting for I/O issued by the CALLING thread only.
+
+        For measurement-side reads that must not pollute the modeled cost
+        figures — e.g. the serving loop's recall oracle re-running a query
+        through the exact tier. Unlike the old save/restore of ``stats``
+        (a racy in-place mutation of state a concurrent ingest worker is
+        accounting into), this is a thread-local depth counter: the
+        worker's flush/merge I/O keeps landing in the shared stats
+        untouched while the oracle's own reads vanish. Re-entrant."""
+        # thread-local state: only ever touched by its own thread, so the
+        # instance lock is deliberately not taken
+        self._tls.suspend = getattr(self._tls, "suspend", 0) + 1  # palmlint: ignore[lock-discipline]
+        try:
+            yield self
+        finally:
+            self._tls.suspend -= 1  # palmlint: ignore[lock-discipline] — thread-local
 
     def reset(self) -> None:
         with self._lock:
@@ -67,6 +93,8 @@ class DiskModel:
             self.log = []
 
     def read_seq(self, nbytes: int, offset: int = 0) -> None:
+        if self._suspended():
+            return
         with self._lock:
             self.stats.seq_read_bytes += int(nbytes)
             self.stats.seq_ops += 1
@@ -75,6 +103,8 @@ class DiskModel:
                                  max(1, int(nbytes) // self.page_bytes), "rs"))
 
     def read_rand(self, nbytes: int, offset: int = 0) -> None:
+        if self._suspended():
+            return
         with self._lock:
             self.stats.rand_read_bytes += int(nbytes)
             pages = max(1, (int(nbytes) + self.page_bytes - 1) // self.page_bytes)
@@ -83,6 +113,8 @@ class DiskModel:
                 self.log.append((offset // self.page_bytes, pages, "rr"))
 
     def write_seq(self, nbytes: int, offset: int = 0) -> None:
+        if self._suspended():
+            return
         with self._lock:
             self.stats.seq_write_bytes += int(nbytes)
             self.stats.seq_ops += 1
@@ -91,6 +123,8 @@ class DiskModel:
                                  max(1, int(nbytes) // self.page_bytes), "ws"))
 
     def write_rand(self, nbytes: int, offset: int = 0) -> None:
+        if self._suspended():
+            return
         with self._lock:
             self.stats.rand_write_bytes += int(nbytes)
             pages = max(1, (int(nbytes) + self.page_bytes - 1) // self.page_bytes)

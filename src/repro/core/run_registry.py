@@ -170,7 +170,7 @@ class RunRegistry:
             return len(self._retired)
 
     # ----------------------------------------------------------- mutation
-    def _install(self, snap: RunSet) -> RunSet:
+    def _install_locked(self, snap: RunSet) -> RunSet:
         self._current = snap
         self.publish_time = time.time()
         return snap
@@ -179,7 +179,7 @@ class RunRegistry:
         """Publish one ingest batch into the write buffer (epoch bump)."""
         with self._lock:
             cur = self._current
-            return self._install(cur._with(buffer=cur.buffer + (chunk,)))
+            return self._install_locked(cur._with(buffer=cur.buffer + (chunk,)))
 
     def take_for_flush(self, n: int) -> Tuple[Optional[BufferChunk], RunSet]:
         """Atomically move the oldest ``n`` buffered entries into the
@@ -202,7 +202,7 @@ class RunRegistry:
             if n < avail:
                 rest = (BufferChunk(series[n:], ids[n:],
                                     None if ts is None else ts[n:]),)
-            snap = self._install(cur._with(buffer=rest,
+            snap = self._install_locked(cur._with(buffer=rest,
                                            flushing=cur.flushing + (taken,)))
             return taken, snap
 
@@ -218,7 +218,7 @@ class RunRegistry:
                 raise ValueError("publish_flush: chunk was not taken for flush")
             flushing = tuple(c for c in cur.flushing if c is not chunk)
             levels = cur._levels_with(level, cur.level_runs(level) + (run,))
-            return self._install(cur._with(levels=levels, flushing=flushing))
+            return self._install_locked(cur._with(levels=levels, flushing=flushing))
 
     def publish_merge(self, level: int, victims: Sequence[object],
                       merged: object) -> RunSet:
@@ -244,7 +244,7 @@ class RunRegistry:
             levels = tuple((lv, rs) for lv, rs in levels if lv != level + 1)
             levels = tuple(sorted(levels + ((level + 1, nxt + (merged,)),),
                                   key=lambda p: p[0]))
-            snap = self._install(cur._with(levels=levels))
+            snap = self._install_locked(cur._with(levels=levels))
             for v in victims:
                 self._retired.append(_Retired(run=v, epoch=snap.epoch))
             self._reap_locked()

@@ -147,7 +147,9 @@ def _fused_screen(table, xn2, rows, qc, s):
     rows from the arena, screen them in f32 matmul form against the cached
     norms, and select the top-s slate in-kernel. Pad rows (index = the
     sentinel row) carry BIG_NORM2 and never enter a slate."""
-    _TRACES[0] += 1  # executes once per trace — the retrace counter
+    # trace-time-only execution is the POINT: the increment runs once per
+    # retrace, which is exactly what the counter measures
+    _TRACES[0] += 1  # palmlint: ignore[trace-safety] — deliberate retrace counter
     sub = jnp.take(table, rows, axis=0)  # (B, d) device gather
     n2 = jnp.take(xn2, rows)  # (B,) cached |x - mu|^2
     vals, pidx = _screen_core(sub, n2, qc, s)
@@ -160,7 +162,9 @@ def _fused_screen_full(table, xn2, mask, qc, s):
     table, screening the RESIDENT table beats gathering it — the matmul
     streams the arena directly and a (cap,) candidate mask (masked-out and
     sentinel rows get BIG_NORM2) replaces the 10s-of-MB row gather."""
-    _TRACES[0] += 1  # executes once per trace — the retrace counter
+    # trace-time-only execution is the POINT: the increment runs once per
+    # retrace, which is exactly what the counter measures
+    _TRACES[0] += 1  # palmlint: ignore[trace-safety] — deliberate retrace counter
     n2 = jnp.where(mask, xn2, kops.BIG_NORM2)
     vals, pidx = _screen_core(table, n2, qc, s)
     return vals, pidx, pidx < 0
@@ -361,7 +365,8 @@ class VerifyEngine:
         )
         bad = np.nonzero(~certified)[0]
         if bad.size:
-            self.stats["fallbacks"] += int(bad.size)
+            with self._lock:
+                self.stats["fallbacks"] += int(bad.size)
             if exact:
                 ev, er = _screen_topk_exact(Q[bad], view.host[trows], k)
             else:  # approximate tiers keep their slack-screen semantics
@@ -400,7 +405,8 @@ class VerifyEngine:
             mask = jnp.zeros((cap,), bool)  # the full-coverage variant
             jax.block_until_ready(
                 _fused_screen_full(table, xn2, mask, qc, s))
-        self.stats["traces"] = _TRACES[0]
+        with self._lock:
+            self.stats["traces"] = _TRACES[0]
         return _TRACES[0] - before
 
 _ENGINE: Optional[VerifyEngine] = None

@@ -103,16 +103,17 @@ def serve_coconut(args):
                     f"pending_merge={lag['runs_pending_merge']}, "
                     f"snap_age={lag['snapshot_age_s']:.2f}s")
             if tier == "approx":
-                # score recall without letting the oracle's reads pollute the
-                # approx tier's modeled-I/O figures and access heat map
-                import dataclasses
-
-                d = idx.raw.disk
-                saved_stats = dataclasses.replace(d.stats)
-                saved_log = len(d.log)
-                _, exact_ids, _ = idx.window_knn_batch(qs, t0b, t1b, k=args.k)
-                d.stats = saved_stats
-                del d.log[saved_log:]
+                # score recall without letting the oracle's reads pollute
+                # the approx tier's modeled-I/O figures and access heat
+                # map: accounting is suspended for THIS thread only, so a
+                # background ingest worker's concurrent flush/merge I/O
+                # keeps landing in the shared stats untouched (the old
+                # save/restore of d.stats mutated state the worker was
+                # accounting into — the reason async+approx used to be
+                # rejected)
+                with idx.raw.disk.unaccounted():
+                    _, exact_ids, _ = idx.window_knn_batch(qs, t0b, t1b,
+                                                           k=args.k)
                 recalls.append(recall_at_k(got_ids, exact_ids))
                 line += f", recall@{args.k}={recalls[-1]:.3f}"
             print(line, flush=True)
@@ -197,14 +198,6 @@ def main():
     if args.shard == "mesh" and (args.approx or args.tier == "approx"):
         ap.error("--shard mesh serves the exact tier only (the approx "
                  "tier's seek/coalesce I/O model is host-side)")
-    if args.ingest == "async" and (args.approx or args.tier == "approx"):
-        # the approx tier's recall oracle save/restores the shared
-        # DiskModel stats/log in place around the exact re-query — an
-        # in-place mutation of state the background worker is concurrently
-        # accounting into, which would silently corrupt the I/O figures
-        ap.error("--ingest async cannot be combined with --tier approx: "
-                 "the per-batch recall oracle mutates the shared disk "
-                 "accounting in place (serve exact, or use sync ingest)")
     if args.mode == "coconut":
         serve_coconut(args)
     else:

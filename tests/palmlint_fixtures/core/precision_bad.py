@@ -1,0 +1,17 @@
+"""Bad fixture (lives under core/: the dtype rule is path-scoped)."""
+import jax.numpy as jnp
+
+
+def make_buffers(n):
+    a = jnp.zeros((n, 4))  # BAD: dtype-less constructor in core/
+    b = jnp.arange(n)  # BAD: dtype-less constructor in core/
+    return a, b
+
+
+def screen_pass(q, x):
+    q64 = q.astype(jnp.float64)
+    return q64 @ x.T  # BAD: f64 operand in a screen-side matmul
+
+
+def rerank_slate(q, x):
+    return jnp.einsum("md,nd->mn", q, x)  # BAD: no f64 cast on certify path

@@ -1,0 +1,24 @@
+"""Good fixture: explicit dtypes, f32 screen, f64-cast re-rank."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def make_buffers(n):
+    a = jnp.zeros((n, 4), dtype=jnp.float32)
+    b = jnp.arange(n, dtype=jnp.int32)
+    return a, b
+
+
+def screen_pass(q, x):
+    q32 = q.astype(jnp.float32)
+    return q32 @ x.T  # f32 screen: the contract
+
+
+def rerank_slate(q, x):
+    q64 = q.astype(np.float64)
+    x64 = x.astype(np.float64)
+    return jnp.einsum("md,nd->mn", q64, x64)
+
+
+def rerank_slate_kwarg(q, x):
+    return np.einsum("md,nd->mn", q, x, dtype=np.float64)

@@ -1,0 +1,15 @@
+"""Escape-hatch fixture: violations silenced by per-line annotations."""
+import threading
+
+
+class RunRegistry:
+    def __init__(self):
+        self._lock = threading.RLock()
+        self.approx_published = 0
+
+    def bump_estimate(self):
+        # a deliberately racy statistics counter: off-by-a-few is fine
+        self.approx_published += 1  # palmlint: ignore[lock-discipline]
+
+    def bump_everything(self):
+        self.approx_published += 1  # palmlint: ignore[*] — wildcard hatch

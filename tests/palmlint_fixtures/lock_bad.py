@@ -1,0 +1,18 @@
+"""Bad fixture: guarded-class state mutated outside the instance lock."""
+import threading
+
+
+class RunRegistry:
+    def __init__(self):
+        self._lock = threading.RLock()
+        self.published = 0  # constructor writes are exempt
+        self.log = []
+
+    def publish(self, snap):
+        self.published += 1  # BAD: unlocked counter bump
+        self.log.append(snap)  # BAD: unlocked container mutation
+        with self._lock:
+            self.current = snap  # fine: under the lock
+
+    def tidy(self):
+        del self.log[:]  # BAD: unlocked delete

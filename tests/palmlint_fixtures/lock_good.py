@@ -1,0 +1,22 @@
+"""Good fixture: every guarded-state write is under the lock, in a
+constructor, or in a `_locked`-suffixed caller-holds-lock helper."""
+import threading
+
+
+class RunRegistry:
+    def __init__(self):
+        self._lock = threading.RLock()
+        self.published = 0
+        self.log = []
+
+    def publish(self, snap):
+        with self._lock:
+            self.published += 1
+            self.log.append(snap)
+            self._install_locked(snap)
+
+    def _install_locked(self, snap):
+        self.current = snap  # caller holds the lock by convention
+
+    def peek(self):
+        return self.published  # reads are never flagged

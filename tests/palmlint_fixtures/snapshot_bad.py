@@ -1,0 +1,26 @@
+"""Bad fixture: published snapshots / plans mutated after construction.
+Includes the PR 3 PP hack shape: patching t_min/t_max on runs drawn out
+of a pinned snapshot."""
+import dataclasses
+
+
+@dataclasses.dataclass
+class RunSet:  # BAD: the catalog requires RunSet frozen=True
+    epoch: int = 0
+    levels: tuple = ()
+
+
+def pp_window_hack(snap: RunSet, t0, t1):
+    for run in snap.levels[0]:
+        run.t_min = t0  # BAD: mutates contents of a pinned snapshot
+        run.t_max = t1  # BAD: mutates contents of a pinned snapshot
+
+
+def widen(plan: "QueryPlan", extra):
+    plan.k = plan.k + extra  # BAD: attribute write on a plan
+    plan.sources.append(extra)  # BAD: in-place mutation of a plan field
+
+
+def bump(snap: RunSet):
+    snap.epoch += 1  # BAD: attribute write on a snapshot
+    object.__setattr__(snap, "epoch", 9)  # BAD: frozen bypass

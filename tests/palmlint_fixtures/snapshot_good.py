@@ -1,0 +1,24 @@
+"""Good fixture: snapshots are replaced, never mutated; contents only
+grow idempotent underscore lazy caches."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSet:
+    epoch: int = 0
+    levels: tuple = ()
+
+
+def bump(snap: RunSet) -> RunSet:
+    return dataclasses.replace(snap, epoch=snap.epoch + 1)
+
+
+def widen(plan: "QueryPlan", extra):
+    return [*plan.sources, extra]  # new list, plan untouched
+
+
+def warm_caches(snap: RunSet):
+    for run in snap.levels[0]:
+        run._norms2 = None  # underscore lazy cache: sanctioned
+        total = run.t_max - run.t_min  # reads are fine
+    return total

@@ -1,0 +1,26 @@
+"""Bad fixture: host side effects reachable from a jit root."""
+import functools
+import threading
+import time
+
+import jax
+import numpy as np
+
+_CALLS = [0]
+_lock = threading.Lock()
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def screen_pass(x, k, disk):
+    _CALLS[0] += 1  # BAD: nonlocal Python state
+    with _lock:  # BAD: lock under trace
+        pass
+    t0 = time.time()  # BAD: trace-time timestamp
+    rng = np.random.default_rng(0)  # BAD: host RNG
+    disk.read_seq(x.size * 4)  # BAD: DiskModel accounting
+    return helper(x), t0, rng
+
+
+def helper(x):
+    time.sleep(0.01)  # BAD: reachable from the jit root via the call graph
+    return x

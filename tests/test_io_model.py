@@ -109,3 +109,45 @@ def test_modeled_seconds_seq_vs_rand():
     rand.read_rand(500_000_000)  # ~122k page ops at 10k IOPS >> 1 s
     assert seq.modeled_seconds() == pytest.approx(1.0)
     assert rand.modeled_seconds() > 10 * seq.modeled_seconds()
+
+
+# ---------------------------------------------------------------------------
+# unaccounted(): thread-local accounting suspension
+# ---------------------------------------------------------------------------
+def test_unaccounted_suspends_calling_thread_only():
+    """The recall oracle's reads vanish while a concurrent ingest worker's
+    I/O keeps landing in the shared stats (the property the old in-place
+    stats save/restore could not provide)."""
+    import threading
+
+    d = DiskModel(keep_log=True)
+    d.read_seq(4096)
+    with d.unaccounted():
+        d.read_seq(1 << 20)   # oracle-side: must not account
+        d.write_rand(4096)
+        t = threading.Thread(target=lambda: d.write_seq(8192))
+        t.start()
+        t.join()
+    assert d.stats.seq_read_bytes == 4096       # only the pre-oracle read
+    assert d.stats.seq_write_bytes == 8192      # the worker still accounted
+    assert d.stats.rand_write_bytes == 0
+    # the access log is suppressed too: no phantom heat-map stripes
+    assert [kind for _, _, kind in d.log] == ["rs", "ws"]
+
+
+def test_unaccounted_is_reentrant():
+    d = DiskModel()
+    with d.unaccounted():
+        with d.unaccounted():
+            d.read_seq(100)
+        d.read_seq(100)  # still suspended at depth 1
+    d.read_seq(100)
+    assert d.stats.seq_read_bytes == 100
+    assert d.stats.seq_ops == 1
+
+
+def test_unaccounted_covers_range_reads():
+    d = DiskModel()
+    with d.unaccounted():
+        d.read_seq_ranges([(0, 4), (10, 12)], unit_bytes=4096)
+    assert d.stats.total_bytes == 0

@@ -1,0 +1,231 @@
+"""palmlint framework tests: fixtures pin exact rule IDs and line numbers,
+seeded-regression sources prove the gate catches the bug classes it was
+built for, and the clean-tree test keeps `python -m repro.analysis src`
+green."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.analysis import CHECKERS, RULES, build_project, collect_files, lint_source, run_project
+from repro.analysis.cli import main as palmlint_main
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = REPO / "tests" / "palmlint_fixtures"
+
+
+def lint_fixture(name, select=None):
+    """(live, suppressed) findings for one fixture file."""
+    project, errors = build_project([FIXTURES / name], root=REPO)
+    assert not errors, errors
+    return run_project(project, select)
+
+
+def as_tuples(findings):
+    return [(f.rule, f.line) for f in findings]
+
+
+# ---------------------------------------------------------------- registry
+def test_all_four_rules_registered():
+    assert set(CHECKERS) == {
+        "lock-discipline", "snapshot-immutability", "trace-safety",
+        "precision-discipline",
+    }
+    for name in CHECKERS:
+        assert RULES[name]  # every rule carries a catalog description
+
+
+# ----------------------------------------------------------- lock-discipline
+def test_lock_bad_fixture_exact_findings():
+    live, _ = lint_fixture("lock_bad.py")
+    assert as_tuples(live) == [
+        ("lock-discipline", 12),  # unlocked `self.published += 1`
+        ("lock-discipline", 13),  # unlocked `self.log.append(...)`
+        ("lock-discipline", 18),  # unlocked `del self.log[:]`
+    ]
+
+
+def test_lock_good_fixture_is_clean():
+    live, suppressed = lint_fixture("lock_good.py")
+    assert live == [] and suppressed == []
+
+
+# ----------------------------------------------------- snapshot-immutability
+def test_snapshot_bad_fixture_exact_findings():
+    live, _ = lint_fixture("snapshot_bad.py")
+    assert as_tuples(live) == [
+        ("snapshot-immutability", 8),   # RunSet declared without frozen=True
+        ("snapshot-immutability", 15),  # run.t_min = ... (snapshot contents)
+        ("snapshot-immutability", 16),  # run.t_max = ...
+        ("snapshot-immutability", 20),  # plan.k = ...
+        ("snapshot-immutability", 21),  # plan.sources.append(...)
+        ("snapshot-immutability", 25),  # snap.epoch += 1
+        ("snapshot-immutability", 26),  # object.__setattr__ bypass
+    ]
+
+
+def test_snapshot_good_fixture_is_clean():
+    live, suppressed = lint_fixture("snapshot_good.py")
+    assert live == [] and suppressed == []
+
+
+# ------------------------------------------------------------- trace-safety
+def test_trace_bad_fixture_exact_findings():
+    live, _ = lint_fixture("trace_bad.py")
+    assert as_tuples(live) == [
+        ("trace-safety", 15),  # _CALLS[0] += 1 (nonlocal state)
+        ("trace-safety", 16),  # with _lock
+        ("trace-safety", 18),  # time.time()
+        ("trace-safety", 19),  # np.random.default_rng
+        ("trace-safety", 20),  # disk.read_seq (accounting)
+        ("trace-safety", 25),  # time.sleep in helper, via the call graph
+    ]
+    # the call-graph hop is attributed to the root it is reachable from
+    assert "reachable from traced root `screen_pass`" in live[-1].message
+
+
+def test_trace_good_fixture_is_clean():
+    live, suppressed = lint_fixture("trace_good.py")
+    assert live == [] and suppressed == []
+
+
+# ------------------------------------------------------ precision-discipline
+def test_precision_bad_fixture_exact_findings():
+    live, _ = lint_fixture("core/precision_bad.py")
+    assert as_tuples(live) == [
+        ("precision-discipline", 6),   # dtype-less jnp.zeros
+        ("precision-discipline", 7),   # dtype-less jnp.arange
+        ("precision-discipline", 13),  # f64 operand in screen matmul
+        ("precision-discipline", 17),  # certify-path matmul without f64
+    ]
+
+
+def test_precision_good_fixture_is_clean():
+    live, suppressed = lint_fixture("core/precision_good.py")
+    assert live == [] and suppressed == []
+
+
+def test_precision_dtype_rule_is_path_scoped():
+    # identical source outside core//kernels/: the dtype rule stays quiet
+    src = "import jax.numpy as jnp\n\ndef f(n):\n    return jnp.zeros((n,))\n"
+    assert lint_source(src, path="tools/helper.py") == []
+    assert [f.rule for f in lint_source(src, path="src/repro/core/x.py")] \
+        == ["precision-discipline"]
+
+
+# ------------------------------------------------------------- escape hatch
+def test_escape_hatch_suppresses_and_is_counted():
+    live, suppressed = lint_fixture("escape_hatch.py")
+    assert live == []
+    assert as_tuples(suppressed) == [
+        ("lock-discipline", 12),  # ignore[lock-discipline]
+        ("lock-discipline", 15),  # ignore[*]
+    ]
+
+
+def test_escape_hatch_is_rule_specific():
+    src = (
+        "import threading\n"
+        "class RunRegistry:\n"
+        "    def bump(self):\n"
+        "        self.n += 1  # palmlint: ignore[trace-safety]\n"
+    )
+    # annotation names the WRONG rule: the finding stays live
+    assert [f.rule for f in lint_source(src)] == ["lock-discipline"]
+
+
+# ------------------------------------------------------- seeded regressions
+def test_seeded_regression_pp_tmin_tmax_hack_fails_the_gate():
+    """Reintroducing the PR 3 PP hack — patching t_min/t_max on runs in a
+    pinned snapshot around a window query — must fail the gate."""
+    src = (
+        "def window_query(reg, q, t0, t1):\n"
+        "    snap = reg.current()\n"
+        "    saved = []\n"
+        "    for run in snap.levels[0]:\n"
+        "        saved.append((run.t_min, run.t_max))\n"
+        "        run.t_min = t0\n"
+        "        run.t_max = t1\n"
+        "    return snap\n"
+    )
+    rules = [(f.rule, f.line) for f in lint_source(src)]
+    assert ("snapshot-immutability", 6) in rules
+    assert ("snapshot-immutability", 7) in rules
+
+
+def test_seeded_regression_unlocked_registry_mutation_fails_the_gate():
+    src = (
+        "class RunRegistry:\n"
+        "    def publish_merge(self, snap):\n"
+        "        self._current = snap\n"
+        "        self.publish_time = 0.0\n"
+    )
+    rules = [(f.rule, f.line) for f in lint_source(src)]
+    assert ("lock-discipline", 3) in rules
+    assert ("lock-discipline", 4) in rules
+
+
+def test_locked_suffix_convention_is_honored():
+    src = (
+        "class RunRegistry:\n"
+        "    def _install_locked(self, snap):\n"
+        "        self._current = snap\n"
+    )
+    assert lint_source(src) == []
+
+
+# --------------------------------------------------------------- clean tree
+def test_src_tree_is_clean():
+    """The merge gate: zero unannotated findings on the real tree."""
+    files = collect_files([str(REPO / "src")])
+    assert len(files) > 40  # sanity: the whole tree, not a subset
+    project, errors = build_project(files, root=REPO)
+    assert not errors
+    live, suppressed = run_project(project)
+    assert live == [], "\n".join(f.render() for f in live)
+    # the deliberate, annotated exceptions stay visible as suppressed
+    assert suppressed, "expected annotated exceptions on the tree"
+
+
+# ---------------------------------------------------------------------- CLI
+def test_cli_exit_codes_and_list_rules(capsys):
+    assert palmlint_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rule in CHECKERS:
+        assert rule in out
+    assert palmlint_main([str(FIXTURES / "lock_good.py")]) == 0
+    assert palmlint_main([str(FIXTURES / "lock_bad.py")]) == 1
+    capsys.readouterr()
+
+
+def test_cli_select_runs_only_named_rules(capsys):
+    rc = palmlint_main([str(FIXTURES / "lock_bad.py"),
+                        "--select", "trace-safety"])
+    assert rc == 0  # lock findings exist, but only trace-safety ran
+    rc = palmlint_main([str(FIXTURES / "lock_bad.py"),
+                        "--select", "no-such-rule"])
+    assert rc == 2
+    capsys.readouterr()
+
+
+def test_module_entry_point_runs_without_jax_or_numpy_imports(tmp_path):
+    """The CI lint job installs only ruff: importing repro.analysis must
+    not drag in numpy/jax. Run the real module entry point with imports
+    of both poisoned."""
+    poison = "raise ImportError('palmlint must stay stdlib-only')\n"
+    for name in ("numpy.py", "jax.py"):
+        (tmp_path / name).write_text(poison)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join([str(tmp_path), str(REPO / "src")])
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis",
+         str(FIXTURES / "lock_good.py")],
+        capture_output=True, text=True, env=env, cwd=str(REPO))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_github_format_renders_error_annotations(capsys):
+    rc = palmlint_main([str(FIXTURES / "lock_bad.py"), "--format", "github"])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "::error file=tests/palmlint_fixtures/lock_bad.py" in out
