@@ -4,9 +4,14 @@ medium / large windows, partition counts, and blocks visited — plus the
 batched engine (``window_knn_batch``) against the per-query loop at several
 concurrent-query batch sizes (the serving-traffic scenario), the batched
 approximate tier (``window_knn_approx_batch``) as batch x n_blocks sweeps
-with recall@5 against the exact oracle, and the concurrent ingest+query
+with recall@5 against the exact oracle, the concurrent ingest+query
 sweep: serving-loop query latency (p50/p99) while flushes/merges land,
-blocking ingest vs the background pipeline."""
+blocking ingest vs the background pipeline — and the storage-backend sweep:
+the same mixed ingest+query run under the modeled DiskModel backend vs the
+crash-consistent file backend (mmap runs + WAL), reporting the modeled I/O
+columns next to the file backend's *measured* byte counters."""
+import shutil
+import tempfile
 import time
 
 import numpy as np
@@ -65,6 +70,50 @@ def concurrent_sweep(smoke: bool = False):
             f"peak_lag_entries={lag_peak};"
             f"partitions={idx.n_partitions};"
             f"merges={idx.lsm.n_merges}")
+
+
+def storage_sweep(smoke: bool = False):
+    """Modeled vs measured I/O: one mixed ingest+query run per backend.
+
+    Both rows carry the modeled DiskModel columns (identical accounting on
+    either backend — the simulation keeps running under the file backend,
+    so trajectories stay comparable); the file row's measured columns are
+    the bytes actually pushed through raw.bin / run files / the WAL, plus
+    the readahead pool's span count. The WAL is deliberately NOT modeled
+    (it is a durability cost the simulation never had), which is exactly
+    what the measured-vs-modeled gap is for."""
+    n_batch, bsz = (6, 150) if smoke else (20, 600)
+    buffer_entries = 256 if smoke else 2048
+    qb = 8
+    Qb = seismic(qb, LEN, seed=4242)
+    for backend in ("model", "file"):
+        root = tempfile.mkdtemp(prefix="coconut-bench-store-")
+        try:
+            idx = StreamingIndex(StreamConfig(
+                scheme="BTP", summarization=CFG,
+                buffer_entries=buffer_entries, growth_factor=2,
+                block_size=256, storage=backend, storage_dir=root))
+            t0 = time.perf_counter()
+            for b in range(n_batch):
+                x = seismic(bsz, LEN, seed=8000 + b)
+                idx.ingest(x, np.full(bsz, b, np.int64))
+                if b >= 1:
+                    idx.window_knn_approx_batch(Qb, max(0, b - 4), b, k=5,
+                                                n_blocks=2)
+            us = (time.perf_counter() - t0) * 1e6 / n_batch
+            d = idx.raw.disk
+            m = idx.measured_io()
+            mb = 1e6
+            row(f"streaming/storage_{backend}_ingest_query", us,
+                f"modeled_io_s={d.modeled_seconds():.4f};"
+                f"modeled_mb={d.stats.total_bytes / mb:.2f};"
+                f"measured_write_mb={(m.get('raw_write_bytes', 0) + m.get('run_write_bytes', 0)) / mb:.2f};"
+                f"measured_read_mb={m.get('raw_read_bytes', 0) / mb:.2f};"
+                f"wal_mb={m.get('wal_write_bytes', 0) / mb:.2f};"
+                f"prefetch_spans={m.get('prefetch_spans', 0)};"
+                f"partitions={idx.n_partitions}")
+        finally:
+            shutil.rmtree(root, ignore_errors=True)
 
 
 def main(smoke: bool = False):
@@ -140,3 +189,4 @@ def main(smoke: bool = False):
                     f"recall_at5={rec:.3f}")
 
     concurrent_sweep(smoke)
+    storage_sweep(smoke)

@@ -21,6 +21,9 @@ from .ctree import CTree, CTreeConfig, RawStore, SortedRun
 from .run_registry import BufferChunk, RunRegistry, RunSet
 from .clsm import CLSM, CLSMConfig
 from .ingest import IngestPipeline
+from .storage import (
+    FileStore, SimulatedCrash, StorageEngine, WriteAheadLog, resolve_backend,
+)
 from .streaming import StreamConfig, StreamingIndex
 from .adsplus import ADSConfig, ADSIndex
 from .recommender import Scenario, Recommendation, recommend
@@ -38,6 +41,8 @@ __all__ = [
     "empty_topk_state", "merge_topk_state", "recall_at_k",
     "CLSM", "CLSMConfig", "StreamConfig", "StreamingIndex",
     "BufferChunk", "RunRegistry", "RunSet", "IngestPipeline",
+    "FileStore", "SimulatedCrash", "StorageEngine", "WriteAheadLog",
+    "resolve_backend",
     "ADSConfig", "ADSIndex", "Scenario", "Recommendation", "recommend",
 ]
 

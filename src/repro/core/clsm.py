@@ -51,10 +51,15 @@ class CLSMConfig:
 
 
 class CLSM:
-    def __init__(self, cfg: CLSMConfig, disk: Optional[DiskModel] = None):
+    def __init__(self, cfg: CLSMConfig, disk: Optional[DiskModel] = None,
+                 storage=None):
         self.cfg = cfg
         self.disk = disk or DiskModel()
         self.registry = RunRegistry()
+        # optional crash-consistent file backend
+        # (:class:`repro.core.storage.backend.StorageEngine`): WAL-first
+        # ingest publication, persisted runs, manifest commits
+        self.storage = storage
         self.n_flushes = 0
         self.n_merges = 0
         self.merged_bytes = 0
@@ -71,6 +76,15 @@ class CLSM:
         return self.registry.current().buffer_n
 
     # ---------------------------------------------------------------- ingest
+    def append_chunk(self, chunk: BufferChunk) -> RunSet:
+        """Publish one ingest batch into the buffer — WAL-first when a
+        storage engine is attached: the chunk is durable (fsync'd WAL
+        record) *before* it becomes query-visible, so an acknowledged batch
+        survives a crash at any later point."""
+        if self.storage is not None:
+            self.storage.append_wal(chunk)
+        return self.registry.append_buffer(chunk)
+
     def insert(self, series: np.ndarray, ids: np.ndarray, ts: np.ndarray) -> None:
         """Synchronous ingest: buffer the batch, flush (and merge) inline
         once the buffer fills. For ingest that must not block the caller on
@@ -81,7 +95,7 @@ class CLSM:
             ids=np.asarray(ids, np.int64),
             ts=np.asarray(ts, np.int64),
         )
-        self.registry.append_buffer(chunk)
+        self.append_chunk(chunk)
         while self.registry.current().buffer_n >= self.cfg.buffer_entries:
             self._flush()
 
@@ -96,6 +110,9 @@ class CLSM:
         chunk, _ = self.registry.take_for_flush(n)
         if chunk is None:
             return
+        st = self.storage
+        if st is not None:
+            st.maybe_crash("flush-taken")
         run, _ = SortedRun.build(
             chunk.series,
             chunk.ids,
@@ -106,9 +123,16 @@ class CLSM:
             disk=self.disk,
             mem_budget_entries=self.cfg.buffer_entries,
         )
+        if st is not None:
+            # persist BEFORE publish: once queries can route to the run its
+            # files exist; the manifest commit below makes them the durable
+            # home of these entries (until then the WAL still covers them)
+            run = st.persist_run(run)
         # queries planned while the run was sorting saw the chunk as a dense
         # source; this single swap makes later plans see the run instead
-        self.registry.publish_flush(chunk, run)
+        snap = self.registry.publish_flush(chunk, run)
+        if st is not None:
+            st.commit_flush(chunk.n, snap)
         self.n_flushes += 1
         if self.cfg.merge:
             self._maybe_merge(0)
@@ -132,7 +156,12 @@ class CLSM:
                 continue
             victims = list(runs[:gf])
             merged = self._merge_runs(victims)
-            self.registry.publish_merge(lv, victims, merged)
+            st = self.storage
+            if st is not None:
+                merged = st.persist_run(merged)
+            snap = self.registry.publish_merge(lv, victims, merged)
+            if st is not None:
+                st.commit_merge(snap)
             # the target level may now overflow, and this one may still
             # hold >= gf runs — re-check both (next level first, matching
             # the old recursive order)

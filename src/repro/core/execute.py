@@ -514,6 +514,10 @@ def _exec_range(src: RangeSource, plan, Q, k, vals, ids, stats, backend):
     # coalesce the per-query [lo, hi) entry ranges: overlapping queries
     # collapse into few long sequential index reads
     ranges = coalesce_ranges(zip(lo.tolist(), hi.tolist()))
+    if ops.prefetch_ranges is not None:
+        # kick the mmap page faults off now; the verify pass below reads
+        # the same rows once the window filter has had its say
+        ops.prefetch_ranges(ranges)
     if src.read_index_ranges is not None:
         src.read_index_ranges(ranges)
     if not ranges:

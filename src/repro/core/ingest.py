@@ -55,6 +55,7 @@ class IngestPipeline:
         self._cond = threading.Condition()
         self._stop = False
         self._busy = False  # worker is mid-flush (entries in flight)
+        self._done = False  # worker has exited (nothing will flush anymore)
         self._flush_all = False
         self._error: Optional[BaseException] = None
         self._worker = threading.Thread(target=self._run, name="coconut-ingest",
@@ -86,13 +87,24 @@ class IngestPipeline:
             ids=np.asarray(ids, np.int64),
             ts=np.asarray(ts, np.int64),
         )
-        self.lsm.registry.append_buffer(chunk)
+        self.lsm.append_chunk(chunk)
         with self._cond:
             self._cond.notify_all()
             if self.max_lag_entries is not None:
+                # a close() mid-wait still drains: wake on _done (worker
+                # exited), not on _stop alone, so a closing worker gets to
+                # shrink the backlog before we judge it stranded
                 self._cond.wait_for(
-                    lambda: self._stop or self._error is not None
+                    lambda: self._done or self._error is not None
                     or self._backlog() <= self.max_lag_entries)
+                if (self._error is None and self._done
+                        and self._backlog() > self.max_lag_entries):
+                    # the worker exited while this insert waited on
+                    # backpressure: its data sits in a buffer nothing will
+                    # ever flush — fail loudly instead of returning success
+                    raise RuntimeError(
+                        "ingest pipeline is closed (no worker will flush "
+                        "this data)")
         self._raise_pending()
 
     def _backlog(self) -> int:
@@ -110,6 +122,7 @@ class IngestPipeline:
             with self._cond:
                 self._cond.wait_for(lambda: self._stop or self._work_available())
                 if self._stop and not self._work_available():
+                    self._done = True
                     self._cond.notify_all()
                     return
                 self._busy = True
@@ -122,6 +135,7 @@ class IngestPipeline:
                     self._error = e
                     self._stop = True
                     self._busy = False
+                    self._done = True
                     self._cond.notify_all()
                 return
             with self._cond:
@@ -161,8 +175,14 @@ class IngestPipeline:
             return bool(ok)
 
     def close(self, *, timeout: Optional[float] = 30.0) -> None:
-        """Drain pending work and stop the worker (idempotent)."""
+        """Drain pending work and stop the worker (idempotent).
+
+        "Drain" includes the sub-threshold buffer remainder: ``_flush_all``
+        is raised together with ``_stop``, so the worker flushes everything
+        still buffered before exiting — no ingested entry is stranded in a
+        buffer nothing will ever flush."""
         with self._cond:
+            self._flush_all = True
             self._stop = True
             self._cond.notify_all()
         self._worker.join(timeout=timeout)

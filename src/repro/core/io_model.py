@@ -99,8 +99,10 @@ class DiskModel:
             self.stats.seq_read_bytes += int(nbytes)
             self.stats.seq_ops += 1
             if self.keep_log and nbytes:
-                self.log.append((offset // self.page_bytes,
-                                 max(1, int(nbytes) // self.page_bytes), "rs"))
+                # ceil-divide like the random paths: a 4097-byte read
+                # touches 2 pages, not 1
+                pages = max(1, (int(nbytes) + self.page_bytes - 1) // self.page_bytes)
+                self.log.append((offset // self.page_bytes, pages, "rs"))
 
     def read_rand(self, nbytes: int, offset: int = 0) -> None:
         if self._suspended():
@@ -119,8 +121,9 @@ class DiskModel:
             self.stats.seq_write_bytes += int(nbytes)
             self.stats.seq_ops += 1
             if self.keep_log and nbytes:
-                self.log.append((offset // self.page_bytes,
-                                 max(1, int(nbytes) // self.page_bytes), "ws"))
+                # ceil-divide like the random paths (page parity with reads)
+                pages = max(1, (int(nbytes) + self.page_bytes - 1) // self.page_bytes)
+                self.log.append((offset // self.page_bytes, pages, "ws"))
 
     def write_rand(self, nbytes: int, offset: int = 0) -> None:
         if self._suspended():
@@ -158,7 +161,10 @@ class DiskModel:
         bins = [0] * n_bins
         for off, n, _ in self.log:
             b0 = min(n_bins - 1, off * n_bins // mp)
-            b1 = min(n_bins - 1, (off + n) * n_bins // mp)
+            # page ranges are half-open: the last page touched is
+            # off + n - 1, so an access ending exactly on a bin boundary
+            # must not bleed a count into the next bin
+            b1 = min(n_bins - 1, (off + n - 1) * n_bins // mp)
             for b in range(b0, b1 + 1):
                 bins[b] += 1
         return bins

@@ -100,6 +100,9 @@ class SourceOps:
     # gather — the device path reads the arena, not the store, but pays
     # the same modeled I/O as the host engine so stats stay comparable
     fetch_account: Optional[Callable[[np.ndarray], None]] = None
+    # async readahead of coalesced [lo, hi) row spans (file-backed runs
+    # hand them to the readahead pool); advisory — answers never depend on it
+    prefetch_ranges: Optional[Callable[[List[Tuple[int, int]]], None]] = None
 
 
 @dataclasses.dataclass

@@ -181,6 +181,23 @@ class RunRegistry:
             cur = self._current
             return self._install_locked(cur._with(buffer=cur.buffer + (chunk,)))
 
+    def restore(self, levels: Sequence[Tuple[int, Sequence[object]]],
+                buffer: Sequence[BufferChunk]) -> RunSet:
+        """Install a recovered state (storage-engine crash recovery) in ONE
+        epoch bump: the manifest's runs plus the replayed WAL chunks become
+        the current snapshot atomically — a query planned before the bump
+        sees the (empty) pre-recovery world, one planned after sees all of
+        it, nobody sees a half-restored set. Only valid before any ingest
+        (the registry must still be empty)."""
+        with self._lock:
+            cur = self._current
+            if cur.levels or cur.buffer or cur.flushing:
+                raise ValueError("restore() into a non-empty registry")
+            lv = tuple(sorted(((int(l), tuple(rs)) for l, rs in levels
+                               if rs), key=lambda p: p[0]))
+            return self._install_locked(
+                cur._with(levels=lv, buffer=tuple(buffer), flushing=()))
+
     def take_for_flush(self, n: int) -> Tuple[Optional[BufferChunk], RunSet]:
         """Atomically move the oldest ``n`` buffered entries into the
         in-flight ``flushing`` set. Returns the taken chunk (None when the
@@ -264,6 +281,9 @@ class RunRegistry:
                 release = getattr(r.run, "release_device_view", None)
                 if release is not None:
                     release()
+                release_storage = getattr(r.run, "release_storage", None)
+                if release_storage is not None:
+                    release_storage()
                 self.released_runs += 1
             else:
                 keep.append(r)

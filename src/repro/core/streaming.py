@@ -42,6 +42,7 @@ reports freshness (pending entries, mergeable runs, snapshot age).
 from __future__ import annotations
 
 import dataclasses
+import tempfile
 import time
 from typing import Optional
 
@@ -66,6 +67,13 @@ class StreamConfig:
     # Must be >= buffer_entries — below the flush threshold the worker
     # could never shrink the backlog (IngestPipeline validates this)
     max_lag_entries: Optional[int] = None
+    # storage backend: "model" (DiskModel simulation, the default),
+    # "file" (crash-consistent mmap runs + WAL —
+    # :mod:`repro.core.storage`), or "auto" (resolve through the
+    # REPRO_STORAGE env var, default model)
+    storage: str = "auto"
+    # file backend root; None -> a fresh temp directory per index
+    storage_dir: Optional[str] = None
 
 
 class StreamingIndex:
@@ -77,6 +85,17 @@ class StreamingIndex:
         if cfg.ingest not in ("sync", "async"):
             raise ValueError(f"unknown ingest mode {cfg.ingest}")
         self.cfg = cfg
+        from .storage.backend import resolve_backend  # storage pkg is optional-at-use
+
+        self.storage = None
+        if resolve_backend(cfg.storage) == "file" and raw is None:
+            # an explicitly provided RawStore keeps its own backing; the
+            # file backend only engages when it owns the raw rows too
+            from .storage.backend import StorageEngine
+
+            root = cfg.storage_dir or tempfile.mkdtemp(prefix="coconut-store-")
+            self.storage = StorageEngine(root, cfg.summarization)
+            raw = self.storage.raw
         self.raw = raw or RawStore(cfg.summarization.series_len)
         lsm_cfg = CLSMConfig(
             summarization=cfg.summarization,
@@ -88,7 +107,13 @@ class StreamingIndex:
             materialized=cfg.materialized,
             merge=cfg.scheme != "TP",
         )
-        self.lsm = CLSM(lsm_cfg, disk=self.raw.disk)
+        self.lsm = CLSM(lsm_cfg, disk=self.raw.disk, storage=self.storage)
+        if self.storage is not None:
+            # load whatever a previous process made durable: the manifest's
+            # runs plus the replayed WAL chunks, installed in one epoch bump
+            levels, buffer = self.storage.recover()
+            if levels or buffer:
+                self.lsm.registry.restore(levels, buffer)
         # the PP/TP/BTP plan flag: PP never skips runs by time, it only
         # filters entries during verification
         self._window_skip = cfg.scheme in ("TP", "BTP")
@@ -98,6 +123,14 @@ class StreamingIndex:
 
             self.pipeline = IngestPipeline(
                 self.lsm, max_lag_entries=cfg.max_lag_entries)
+
+    @classmethod
+    def recover(cls, cfg: StreamConfig, storage_dir: str) -> "StreamingIndex":
+        """Reopen a file-backed index from its storage directory: the
+        durable runs and WAL entries come back queryable, ids keep
+        ascending from the durable extent, and ingest may continue."""
+        cfg = dataclasses.replace(cfg, storage="file", storage_dir=storage_dir)
+        return cls(cfg)
 
     # ---------------------------------------------------------------- ingest
     def ingest(self, series: np.ndarray, ts: np.ndarray) -> np.ndarray:
@@ -216,6 +249,13 @@ class StreamingIndex:
 
     def io_stats(self):
         return self.raw.disk.stats
+
+    def measured_io(self) -> dict:
+        """Measured byte counters of the file backend (empty dict under the
+        modeled backend — there is nothing real to measure)."""
+        if self.storage is None:
+            return {}
+        return self.storage.measured()
 
     def index_bytes(self) -> int:
         return self.lsm.index_bytes()

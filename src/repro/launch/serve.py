@@ -59,9 +59,15 @@ def serve_coconut(args):
     shard = args.shard if args.shard != "none" else None
     scfg = SummarizationConfig(series_len=args.series_len, n_segments=16,
                                card_bits=8)
-    idx = StreamingIndex(StreamConfig(scheme=args.scheme, summarization=scfg,
-                                      buffer_entries=4096, growth_factor=4,
-                                      block_size=512, ingest=args.ingest))
+    idx = StreamingIndex(StreamConfig(
+        scheme=args.scheme, summarization=scfg, buffer_entries=4096,
+        growth_factor=4, block_size=512, ingest=args.ingest,
+        # getattr: programmatic callers (tests) build partial Namespaces
+        storage=getattr(args, "storage", "auto"),
+        storage_dir=getattr(args, "storage_dir", None)))
+    if idx.storage is not None:
+        print(f"[serve] file storage backend at {idx.storage.root} "
+              "(WAL + manifest, crash-consistent)", flush=True)
     idx.raw.disk.keep_log = True
     engine = get_engine()
     if args.prewarm:
@@ -133,6 +139,14 @@ def serve_coconut(args):
     print(f"[serve] ingested {args.batches*args.batch_size} series, "
           f"{idx.n_partitions} partitions, "
           f"index={idx.index_bytes()>>20} MiB, modeled io={idx.raw.disk.modeled_seconds():.2f}s")
+    m = idx.measured_io()
+    if m:
+        print(f"[serve] measured io: wrote "
+              f"{(m['raw_write_bytes']+m['run_write_bytes']+m['wal_write_bytes'])/1e6:.1f} MB "
+              f"(raw {m['raw_write_bytes']/1e6:.1f}, runs {m['run_write_bytes']/1e6:.1f}, "
+              f"wal {m['wal_write_bytes']/1e6:.1f}), read {m['raw_read_bytes']/1e6:.1f} MB, "
+              f"{m['manifest_commits']} manifest commits, "
+              f"{m['prefetch_spans']} readahead spans")
     print("[serve] access heat map:", render_heatmap(idx.raw.disk.heatmap()))
 
 
@@ -186,6 +200,15 @@ def main():
                     help="sync: flush/merge inline on the serving thread; "
                          "async: background ingest pipeline (queries never "
                          "block on compaction, freshness lag is logged)")
+    ap.add_argument("--storage", default="auto",
+                    choices=["auto", "model", "file"],
+                    help="storage backend: model (DiskModel simulation), "
+                         "file (crash-consistent mmap runs + WAL), or auto "
+                         "(the REPRO_STORAGE env var, default model)")
+    ap.add_argument("--storage-dir", default=None,
+                    help="file backend root directory (default: a fresh "
+                         "temp dir); reopening the same dir recovers the "
+                         "durable index state")
     ap.add_argument("--approx", action="store_true",
                     help="deprecated alias for --tier approx")
     ap.add_argument("--no-prewarm", dest="prewarm", action="store_false",

@@ -60,3 +60,20 @@ def test_benchmarks_run_smoke_mode(tmp_path):
             for rec in batch_rows:  # per-config engine accounting
                 assert all(key in rec for key in
                            ("trace_count", "h2d_bytes", "d2h_bytes")), rec
+        if mod == "streaming":
+            # the storage-backend sweep: one row per backend, each with
+            # modeled columns; the file row also has real measured bytes
+            store = {rec["name"]: rec for rec in payload["rows"]
+                     if rec["name"].startswith("streaming/storage_")}
+            assert set(store) == {"streaming/storage_model_ingest_query",
+                                  "streaming/storage_file_ingest_query"}
+            for rec in store.values():
+                assert all(key in rec for key in
+                           ("modeled_io_s", "modeled_mb", "measured_write_mb",
+                            "measured_read_mb", "wal_mb", "prefetch_spans")), rec
+            frec = store["streaming/storage_file_ingest_query"]
+            assert float(frec["measured_write_mb"]) > 0, frec
+            assert float(frec["wal_mb"]) > 0, frec
+            # the modeled backend measures nothing (there is no file)
+            mrec = store["streaming/storage_model_ingest_query"]
+            assert float(mrec["measured_write_mb"]) == 0, mrec

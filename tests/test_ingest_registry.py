@@ -270,6 +270,42 @@ def test_drain_flush_buffer_flushes_the_subthreshold_tail():
     idx.close()
 
 
+def test_insert_racing_close_raises(monkeypatch):
+    """An insert blocked on backpressure while close() stops the worker must
+    raise, not return as if the data will ever be flushed. The worker is
+    pinned idle (``_work_available`` forced False) so the backlog genuinely
+    strands: before the fix the waiter either hung forever or returned
+    success for data nothing would ever flush."""
+    import time
+
+    from repro.core import IngestPipeline
+
+    lsm = CLSM(CLSMConfig(summarization=CFG, buffer_entries=64, block_size=32))
+    pipe = IngestPipeline(lsm, max_lag_entries=64)
+    monkeypatch.setattr(pipe, "_work_available", lambda: False)
+    errs = []
+
+    def submit():
+        try:
+            for b in range(2):  # second batch pushes backlog past the cap
+                pipe.insert(_series(64, seed=90 + b),
+                            np.arange(b * 64, (b + 1) * 64, dtype=np.int64),
+                            np.full(64, b, np.int64))
+        except RuntimeError as e:
+            errs.append(e)
+
+    th = threading.Thread(target=submit)
+    th.start()
+    deadline = time.time() + 10
+    while pipe._backlog() <= pipe.max_lag_entries and time.time() < deadline:
+        time.sleep(0.01)  # wait until the insert is really blocked
+    assert pipe._backlog() > pipe.max_lag_entries
+    pipe.close(timeout=10)
+    th.join(timeout=10)
+    assert not th.is_alive()
+    assert errs and "closed" in str(errs[0])
+
+
 def test_worker_errors_surface_on_the_submitting_thread(monkeypatch):
     idx = StreamingIndex(StreamConfig(scheme="BTP", summarization=CFG,
                                       buffer_entries=64, growth_factor=2,

@@ -99,6 +99,44 @@ def test_render_heatmap_shades_scale():
     assert len(s) == 3 and s[0] == " " and s[2] == "@"
 
 
+def test_seq_and_rand_page_counts_agree():
+    """All four access paths ceil-divide bytes into heat-map pages: a
+    4097-byte access touches 2 pages whether it was sequential or random
+    (the seq paths used to floor-divide, under-counting every partial
+    page and skewing seq-vs-rand heat comparisons)."""
+    for nbytes, pages in ((4096, 1), (4097, 2), (1, 1), (8192, 2)):
+        d = DiskModel(keep_log=True)  # default page_bytes=4096
+        d.read_seq(nbytes)
+        d.write_seq(nbytes)
+        d.read_rand(nbytes)
+        d.write_rand(nbytes)
+        assert [n for _, n, _ in d.log] == [pages] * 4, (nbytes, d.log)
+
+
+def test_heatmap_halfopen_boundary_does_not_bleed():
+    # pages [0, 2) under 4 bins over 8 pages live entirely in bin 0; the
+    # old end-bin computation (off + n) spilled one count into bin 1
+    d = DiskModel(keep_log=True, page_bytes=1)
+    d.read_seq(2, offset=0)
+    assert d.heatmap(n_bins=4, max_page=8) == [1, 0, 0, 0]
+
+
+def test_heatmap_binning_property():
+    """A logged span marks exactly the bins its pages fall into — no more
+    (end off-by-one), no fewer (start clamping)."""
+    rng = np.random.default_rng(7)
+    for _ in range(50):
+        off = int(rng.integers(0, 100))
+        n = int(rng.integers(1, 40))
+        d = DiskModel(keep_log=True, page_bytes=1)
+        d.read_rand(n, offset=off)
+        n_bins, mp = 8, 100
+        bins = d.heatmap(n_bins=n_bins, max_page=mp)
+        expect = {min(n_bins - 1, min(p, mp - 1) * n_bins // mp)
+                  for p in range(off, off + n)}
+        assert {i for i, v in enumerate(bins) if v} == expect, (off, n, bins)
+
+
 # ---------------------------------------------------------------------------
 # modeled cost
 # ---------------------------------------------------------------------------

@@ -1,0 +1,336 @@
+"""Crash-consistent file storage: WAL record mechanics, model-vs-file
+answer parity, crash-injection recovery, readahead, measured counters.
+
+The contract under test: (1) the file backend answers bitwise-identically
+to the modeled backend on every tier — it is a storage engine, not a
+different index; (2) a crash at ANY injected point between a WAL append
+and a manifest commit recovers to exactly the acknowledged entry set,
+answering bitwise-equal to an uncrashed index over the same entries; (3)
+torn/corrupt WAL tails truncate to the good prefix instead of erroring."""
+import glob
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    SimulatedCrash,
+    StreamConfig,
+    StreamingIndex,
+    SummarizationConfig,
+)
+from repro.core.run_registry import BufferChunk, RunRegistry
+from repro.core.storage.wal import WriteAheadLog, replay_file
+
+CFG = SummarizationConfig(series_len=64, n_segments=8, card_bits=6)
+
+
+def _series(n, seed):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, 64)).astype(np.float32).cumsum(axis=1)
+
+
+def _chunk(n, seed, id0=0, t=0):
+    return BufferChunk(series=_series(n, seed),
+                       ids=np.arange(id0, id0 + n, dtype=np.int64),
+                       ts=np.full(n, t, np.int64))
+
+
+def _stream_cfg(tmp_path=None, backend="model", **kw):
+    kw.setdefault("buffer_entries", 64)
+    kw.setdefault("block_size", 32)
+    kw.setdefault("growth_factor", 2)
+    return StreamConfig(scheme="BTP", summarization=CFG, storage=backend,
+                        storage_dir=None if tmp_path is None else str(tmp_path),
+                        **kw)
+
+
+def _batches(n_batch, bsz, seed0=0):
+    out, t = [], 0
+    for b in range(n_batch):
+        out.append((_series(bsz, seed0 + b), np.arange(t, t + bsz, dtype=np.int64)))
+        t += bsz
+    return out
+
+
+# ---------------------------------------------------------------------------
+# WAL record mechanics
+# ---------------------------------------------------------------------------
+def test_wal_roundtrip_with_and_without_ts(tmp_path):
+    wal = WriteAheadLog(str(tmp_path), series_len=64)
+    wal.open(0)
+    c1 = _chunk(10, seed=1)
+    c2 = BufferChunk(series=_series(5, 2), ids=np.arange(10, 15, dtype=np.int64))
+    wal.append(c1)
+    wal.append(c2)
+    wal.close()
+    chunks, good = replay_file(wal.path(0), 64)
+    assert good == os.path.getsize(wal.path(0))
+    assert len(chunks) == 2
+    np.testing.assert_array_equal(chunks[0].series, c1.series)
+    np.testing.assert_array_equal(chunks[0].ids, c1.ids)
+    np.testing.assert_array_equal(chunks[0].ts, c1.ts)
+    np.testing.assert_array_equal(chunks[1].series, c2.series)
+    assert chunks[1].ts is None
+
+
+def test_wal_torn_tail_is_truncated_on_open(tmp_path):
+    wal = WriteAheadLog(str(tmp_path), series_len=64)
+    wal.open(0)
+    wal.append(_chunk(8, seed=3))
+    wal.append(_chunk(8, seed=4, id0=8))
+    wal.close()
+    full = os.path.getsize(wal.path(0))
+    with open(wal.path(0), "r+b") as f:  # tear the second record mid-payload
+        f.truncate(full - 37)
+    wal2 = WriteAheadLog(str(tmp_path), series_len=64)
+    chunks = wal2.open(0)
+    assert len(chunks) == 1 and chunks[0].n == 8
+    # the torn tail is physically gone: appends continue from a clean prefix
+    wal2.append(_chunk(4, seed=5, id0=8))
+    wal2.close()
+    chunks, _ = replay_file(wal2.path(0), 64)
+    assert [c.n for c in chunks] == [8, 4]
+
+
+def test_wal_corrupt_record_drops_it_and_everything_after(tmp_path):
+    wal = WriteAheadLog(str(tmp_path), series_len=64)
+    wal.open(0)
+    sizes = []
+    for i in range(3):
+        wal.append(_chunk(6, seed=10 + i, id0=6 * i))
+        sizes.append(os.path.getsize(wal.path(0)))
+    wal.close()
+    with open(wal.path(0), "r+b") as f:  # flip a payload byte of record 2
+        f.seek(sizes[0] + 40)
+        b = f.read(1)
+        f.seek(sizes[0] + 40)
+        f.write(bytes([b[0] ^ 0xFF]))
+    chunks, good = replay_file(wal.path(0), 64)
+    assert len(chunks) == 1 and good == sizes[0]  # record 3 goes too
+
+
+def test_wal_truncate_front_splits_partial_record(tmp_path):
+    wal = WriteAheadLog(str(tmp_path), series_len=64)
+    wal.open(0)
+    wal.append(_chunk(10, seed=20, id0=0))
+    wal.append(_chunk(10, seed=21, id0=10))
+    old = wal.truncate_front(13)  # splits the second record at entry 3
+    assert old.endswith("wal-00000000.log") and wal.log_id == 1
+    assert wal.entries == 7
+    survivors = wal.chunks()
+    assert len(survivors) == 1
+    np.testing.assert_array_equal(survivors[0].ids, np.arange(13, 20))
+    # the rotated file replays to the same survivors
+    chunks, _ = replay_file(wal.path(1), 64)
+    np.testing.assert_array_equal(chunks[0].ids, np.arange(13, 20))
+    wal.close()
+
+
+# ---------------------------------------------------------------------------
+# model-vs-file answer parity
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("materialized", [False, True])
+def test_file_backend_answers_match_model_backend(tmp_path, materialized):
+    """Same stream, same queries, both tiers: the file backend is pure
+    storage — every answer is bitwise-equal to the modeled backend's."""
+    Q = _series(4, seed=999)
+    answers = {}
+    for backend in ("model", "file"):
+        cfg = _stream_cfg(tmp_path / backend if backend == "file" else None,
+                          backend, materialized=materialized)
+        idx = StreamingIndex(cfg)
+        for S, ts in _batches(6, 40, seed0=100):
+            idx.ingest(S, ts)
+        exact = idx.window_knn_batch(Q, 0, 10**9, k=5)
+        approx = idx.window_knn_approx_batch(Q, 50, 200, k=5, n_blocks=2)
+        answers[backend] = (exact, approx)
+    for tier in range(2):
+        vals_m, ids_m, _ = answers["model"][tier]
+        vals_f, ids_f, _ = answers["file"][tier]
+        np.testing.assert_array_equal(vals_m, vals_f)
+        np.testing.assert_array_equal(ids_m, ids_f)
+
+
+# ---------------------------------------------------------------------------
+# recovery
+# ---------------------------------------------------------------------------
+def test_fresh_directory_recovers_empty(tmp_path):
+    idx = StreamingIndex.recover(_stream_cfg(), str(tmp_path))
+    assert idx.raw.n == 0 and idx.n_partitions == 0
+    idx.ingest(_series(10, seed=0), np.arange(10, dtype=np.int64))
+    assert idx.raw.n == 10
+
+
+def test_clean_reopen_preserves_answers_and_id_sequence(tmp_path):
+    cfg = _stream_cfg(tmp_path, "file")
+    idx = StreamingIndex(cfg)
+    for S, ts in _batches(5, 40, seed0=200):
+        idx.ingest(S, ts)
+    Q = _series(3, seed=998)
+    vals, gids, _ = idx.window_knn_batch(Q, 0, 10**9, k=5)
+    n = idx.raw.n
+
+    idx2 = StreamingIndex.recover(_stream_cfg(), str(tmp_path))
+    assert idx2.raw.n == n
+    v2, g2, _ = idx2.window_knn_batch(Q, 0, 10**9, k=5)
+    np.testing.assert_array_equal(vals, v2)
+    np.testing.assert_array_equal(gids, g2)
+    # ids keep ascending from the durable extent
+    ids = idx2.ingest(_series(8, seed=201), np.arange(n, n + 8, dtype=np.int64))
+    np.testing.assert_array_equal(ids, np.arange(n, n + 8))
+
+
+def _crash_then_recover(tmp_path, point, crash_batch, batches, Q, k=5):
+    """Ingest until ``point`` fires at ``crash_batch``; recover; return the
+    recovered index + how many batches were fully acknowledged."""
+    cfg = _stream_cfg(tmp_path, "file")
+    idx = StreamingIndex(cfg)
+    n_ok = 0
+    for i, (S, ts) in enumerate(batches):
+        if i == crash_batch:
+            idx.storage.crash_after = point
+        try:
+            idx.ingest(S, ts)
+            n_ok += 1
+        except SimulatedCrash:
+            break
+    else:
+        raise AssertionError(f"crash point {point!r} never fired")
+    # the process is gone; recover from the directory alone
+    return StreamingIndex.recover(_stream_cfg(), str(tmp_path)), n_ok
+
+
+def _assert_equals_uncrashed(tmp_path, rec_idx, n_batches, batches, Q, k=5):
+    """The recovered index answers bitwise-equal to an uncrashed index that
+    ingested exactly the acknowledged batches."""
+    ctl = StreamingIndex(_stream_cfg(tmp_path / "control", "file"))
+    for S, ts in batches[:n_batches]:
+        ctl.ingest(S, ts)
+    assert rec_idx.raw.n == ctl.raw.n
+    for idx in (rec_idx, ctl):
+        idx_vals, idx_ids, _ = idx.window_knn_batch(Q, 0, 10**9, k=k)
+        idx.answers = (idx_vals, idx_ids)  # noqa: B010 — test-local stash
+    np.testing.assert_array_equal(rec_idx.answers[0], ctl.answers[0])
+    np.testing.assert_array_equal(rec_idx.answers[1], ctl.answers[1])
+
+
+@pytest.mark.parametrize("point", ["wal-append", "pre-manifest"])
+def test_crash_recovery_quick(tmp_path, point):
+    """Tier-1 cut of the crash sweep: one point before any commit, one
+    between run-publish and manifest commit."""
+    batches = _batches(6, 40, seed0=300)
+    Q = _series(3, seed=997)
+    rec, n_ok = _crash_then_recover(tmp_path, point, 3, batches, Q)
+    # the crashed batch WAS WAL-appended before every injected point fired,
+    # so it is part of the acknowledged durable set
+    _assert_equals_uncrashed(tmp_path, rec, n_ok + 1, batches, Q)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("point,crash_batch", [
+    ("wal-append", 3), ("flush-taken", 3), ("run-persisted", 3),
+    ("pre-manifest", 3), ("post-manifest", 3),
+    ("merge-pre-manifest", 6), ("merge-post-manifest", 6),
+])
+def test_crash_recovery_sweep(tmp_path, point, crash_batch):
+    """Every injected point between WAL append and manifest commit (flush
+    AND merge paths): recovery equals the uncrashed run bitwise, and
+    ingest can continue afterwards with the same equality."""
+    batches = _batches(10, 40, seed0=400)
+    Q = _series(3, seed=996)
+    rec, n_ok = _crash_then_recover(tmp_path, point, crash_batch, batches, Q)
+    acked = n_ok + 1
+    _assert_equals_uncrashed(tmp_path, rec, acked, batches, Q)
+    # life goes on: ingest the remaining batches into the recovered index
+    # and a fresh control; answers stay bitwise-equal
+    ctl = StreamingIndex(_stream_cfg(tmp_path / "resumed", "file"))
+    for S, ts in batches[:acked]:
+        ctl.ingest(S, ts)
+    for S, ts in batches[acked:]:
+        rec.ingest(S, ts)
+        ctl.ingest(S, ts)
+    rv, ri, _ = rec.window_knn_batch(Q, 0, 10**9, k=5)
+    cv, ci, _ = ctl.window_knn_batch(Q, 0, 10**9, k=5)
+    np.testing.assert_array_equal(rv, cv)
+    np.testing.assert_array_equal(ri, ci)
+
+
+def test_orphan_run_dirs_and_stale_wals_are_deleted(tmp_path):
+    cfg = _stream_cfg(tmp_path, "file")
+    idx = StreamingIndex(cfg)
+    for S, ts in _batches(4, 40, seed0=500):
+        idx.ingest(S, ts)
+    runs_dir = tmp_path / "runs"
+    os.makedirs(runs_dir / "run-99999999")
+    (runs_dir / "run-99999999" / "meta.json").write_text("{}")
+    stale = tmp_path / "wal" / "wal-00000099.log"
+    stale.write_bytes(b"junk")
+    idx2 = StreamingIndex.recover(_stream_cfg(), str(tmp_path))
+    assert not (runs_dir / "run-99999999").exists()
+    assert not stale.exists()
+    assert idx2.raw.n == idx.raw.n
+
+
+def test_manifest_is_valid_json_and_names_live_runs(tmp_path):
+    idx = StreamingIndex(_stream_cfg(tmp_path, "file"))
+    for S, ts in _batches(4, 40, seed0=600):
+        idx.ingest(S, ts)
+    man = json.loads((tmp_path / "MANIFEST.json").read_text())
+    named = {name for _, names in man["levels"] for name in names}
+    on_disk = {os.path.basename(p) for p in glob.glob(str(tmp_path / "runs" / "*"))}
+    assert named == on_disk  # every named run exists, no unnamed leftovers
+    live = {os.path.basename(r._storage.dir)
+            for r in idx.lsm.registry.current().runs_newest_first()}
+    assert named == live
+
+
+# ---------------------------------------------------------------------------
+# readahead + measured counters + restore mechanics
+# ---------------------------------------------------------------------------
+def test_prefetch_counters_advance_and_answers_unchanged(tmp_path):
+    from repro.core.storage.prefetch import get_pool
+
+    idx = StreamingIndex(_stream_cfg(tmp_path, "file"))
+    for S, ts in _batches(6, 40, seed0=700):
+        idx.ingest(S, ts)
+    pool = get_pool()
+    before = pool.stats()["prefetch_spans"]
+    Q = _series(4, seed=995)
+    vals, gids, _ = idx.window_knn_approx_batch(Q, 0, 10**9, k=5, n_blocks=2)
+    pool.drain()
+    stats = pool.stats()
+    assert stats["prefetch_spans"] > before
+    assert stats["prefetch_errors"] == 0
+    # readahead is advisory: a second identical query answers identically
+    v2, g2, _ = idx.window_knn_approx_batch(Q, 0, 10**9, k=5, n_blocks=2)
+    np.testing.assert_array_equal(vals, v2)
+    np.testing.assert_array_equal(gids, g2)
+
+
+def test_measured_counters_populated(tmp_path):
+    idx = StreamingIndex(_stream_cfg(tmp_path, "file"))
+    for S, ts in _batches(4, 40, seed0=800):
+        idx.ingest(S, ts)
+    idx.window_knn_batch(_series(2, seed=994), 0, 10**9, k=3)
+    m = idx.measured_io()
+    assert m["raw_write_bytes"] == idx.raw.n * 64 * 4
+    assert m["wal_records"] == 4
+    assert m["wal_write_bytes"] > 0
+    assert m["run_write_bytes"] > 0
+    assert m["manifest_commits"] > 0
+    assert m["raw_read_bytes"] > 0
+    # the modeled backend measures nothing
+    assert StreamingIndex(_stream_cfg()).measured_io() == {}
+
+
+def test_registry_restore_is_one_epoch_bump_and_guards_nonempty():
+    reg = RunRegistry()
+    e0 = reg.current().epoch
+    snap = reg.restore([(0, [object()]), (1, [object(), object()])],
+                       [_chunk(5, seed=900)])
+    assert snap.epoch == e0 + 1  # ONE bump for the whole recovered state
+    assert snap.n_runs == 3 and snap.buffer_n == 5 and snap.flushing == ()
+    with pytest.raises(ValueError):
+        reg.restore([], [_chunk(1, seed=901)])
