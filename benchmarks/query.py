@@ -154,3 +154,64 @@ def main(smoke: bool = False):
                     f"seq_read_mb={seq_mb:.2f};verified={st.entries_verified};"
                     f"modeled_io_s={disk.modeled_seconds() / bsz:.5f}",
                 )
+
+    # mixed-precision screen tier: f32 vs bf16 vs int8 device arenas. A
+    # fresh non-materialized store per dtype so each sweep uploads its own
+    # quantized raw arena; per dtype one row records the arena-build costs
+    # (upload h2d bytes, live footprint, and their compression ratio vs the
+    # f32 arena — the paper's bandwidth/memory win), and per batch size a
+    # row records throughput + certificate fallback rate + recall@10
+    # against the host-exact oracle (the exactness contract: recall stays
+    # 1.000 at every dtype, quantized or not).
+    arena_costs = {}
+    dt_variants = {}
+    for dt in ("f32", "bf16", "int8"):
+        disk = DiskModel()
+        raw = RawStore(LEN, disk, screen_dtype=dt)
+        ids = raw.append(X)
+        ct = CTree(CTreeConfig(summarization=CFG, block_size=1024,
+                               materialized=False, screen_dtype=dt), disk)
+        ct.bulk_build(X, ids)
+        es0 = dict(engine.stats)
+        # 16 queries: above the engine's batch floor, so the warm call
+        # uploads the arena even at smoke sizes
+        ct.knn_batch(QB[:16], k=10, raw=raw)
+        es1 = dict(engine.stats)
+        arena_costs[dt] = {
+            "h2d": es1["h2d_bytes"] - es0["h2d_bytes"],
+            "arena": es1["arena_bytes"] - es0["arena_bytes"],
+        }
+        dt_variants[dt] = (ct, raw, disk)
+    for dt, cost in arena_costs.items():
+        row(f"query/screen_{dt}_arena", 0.0,
+            f"upload_h2d_bytes={cost['h2d']};arena_bytes={cost['arena']};"
+            f"h2d_ratio_vs_f32="
+            f"{arena_costs['f32']['h2d'] / max(cost['h2d'], 1):.2f};"
+            f"arena_ratio_vs_f32="
+            f"{arena_costs['f32']['arena'] / max(cost['arena'], 1):.2f}")
+    ct_f32, raw_f32, _ = dt_variants["f32"]
+    _, oracle_ids, _ = ct_f32.knn_batch(QB, k=10, raw=raw_f32,
+                                        backend="numpy")
+    for dt, (ct, raw, disk) in dt_variants.items():
+        for bsz in batch_sizes:  # warm the trace cache across the sweep
+            ct.knn_batch(QB[:bsz], k=10, raw=raw)
+        for bsz in batch_sizes:
+            Qb = QB[:bsz]
+            reps = 7 if bsz <= 8 else 3
+            es0 = dict(engine.stats)
+            us = timeit(lambda: ct.knn_batch(Qb, k=10, raw=raw), repeat=reps)
+            es1 = dict(engine.stats)
+            _, got_ids, _ = ct.knn_batch(Qb, k=10, raw=raw)
+            # fallback_rate = fraction of device-screened queries the
+            # certificate sent to the host re-screen (a batch can take
+            # several fused passes, so `screened` — not reps*bsz — is the
+            # denominator)
+            fb = es1["fallbacks"] - es0["fallbacks"]
+            sc = es1["screened"] - es0["screened"]
+            rec = recall_at_k(got_ids, oracle_ids[:bsz])
+            assert rec == 1.0, f"screen dtype {dt} broke exactness: {rec}"
+            row(f"query/screen_{dt}_knn_batch_b{bsz}", us / bsz,
+                f"recall_at10={rec:.3f};"
+                f"fallback_rate={fb / max(sc, 1):.3f};"
+                f"h2d_bytes={es1['h2d_bytes'] - es0['h2d_bytes']};"
+                f"d2h_bytes={es1['d2h_bytes'] - es0['d2h_bytes']}")

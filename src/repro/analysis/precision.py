@@ -18,6 +18,21 @@ to cancellation). Three statically checkable rules protect it:
    ``jnp.zeros/ones/arange/empty/full`` default to the x64-flag-dependent
    dtype, so the same code builds f32 on one host and f64 on another;
    hot-path modules must spell the dtype.
+
+The mixed-precision storage tier (bf16/int8 arenas) adds two more:
+
+4. **un-upcast low-precision operands in certify/re-rank matmuls** — a
+   value derived from bf16/int8 storage that reaches a
+   ``*rerank*``/``*certify*`` matmul without an explicit float64 upcast
+   poisons the exact side with quantization error the certificate cannot
+   see. Storage dtype and compute dtype are separate contracts: quantized
+   values may only enter the f32 screen, never the f64 re-rank.
+5. **dtype-less casts in quantization helpers** — inside ``*quant*``
+   functions, ``.astype(...)`` must spell a concrete dtype
+   (``np.int8``, ``jnp.bfloat16``, …). A cast that inherits a dtype
+   dynamically (``x.astype(dt)``, ``x.astype(y.dtype)``) makes the
+   stored precision — and therefore the certificate's error term —
+   depend on runtime state the bound derivation never sees.
 """
 from __future__ import annotations
 
@@ -37,6 +52,19 @@ MATMUL_CALLEES = {"dot", "matmul", "einsum", "dot_general", "tensordot"}
 
 _SCREEN_MARKERS = ("screen",)
 _CERTIFY_MARKERS = ("rerank", "re_rank", "certify")
+_QUANT_MARKERS = ("quant",)
+
+#: storage dtypes of the mixed-precision arena tier — values tainted by
+#: these must be explicitly upcast before the f64 certify/re-rank side
+_LOWP_TOKENS = ("bfloat16", "int8")
+
+#: concrete dtype spellings accepted as the argument of an ``.astype`` in
+#: a quantization helper (rule 5) — anything else is a dynamic dtype
+_DTYPE_TOKENS = {
+    "float16", "float32", "float64", "bfloat16",
+    "int8", "int16", "int32", "int64",
+    "uint8", "uint16", "uint32", "uint64", "bool_",
+}
 
 
 def _expr_mentions_f64(node: ast.AST) -> bool:
@@ -62,6 +90,29 @@ def _f64_locals(fn: ast.AST) -> Set[str]:
     return out
 
 
+def _expr_mentions_lowp(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and sub.attr in _LOWP_TOKENS:
+            return True
+        if isinstance(sub, ast.Name) and sub.id in _LOWP_TOKENS:
+            return True
+        if isinstance(sub, ast.Constant) and sub.value in _LOWP_TOKENS:
+            return True
+    return False
+
+
+def _lowp_locals(fn: ast.AST) -> Set[str]:
+    """Names assigned from expressions mentioning bf16/int8 — values that
+    carry quantization error into whatever consumes them."""
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and _expr_mentions_lowp(node.value):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    out.add(tgt.id)
+    return out
+
+
 def _operands(node: ast.AST):
     """Matmul operand expressions of a call or ``@`` binop."""
     if isinstance(node, ast.BinOp):
@@ -78,6 +129,15 @@ def _operand_is_f64(expr: ast.AST, f64_names: Set[str]) -> bool:
     while isinstance(root, (ast.Attribute, ast.Subscript)):
         root = root.value
     return isinstance(root, ast.Name) and root.id in f64_names
+
+
+def _operand_is_lowp(expr: ast.AST, lowp_names: Set[str]) -> bool:
+    if _expr_mentions_lowp(expr):
+        return True
+    root = expr
+    while isinstance(root, (ast.Attribute, ast.Subscript)):
+        root = root.value
+    return isinstance(root, ast.Name) and root.id in lowp_names
 
 
 def _dtype_kwarg_f64(node: ast.AST) -> bool:
@@ -97,8 +157,9 @@ def _marked(name: str, markers) -> bool:
 class PrecisionChecker(Checker):
     name = "precision-discipline"
     description = ("no f64 into screen-side matmuls, explicit f64 casts on "
-                   "the certify/re-rank path, explicit dtypes on jnp "
-                   "constructors in core/ and kernels/")
+                   "the certify/re-rank path (and no un-upcast bf16/int8 "
+                   "reaching it), explicit dtypes on jnp constructors in "
+                   "core/ and kernels/ and on casts in quant helpers")
 
     def check(self, project: Project) -> Iterable[Finding]:
         for mod in project.modules:
@@ -110,6 +171,8 @@ class PrecisionChecker(Checker):
                     yield from self._check_screen(mod, fn)
                 if _marked(fn.name, _CERTIFY_MARKERS):
                     yield from self._check_certify(mod, fn)
+                if _marked(fn.name, _QUANT_MARKERS):
+                    yield from self._check_quant_casts(mod, fn)
 
     # ------------------------------------------------- rule 3: bare dtypes
     def _check_constructors(self, mod: Module):
@@ -170,8 +233,10 @@ class PrecisionChecker(Checker):
                         f"doubles bandwidth and defeats the kernel path")
 
     # -------------------------------- rule 2: implicit f32 into certify
+    # ------------------------- rule 4: un-upcast bf16/int8 into certify
     def _check_certify(self, mod: Module, fn):
         f64_names = _f64_locals(fn)
+        lowp_names = _lowp_locals(fn)
         for node in ast.walk(fn):
             mm = None
             if isinstance(node, ast.BinOp) and isinstance(node.op,
@@ -183,7 +248,7 @@ class PrecisionChecker(Checker):
             if mm is None:
                 continue
             if _dtype_kwarg_f64(mm):
-                continue
+                continue  # dtype=f64 upcasts every input before reducing
             ops = [op for op in _operands(mm)
                    if not isinstance(op, ast.Constant)]
             if ops and not any(_operand_is_f64(op, f64_names)
@@ -194,3 +259,37 @@ class PrecisionChecker(Checker):
                     f"with no explicit float64 cast — f32 accumulation "
                     f"here is the cancellation bug the f64 re-rank "
                     f"exists to prevent")
+            for op in ops:
+                if _operand_is_lowp(op, lowp_names) and \
+                        not _operand_is_f64(op, f64_names):
+                    yield Finding(
+                        mod.path, op.lineno, op.col_offset, self.name,
+                        f"bf16/int8 operand in a certify/re-rank matmul "
+                        f"(`{fn.name}`) without a float64 upcast — "
+                        f"quantized storage may feed the screen, never "
+                        f"the exact side; re-rank from the f32 host "
+                        f"mirror and upcast explicitly")
+
+    # --------------------- rule 5: dynamic dtypes in quantization casts
+    def _check_quant_casts(self, mod: Module, fn):
+        for node in ast.walk(fn):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "astype" and node.args):
+                continue
+            arg = node.args[0]
+            spelled = any(
+                (isinstance(sub, ast.Attribute)
+                 and sub.attr in _DTYPE_TOKENS)
+                or (isinstance(sub, ast.Name) and sub.id in _DTYPE_TOKENS)
+                or (isinstance(sub, ast.Constant)
+                    and sub.value in _DTYPE_TOKENS)
+                for sub in ast.walk(arg))
+            if not spelled:
+                yield Finding(
+                    mod.path, node.lineno, node.col_offset, self.name,
+                    f"dtype-less cast in a quantization helper "
+                    f"(`{fn.name}`) — `.astype(…)` here must spell a "
+                    f"concrete dtype (np.int8, jnp.bfloat16, …); a "
+                    f"dynamic dtype makes the stored precision, and the "
+                    f"certificate's error term, runtime-dependent")

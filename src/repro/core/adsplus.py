@@ -45,6 +45,9 @@ class ADSConfig:
     leaf_size: int = 1024
     mode: str = "full"  # full | adaptive
     query_leaf_size: int = 128  # adaptive-split target during queries
+    # device-arena storage dtype for the screen tier (f32|bf16|int8; None
+    # resolves the engine default / REPRO_SCREEN_DTYPE)
+    screen_dtype: Optional[str] = None
 
 
 class _Node:
@@ -242,7 +245,8 @@ class ADSIndex:
                 if flat["series"]
                 else np.zeros((0, L), np.float32)
             )
-            flat["_dev_view"] = get_engine().build_view(table)
+            flat["_dev_view"] = get_engine().build_view(
+                table, dtype=self.cfg.screen_dtype)
         return flat["_dev_view"]
 
     def _flat_ops(self, flat: dict, raw: Optional[RawStore], *,
@@ -284,14 +288,17 @@ class ADSIndex:
 
         # device arena: full mode owns the flat table (row == flat position);
         # adaptive mode verifies against the RawStore arena (row == global id)
+        screen_dtype = None
         if self.cfg.mode == "full":
             device_view = lambda: self._flat_device_view(flat)
             table_rows = None  # identity
             table_ids = lambda r: flat["ids"][r]
+            screen_dtype = self.cfg.screen_dtype
         elif raw is not None:
             device_view = raw.device_view
             table_rows = lambda p: flat["ids"][p]
             table_ids = lambda r: r  # raw rows ARE global ids
+            screen_dtype = raw.screen_dtype
         else:
             device_view = table_rows = table_ids = None
             fetch_account = None
@@ -307,6 +314,7 @@ class ADSIndex:
             table_rows=table_rows,
             table_ids=table_ids,
             fetch_account=fetch_account,
+            screen_dtype=screen_dtype,
         )
 
     def _make_refine(self, flat: dict, blocks_tbl: list, qp: np.ndarray):

@@ -48,6 +48,9 @@ class CLSMConfig:
     block_size: int = 512
     materialized: bool = False
     merge: bool = True  # False => TP (flush-only temporal partitions)
+    # device-arena storage dtype for flushed/merged runs (f32|bf16|int8;
+    # None resolves the engine default / REPRO_SCREEN_DTYPE)
+    screen_dtype: Optional[str] = None
 
 
 class CLSM:
@@ -122,6 +125,7 @@ class CLSM:
             ts=chunk.ts,
             disk=self.disk,
             mem_budget_entries=self.cfg.buffer_entries,
+            screen_dtype=self.cfg.screen_dtype,
         )
         if st is not None:
             # persist BEFORE publish: once queries can route to the run its
@@ -187,6 +191,7 @@ class CLSM:
             ts=ts,
             disk=None,  # accounted below as one sequential write
             mem_budget_entries=max(1, self.cfg.buffer_entries),
+            screen_dtype=self.cfg.screen_dtype,
         )
         self.disk.write_seq(merged.index_bytes())
         self.n_merges += 1

@@ -68,9 +68,13 @@ __all__ = [
 class RawStore:
     """The raw data-series file. Append-only; random reads are accounted."""
 
-    def __init__(self, series_len: int, disk: Optional[DiskModel] = None):
+    def __init__(self, series_len: int, disk: Optional[DiskModel] = None,
+                 screen_dtype: Optional[str] = None):
         self.series_len = series_len
         self.disk = disk or DiskModel()
+        # arena storage dtype for the device screen tier (f32|bf16|int8;
+        # None -> the engine default / REPRO_SCREEN_DTYPE)
+        self.screen_dtype = screen_dtype
         # guards _chunks/_data/_norms2/_dev_view/n: the serving loop appends
         # from the ingest thread while query threads fetch concurrently
         self._lock = threading.RLock()
@@ -126,7 +130,8 @@ class RawStore:
         eng = get_engine()
         with self._lock:  # one thread builds/extends; others reuse
             if self._dev_view is None:
-                self._dev_view = eng.build_view(self._all())
+                self._dev_view = eng.build_view(self._all(),
+                                                dtype=self.screen_dtype)
             elif self._dev_view.n < self.n:
                 self._dev_view = eng.extend_view(self._dev_view, self._all())
             return self._dev_view
@@ -190,6 +195,7 @@ class SortedRun:
     ts: Optional[np.ndarray] = None  # (N,) int64 timestamps
     t_min: int = 0
     t_max: int = 0
+    screen_dtype: Optional[str] = None  # arena storage dtype (None = engine default)
     _norms2: Optional[np.ndarray] = None  # lazy |x|^2 cache (materialized runs)
     _dev_view: Optional[object] = None  # lazy device arena (materialized runs)
     _storage: Optional[object] = None  # on-disk home when file-backed (RunFiles)
@@ -228,6 +234,7 @@ class SortedRun:
         disk: Optional[DiskModel] = None,
         mem_budget_entries: Optional[int] = None,
         presorted: bool = False,
+        screen_dtype: Optional[str] = None,
     ) -> tuple["SortedRun", SortReport]:
         """Build a run from unsorted summarized entries via external sort."""
         keys = interleave(sax_syms.astype(np.int32), cfg).reshape(-1, cfg.key_words)
@@ -259,6 +266,7 @@ class SortedRun:
             ts=ts_sorted,
             t_min=int(ts_sorted.min()) if ts_sorted is not None and n else 0,
             t_max=int(ts_sorted.max()) if ts_sorted is not None and n else 0,
+            screen_dtype=screen_dtype,
         )
         return run, report
 
@@ -273,6 +281,7 @@ class SortedRun:
         ts: Optional[np.ndarray] = None,
         disk: Optional[DiskModel] = None,
         mem_budget_entries: Optional[int] = None,
+        screen_dtype: Optional[str] = None,
     ) -> tuple["SortedRun", SortReport]:
         p = paa(np.asarray(series, np.float32), cfg)
         syms = sax_from_paa(p, cfg)
@@ -285,6 +294,7 @@ class SortedRun:
             ts=ts,
             disk=disk,
             mem_budget_entries=mem_budget_entries,
+            screen_dtype=screen_dtype,
         )
 
     def entry_norms2(self) -> np.ndarray:
@@ -302,7 +312,8 @@ class SortedRun:
         if self._dev_view is None:
             from .verify_engine import get_engine  # lazy: numpy paths stay jax-free
 
-            self._dev_view = get_engine().build_view(self.series)
+            self._dev_view = get_engine().build_view(
+                self.series, dtype=self.screen_dtype)
         return self._dev_view
 
     def release_device_view(self) -> None:
@@ -377,16 +388,19 @@ class SortedRun:
         # device arena accessors: materialized runs own their arena (table
         # row == entry position); non-materialized runs verify against the
         # RawStore's arena (table row == global id)
+        screen_dtype = None
         if self.materialized:
             device_view = self.device_view
             table_rows = None  # identity
             table_ids = lambda r: self.ids[r]
             fetch_account = lambda p: self._account_entries(p, disk, sequential)
+            screen_dtype = self.screen_dtype
         elif raw is not None:
             device_view = raw.device_view
             table_rows = lambda p: self.ids[p]
             table_ids = lambda r: r  # raw rows ARE global ids
             fetch_account = lambda p: raw.account_fetch(self.ids[p])
+            screen_dtype = raw.screen_dtype
         else:
             device_view = table_rows = table_ids = fetch_account = None
         prefetch_ranges = None
@@ -414,6 +428,7 @@ class SortedRun:
             table_ids=table_ids,
             fetch_account=fetch_account,
             prefetch_ranges=prefetch_ranges,
+            screen_dtype=screen_dtype,
         )
 
     def plan_exact(
@@ -662,6 +677,9 @@ class CTreeConfig:
     materialized: bool = False
     fill_factor: float = 1.0  # <1 leaves insert gaps (update-tolerant)
     mem_budget_entries: int = 1 << 20
+    # device-arena storage dtype for the screen tier (f32|bf16|int8; None
+    # resolves the engine default / REPRO_SCREEN_DTYPE)
+    screen_dtype: Optional[str] = None
 
 
 class CTree:
@@ -699,6 +717,7 @@ class CTree:
             ts=ts,
             disk=self.disk,
             mem_budget_entries=self.cfg.mem_budget_entries,
+            screen_dtype=self.cfg.screen_dtype,
         )
         if self.storage is not None:
             self.run = self.storage.persist_run(self.run)
@@ -760,6 +779,7 @@ class CTree:
             ts=ts,
             disk=self.disk,
             mem_budget_entries=self.cfg.mem_budget_entries,
+            screen_dtype=self.cfg.screen_dtype,
         )
         if self.storage is not None:
             self.run = self.storage.persist_run(self.run)

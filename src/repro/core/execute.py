@@ -259,9 +259,13 @@ def _device_topk(
     Q: np.ndarray, ops, pos: np.ndarray, k: int, *, exact: bool
 ) -> tuple[np.ndarray, np.ndarray]:
     """One fused device pass over the entries at ``pos``: arena gather +
-    f32 screen + in-kernel slate selection, host f64 re-rank of the slate,
-    error-bound certification with host fallback. Returns ((m, kk) exact
-    d2, (m, kk) GLOBAL ids, -1 padded)."""
+    f32-compute screen + in-kernel slate selection, host f64 re-rank of
+    the slate, error-bound certification with host fallback. The arena
+    may STORE quantized rows (``ops.screen_dtype``: bf16/int8 with per-row
+    scales) — the screen upcasts in-register and the certificate is
+    widened by the quantization term, so answers are exact for every
+    storage dtype. Returns ((m, kk) exact d2, (m, kk) GLOBAL ids, -1
+    padded)."""
     from .verify_engine import get_engine  # lazy: host path stays jax-free
 
     view = ops.device_view()

@@ -171,6 +171,9 @@ class StorageEngine:
             "card_bits": int(run.cfg.card_bits),
             "znorm": bool(run.cfg.znorm),
             "key_words": int(run.cfg.key_words),
+            # arena storage dtype survives persistence AND recovery: a
+            # recovered run screens at the same precision it was built with
+            "screen_dtype": run.screen_dtype,
         }
         mpath = os.path.join(d, "meta.json")
         with open(mpath, "w") as f:
@@ -208,7 +211,9 @@ class StorageEngine:
         return SortedRun(cfg=cfg, keys=keys, sax=sax, ids=ids,
                          block_size=meta["block_size"], bmin=bmin, bmax=bmax,
                          series=series, ts=ts, t_min=meta["t_min"],
-                         t_max=meta["t_max"], _storage=RunFiles(dir=d))
+                         t_max=meta["t_max"],
+                         screen_dtype=meta.get("screen_dtype"),
+                         _storage=RunFiles(dir=d))
 
     def drop_run(self, run: SortedRun) -> None:
         """Delete an unreferenced run's files (e.g. a CTree rebuild's old

@@ -74,6 +74,10 @@ class StreamConfig:
     storage: str = "auto"
     # file backend root; None -> a fresh temp directory per index
     storage_dir: Optional[str] = None
+    # device-arena storage dtype for the screen tier, inherited by the
+    # raw store and every flushed/merged run (f32|bf16|int8; None
+    # resolves the engine default / REPRO_SCREEN_DTYPE)
+    screen_dtype: Optional[str] = None
 
 
 class StreamingIndex:
@@ -96,7 +100,12 @@ class StreamingIndex:
             root = cfg.storage_dir or tempfile.mkdtemp(prefix="coconut-store-")
             self.storage = StorageEngine(root, cfg.summarization)
             raw = self.storage.raw
-        self.raw = raw or RawStore(cfg.summarization.series_len)
+        self.raw = raw or RawStore(cfg.summarization.series_len,
+                                   screen_dtype=cfg.screen_dtype)
+        if cfg.screen_dtype is not None and self.raw.screen_dtype is None:
+            # storage-backend-owned (or caller-supplied) stores inherit the
+            # stream's dtype unless they already chose one
+            self.raw.screen_dtype = cfg.screen_dtype
         lsm_cfg = CLSMConfig(
             summarization=cfg.summarization,
             buffer_entries=cfg.buffer_entries,
@@ -106,6 +115,7 @@ class StreamingIndex:
             block_size=cfg.block_size,
             materialized=cfg.materialized,
             merge=cfg.scheme != "TP",
+            screen_dtype=cfg.screen_dtype,
         )
         self.lsm = CLSM(lsm_cfg, disk=self.raw.disk, storage=self.storage)
         if self.storage is not None:

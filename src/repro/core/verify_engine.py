@@ -15,6 +15,14 @@ the compute units:
   sentinel tail, so growing stores extend in place with one donated
   ``dynamic_update_slice`` instead of a re-upload, and gather shapes stay
   stable.
+* **Mixed-precision storage tier**: an arena's *storage* dtype is
+  independent of its *compute* dtype. Tables are optionally quantized to
+  **bf16** (half the h2d traffic and footprint) or **int8 with per-row
+  scales** (a quarter), selected per view (``build_view(dtype=...)``), per
+  engine (``VerifyEngine(dtype=...)``), or process-wide via the
+  ``REPRO_SCREEN_DTYPE`` env var. Screens always upcast tiles to f32
+  in-register; the host mirror keeps the original f32 rows, so the f64
+  re-rank — and therefore the answers — never see quantized data.
 * **Fused screen+select**: a verification pass is one jitted call — device
   gather of the pass's candidate rows, f32 matmul-form screen against the
   cached norms, in-kernel top-k slate selection, and the error-bound
@@ -25,25 +33,30 @@ the compute units:
 * **Shape-bucketed compile cache**: candidate counts and query-batch sizes
   pad to power-of-two buckets, so steady-state serving executes from a
   handful of cached traces with ZERO retraces after warm-up. The engine
-  counts traces/hits and host<->device transfer bytes
-  (:attr:`VerifyEngine.stats`), and :meth:`VerifyEngine.prewarm` compiles
-  the bucket ladder up front for serving.
+  counts traces/hits, host<->device transfer bytes, and the live arena
+  footprint/storage dtype (:attr:`VerifyEngine.stats`), and
+  :meth:`VerifyEngine.prewarm` compiles the bucket ladder up front.
 
-Exactness contract: the f32 screen's only error source is the matmul
-cross-product, bounded by the classical ``4 n u |q||x|`` term. After the
-host re-ranks the slate in f64 (the diff form, immune to cancellation), a
-query is *certified* iff its kth exact distance clears the slate's worst
-screen distance by twice that bound — anything the screen could have
-mis-ranked out of the slate provably cannot beat the kth answer. Queries
-that fail certification (adversarially conditioned data) fall back to the
-provably exact host screen, so the device path returns the same answers as
-the retained host engine on every input. This is the same certificate the
-mesh-sharded path has used since PR 3.
+Exactness contract: the f32 screen's only error sources are the matmul
+cross-product, bounded by the classical ``4 n u |q||x|`` term, and — for
+quantized arenas — the storage rounding ``x_stored = x + e`` with
+``|e| <= qerr`` (the measured worst per-row quantization residual), which
+can move a screened distance by at most ``2 (|q| + |x|) qerr``. After the
+host re-ranks the slate in f64 (the diff form, immune to cancellation,
+always against the exact f32 mirror), a query is *certified* iff its kth
+exact distance clears the slate's worst screen distance by twice the
+summed bound — anything the screen could have mis-ranked out of the slate
+provably cannot beat the kth answer. Queries that fail certification
+(adversarially conditioned data, or quantization-coarse arenas) fall back
+to the provably exact host screen, so the device path returns the same
+answers as the retained host engine on every input and every storage
+dtype. This is the same certify-or-fallback pattern as PRs 3/4.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 import threading
 from typing import Optional
 
@@ -80,6 +93,115 @@ _CHUNK_M = 64
 # so it counts actual retraces — not python-side cache bookkeeping
 _TRACES = [0]
 
+# ----------------------------------------------------------- storage dtypes
+# canonical storage-dtype names -> the numpy/jax dtype the arena holds.
+# bf16 rides on jax's ml_dtypes-backed bfloat16 (a registered numpy dtype),
+# so no extra dependency; int8 carries a per-row f32 scale alongside.
+_SCREEN_DTYPES = {
+    "f32": np.float32,
+    "bf16": jnp.bfloat16,
+    "int8": np.int8,
+}
+_DTYPE_ALIASES = {
+    "f32": "f32", "float32": "f32", "fp32": "f32",
+    "bf16": "bf16", "bfloat16": "bf16",
+    "int8": "int8", "i8": "int8",
+}
+
+
+def resolve_screen_dtype(name: Optional[str] = None) -> str:
+    """Canonicalize a storage-dtype selector.
+
+    ``None``/``""``/``"auto"`` resolve through the ``REPRO_SCREEN_DTYPE``
+    env var (default ``f32``) — the same env-flip pattern as
+    ``REPRO_STORAGE``, so one CI leg re-runs the whole suite quantized."""
+    if name in (None, "", "auto"):
+        name = os.environ.get("REPRO_SCREEN_DTYPE", "f32") or "f32"
+    canon = _DTYPE_ALIASES.get(str(name).lower())
+    if canon is None:
+        raise ValueError(
+            f"unknown screen dtype {name!r}: expected f32 | bf16 | int8")
+    return canon
+
+
+def _quantize_rows(rows: np.ndarray, dtype: str):
+    """Quantize centered f32 rows for arena storage.
+
+    Returns ``(stored, scale, xn2, qerr)``: the stored array in the target
+    dtype, the per-row f32 scales (int8 only, else ``None``), the squared
+    norms of the *stored* values as f32 (so the screen is self-consistent
+    with what the device actually holds), and ``qerr`` — the worst per-row
+    L2 distance between stored and original values, measured exactly in
+    f64. ``qerr`` is the certificate's quantization term; it is 0.0 for
+    f32. Scales are per row (the finest "block" granularity) so the
+    bucket-ladder extend path re-uses existing scales untouched."""
+    r = rows.shape[0]
+    if dtype == "f32":
+        return rows, None, np.einsum("nd,nd->n", rows, rows), 0.0
+    if dtype == "bf16":
+        stored = rows.astype(jnp.bfloat16)
+        scale = None
+        deq = stored.astype(np.float64)
+    else:  # int8: symmetric per-row scale, zero rows get scale 1
+        amax = np.max(np.abs(rows), axis=1) if r else np.zeros(0, np.float32)
+        scale = np.where(amax > 0, amax / 127.0, 1.0).astype(np.float32)
+        stored = np.clip(
+            np.rint(rows / scale[:, None]), -127, 127).astype(np.int8)
+        deq = stored.astype(np.float64) * scale[:, None].astype(np.float64)
+    xn2 = np.einsum("nd,nd->n", deq, deq).astype(np.float32)
+    err = deq - rows.astype(np.float64)
+    err2 = np.einsum("nd,nd->n", err, err)
+    qerr = float(np.sqrt(err2.max())) if r else 0.0
+    return stored, scale, xn2, qerr
+
+
+@dataclasses.dataclass
+class DeviceView:
+    """One table's device arena: centered series + cached norms, bucketed
+    capacity with a sentinel tail (row ``n`` is always a valid pad target).
+    The stored table may be quantized (``dtype``); ``host`` is always the
+    original f32 mirror the exact re-rank reads."""
+
+    host: np.ndarray  # (N, d) original host mirror (exact re-rank source)
+    mu: np.ndarray  # (d,) f32 centering offset (fixed for the arena's life)
+    table: jax.Array  # (cap, d) centered, storage dtype; rows >= n are zero
+    xn2: jax.Array  # (cap,) f32 stored |x|^2; rows >= n carry BIG_NORM2
+    n: int  # valid rows
+    cap: int  # power-of-two capacity, always >= n + 1
+    xn2max: float  # max stored |x|^2 over valid rows (certificate term)
+    dtype: str = "f32"  # arena storage dtype: f32 | bf16 | int8
+    scale: Optional[jax.Array] = None  # (cap,) f32 per-row scales (int8)
+    qerr: float = 0.0  # worst per-row quantization L2 error (certificate)
+    nbytes: int = 0  # device footprint: table + norms + scales
+
+
+# donation lets the extend update arenas in place; the CPU backend does not
+# support donation and would warn on every call, so only donate off-host
+_DONATE = () if jax.default_backend() == "cpu" else (0, 1)
+_DONATE_Q = () if jax.default_backend() == "cpu" else (0, 1, 2)
+
+
+@functools.partial(jax.jit, donate_argnums=_DONATE)
+def _arena_extend(table, xn2, new_rows, new_xn2, start):
+    """Write freshly appended (centered) rows into a donated arena. The
+    update is dtype-generic: ``new_rows`` arrive pre-quantized in the
+    arena's storage dtype (f32 or bf16)."""
+    table = jax.lax.dynamic_update_slice(table, new_rows, (start, 0))
+    xn2 = jax.lax.dynamic_update_slice(xn2, new_xn2, (start,))
+    return table, xn2
+
+
+@functools.partial(jax.jit, donate_argnums=_DONATE_Q)
+def _arena_extend_quant(table, xn2, scale, new_rows, new_xn2, new_scale,
+                        start):
+    """The int8 extend: one donated update per buffer. Only the appended
+    rows' scales are written — existing rows keep their scales (per-row
+    granularity makes scale re-use trivial across bucket-ladder growth)."""
+    table = jax.lax.dynamic_update_slice(table, new_rows, (start, 0))
+    xn2 = jax.lax.dynamic_update_slice(xn2, new_xn2, (start,))
+    scale = jax.lax.dynamic_update_slice(scale, new_scale, (start,))
+    return table, xn2, scale
+
 
 def _bucket_rows(n: int, lo: int = 64) -> int:
     """Candidate/row-count bucket: the {2^k, 3*2^(k-1)} ladder (min ``lo``).
@@ -98,51 +220,32 @@ def _bucket_batch(m: int) -> int:
     return kops.candidate_bucket(m, 8)
 
 
-@dataclasses.dataclass
-class DeviceView:
-    """One table's device arena: centered series + cached norms, bucketed
-    capacity with a sentinel tail (row ``n`` is always a valid pad target)."""
-
-    host: np.ndarray  # (N, d) original host mirror (exact re-rank source)
-    mu: np.ndarray  # (d,) f32 centering offset (fixed for the arena's life)
-    table: jax.Array  # (cap, d) f32 centered; rows >= n are zero
-    xn2: jax.Array  # (cap,) f32 centered |x|^2; rows >= n carry BIG_NORM2
-    n: int  # valid rows
-    cap: int  # power-of-two capacity, always >= n + 1
-    xn2max: float  # max centered |x|^2 over valid rows (certificate term)
-
-
-# donation lets the extend update arenas in place; the CPU backend does not
-# support donation and would warn on every call, so only donate off-host
-_DONATE = () if jax.default_backend() == "cpu" else (0, 1)
-
-
-@functools.partial(jax.jit, donate_argnums=_DONATE)
-def _arena_extend(table, xn2, new_rows, new_xn2, start):
-    """Write freshly appended (centered) rows into a donated arena."""
-    table = jax.lax.dynamic_update_slice(table, new_rows, (start, 0))
-    xn2 = jax.lax.dynamic_update_slice(xn2, new_xn2, (start,))
-    return table, xn2
-
-
-def _screen_core(sub, n2, qc, s):
+def _screen_core(sub, n2, qc, s, scale=None):
     """Shared screen+select: the fused Pallas kernel on TPU, its XLA twin
     elsewhere (interpret-mode Pallas is for kernel validation, not the
-    serving hot path). Returns (slate vals, local rows). The kernel's f32
-    |q|^2 output is for TPU-resident consumers; the certificate's |q| term
-    is recomputed host-side in f64 (the bound needs the precision)."""
+    serving hot path). ``sub`` may be f32/bf16/int8 — tiles upcast to f32
+    in-register; int8 carries per-row ``scale`` applied after the matmul.
+    Returns (slate vals, local rows). The kernel's f32 |q|^2 output is for
+    TPU-resident consumers; the certificate's |q| term is recomputed
+    host-side in f64 (the bound needs the precision)."""
     if not kops.INTERPRET:
         # TPU: ONE fused launch (screen + in-kernel top-k)
-        vals, pidx, _ = kops.screen_select(qc, sub, n2, s)
+        if scale is None:
+            vals, pidx, _ = kops.screen_select(qc, sub, n2, s)
+        else:
+            vals, pidx, _ = kops.screen_select_quant(qc, sub, scale, n2, s)
         return vals, pidx
     qn2 = jnp.sum(qc * qc, axis=1)
-    d2 = qn2[:, None] + n2[None, :] - 2.0 * (qc @ sub.T)
+    g = qc @ sub.astype(jnp.float32).T  # in-register upcast: compute is f32
+    if scale is not None:
+        g = g * scale[None, :]  # dequantize the cross term per table row
+    d2 = qn2[:, None] + n2[None, :] - 2.0 * g
     negv, pidx = jax.lax.top_k(-d2, s)  # ties -> lower candidate index
     return -negv, pidx
 
 
 @functools.partial(jax.jit, static_argnames=("s",))
-def _fused_screen(table, xn2, rows, qc, s):
+def _fused_screen(table, xn2, scale, rows, qc, s):
     """ONE device call per verification pass: gather the pass's candidate
     rows from the arena, screen them in f32 matmul form against the cached
     norms, and select the top-s slate in-kernel. Pad rows (index = the
@@ -152,12 +255,13 @@ def _fused_screen(table, xn2, rows, qc, s):
     _TRACES[0] += 1  # palmlint: ignore[trace-safety] — deliberate retrace counter
     sub = jnp.take(table, rows, axis=0)  # (B, d) device gather
     n2 = jnp.take(xn2, rows)  # (B,) cached |x - mu|^2
-    vals, pidx = _screen_core(sub, n2, qc, s)
+    sc = None if scale is None else jnp.take(scale, rows)
+    vals, pidx = _screen_core(sub, n2, qc, s, sc)
     return vals, jnp.take(rows, jnp.maximum(pidx, 0)), pidx < 0
 
 
 @functools.partial(jax.jit, static_argnames=("s",))
-def _fused_screen_full(table, xn2, mask, qc, s):
+def _fused_screen_full(table, xn2, scale, mask, qc, s):
     """The full-coverage variant: when a pass verifies (nearly) the whole
     table, screening the RESIDENT table beats gathering it — the matmul
     streams the arena directly and a (cap,) candidate mask (masked-out and
@@ -166,21 +270,27 @@ def _fused_screen_full(table, xn2, mask, qc, s):
     # retrace, which is exactly what the counter measures
     _TRACES[0] += 1  # palmlint: ignore[trace-safety] — deliberate retrace counter
     n2 = jnp.where(mask, xn2, kops.BIG_NORM2)
-    vals, pidx = _screen_core(table, n2, qc, s)
+    vals, pidx = _screen_core(table, n2, qc, s, scale)
     return vals, pidx, pidx < 0
 
 
 class VerifyEngine:
-    """Process-wide verification engine: arenas + bucketed compile cache."""
+    """Process-wide verification engine: arenas + bucketed compile cache.
 
-    def __init__(self):
+    ``dtype`` sets the default storage dtype for arenas built through this
+    engine (``None`` resolves ``REPRO_SCREEN_DTYPE``); individual views can
+    override it via ``build_view(dtype=...)``."""
+
+    def __init__(self, dtype: Optional[str] = None):
         # serializes fused-pass bookkeeping (and the passes themselves)
         # across query threads: concurrent ingest serving may verify from a
         # thread pool, and the before/after _TRACES hit accounting is only
         # meaningful if launches do not interleave
         self._lock = threading.RLock()
+        self.dtype = resolve_screen_dtype(dtype)
         self.stats = {
             "calls": 0,  # fused verification passes launched
+            "screened": 0,  # queries through the device screen (per pass)
             "traces": 0,  # jit retraces of the fused pass (compile churn)
             "hits": 0,  # passes served from an already-compiled trace
             "h2d_bytes": 0,  # host->device: arena uploads + rows + queries
@@ -189,11 +299,16 @@ class VerifyEngine:
             "fallbacks": 0,  # queries re-screened on host (cert failures)
             "released_arenas": 0,  # arenas retired by the run registry
             "released_bytes": 0,  # device bytes those arenas held
+            "arena_bytes": 0,  # live device arena footprint (all dtypes)
+            "arena_dtype": self.dtype,  # the engine's default storage dtype
         }
 
     # ------------------------------------------------------------- arenas
-    def build_view(self, host_table: np.ndarray) -> DeviceView:
-        """Upload a table into a fresh bucketed arena (one h2d copy)."""
+    def build_view(self, host_table: np.ndarray,
+                   dtype: Optional[str] = None) -> DeviceView:
+        """Upload a table into a fresh bucketed arena (one h2d copy),
+        optionally quantized to the requested storage dtype."""
+        sd = self.dtype if dtype in (None, "") else resolve_screen_dtype(dtype)
         host_table = np.ascontiguousarray(host_table, np.float32)
         n, d = host_table.shape
         cap = _bucket_rows(n + 1)
@@ -201,20 +316,37 @@ class VerifyEngine:
             d, np.float32)
         buf = np.zeros((cap, d), np.float32)
         np.subtract(host_table, mu[None, :], out=buf[:n])
+        stored, rscale, vxn2, qerr = _quantize_rows(buf[:n], sd)
+        if sd == "f32":
+            tbl = buf  # zero tail already in place, no copy
+        else:
+            tbl = np.zeros((cap, d), _SCREEN_DTYPES[sd])
+            tbl[:n] = stored
         xn2 = np.full(cap, kops.BIG_NORM2, np.float32)
-        xn2[:n] = np.einsum("nd,nd->n", buf[:n], buf[:n])
+        xn2[:n] = vxn2
+        scale = None
+        if rscale is not None:
+            scale = np.ones(cap, np.float32)  # sentinel/pad rows: scale 1
+            scale[:n] = rscale
+        nbytes = tbl.nbytes + xn2.nbytes + (scale.nbytes if scale is not None
+                                            else 0)
         view = DeviceView(
             host=host_table,
             mu=mu,
-            table=jax.device_put(buf),
+            table=jax.device_put(tbl),
             xn2=jax.device_put(xn2),
             n=n,
             cap=cap,
-            xn2max=float(xn2[:n].max()) if n else 0.0,
+            xn2max=float(vxn2.max()) if n else 0.0,
+            dtype=sd,
+            scale=None if scale is None else jax.device_put(scale),
+            qerr=qerr,
+            nbytes=nbytes,
         )
         with self._lock:
             self.stats["uploads"] += 1
-            self.stats["h2d_bytes"] += buf.nbytes + xn2.nbytes
+            self.stats["h2d_bytes"] += nbytes
+            self.stats["arena_bytes"] += nbytes
         return view
 
     def extend_view(self, view: DeviceView, host_table: np.ndarray) -> DeviceView:
@@ -222,25 +354,45 @@ class VerifyEngine:
 
         While the new rows fit the bucketed capacity the old buffers are
         donated and updated in place (one small h2d copy of just the new
-        rows, bucket-padded so steady streaming reuses one trace);
-        overflowing arenas rebuild at the next bucket."""
+        rows, quantized to the arena's storage dtype and bucket-padded so
+        steady streaming reuses one trace); overflowing arenas rebuild at
+        the next bucket. Existing rows' int8 scales are never rewritten."""
         n_new = host_table.shape[0]
         if n_new <= view.n:
             return view
         grow = n_new - view.n
         pad = _bucket_rows(grow) - grow  # bucket the chunk: stable traces
         if n_new + pad + 1 > view.cap:
-            return self.build_view(host_table)
+            nv = self.build_view(host_table, dtype=view.dtype)
+            with self._lock:  # the overflowing arena is being replaced
+                self.stats["arena_bytes"] -= view.nbytes
+            return nv
         chunk = np.zeros((grow + pad, host_table.shape[1]), np.float32)
         np.subtract(host_table[view.n:], view.mu[None, :], out=chunk[:grow])
+        stored, rscale, vxn2, cqerr = _quantize_rows(chunk[:grow], view.dtype)
+        if view.dtype == "f32":
+            payload = chunk
+        else:
+            payload = np.zeros(chunk.shape, _SCREEN_DTYPES[view.dtype])
+            payload[:grow] = stored
         cn2 = np.full(grow + pad, kops.BIG_NORM2, np.float32)
-        cn2[:grow] = np.einsum("nd,nd->n", chunk[:grow], chunk[:grow])
-        table, xn2 = _arena_extend(
-            view.table, view.xn2, jnp.asarray(chunk), jnp.asarray(cn2),
-            np.int64(view.n))
+        cn2[:grow] = vxn2
+        h2d = payload.nbytes + cn2.nbytes
+        if view.dtype == "int8":
+            cs = np.ones(grow + pad, np.float32)
+            cs[:grow] = rscale
+            h2d += cs.nbytes
+            table, xn2, scale = _arena_extend_quant(
+                view.table, view.xn2, view.scale, jnp.asarray(payload),
+                jnp.asarray(cn2), jnp.asarray(cs), np.int64(view.n))
+        else:
+            table, xn2 = _arena_extend(
+                view.table, view.xn2, jnp.asarray(payload), jnp.asarray(cn2),
+                np.int64(view.n))
+            scale = view.scale
         with self._lock:
             self.stats["uploads"] += 1
-            self.stats["h2d_bytes"] += chunk.nbytes + cn2.nbytes
+            self.stats["h2d_bytes"] += h2d
         return DeviceView(
             host=np.ascontiguousarray(host_table, np.float32),
             mu=view.mu,
@@ -248,7 +400,11 @@ class VerifyEngine:
             xn2=xn2,
             n=n_new,
             cap=view.cap,
-            xn2max=max(view.xn2max, float(cn2[:grow].max())),
+            xn2max=max(view.xn2max, float(vxn2.max())),
+            dtype=view.dtype,
+            scale=scale,
+            qerr=max(view.qerr, cqerr),
+            nbytes=view.nbytes,  # in-place: capacity (and footprint) fixed
         )
 
     def release_view(self, view: DeviceView) -> None:
@@ -259,8 +415,8 @@ class VerifyEngine:
         handle, never a forced deallocation under a live reader."""
         with self._lock:
             self.stats["released_arenas"] += 1
-            self.stats["released_bytes"] += int(view.cap) * (
-                view.host.shape[1] * 4 + 4)  # table rows + cached norms
+            self.stats["released_bytes"] += view.nbytes
+            self.stats["arena_bytes"] -= view.nbytes
 
     # ----------------------------------------------------- the fused pass
     def _launch(self, view: DeviceView, trows: np.ndarray, Qc: np.ndarray,
@@ -278,6 +434,7 @@ class VerifyEngine:
         qpad[:m] = Qc
         with self._lock:
             self.stats["calls"] += 1
+            self.stats["screened"] += m
             before = _TRACES[0]
             bb = max(_bucket_rows(trows.size), _bucket_rows(s, 8))
             if bb >= view.cap:
@@ -289,15 +446,15 @@ class VerifyEngine:
                 mask[trows] = True
                 self.stats["h2d_bytes"] += mask.nbytes + qpad.nbytes
                 vals, srows, invalid = _fused_screen_full(
-                    view.table, view.xn2, jnp.asarray(mask), jnp.asarray(qpad),
-                    s)
+                    view.table, view.xn2, view.scale, jnp.asarray(mask),
+                    jnp.asarray(qpad), s)
             else:
                 rows = np.full(bb, view.n, np.int32)  # pad: the sentinel row
                 rows[: trows.size] = trows
                 self.stats["h2d_bytes"] += rows.nbytes + qpad.nbytes
                 vals, srows, invalid = _fused_screen(
-                    view.table, view.xn2, jnp.asarray(rows), jnp.asarray(qpad),
-                    s)
+                    view.table, view.xn2, view.scale, jnp.asarray(rows),
+                    jnp.asarray(qpad), s)
             if _TRACES[0] == before:  # served from an already-compiled trace
                 self.stats["hits"] += 1
             self.stats["traces"] = _TRACES[0]
@@ -327,12 +484,14 @@ class VerifyEngine:
         """Exact top-k of ``Q`` against the table rows ``trows``.
 
         One fused device pass selects a k+slack slate; the host re-ranks it
-        in f64 (diff form — immune to cancellation) and, for the exact
-        tier, certifies every query against the f32 screen error bound,
-        falling back to the provably exact host screen where certification
-        fails. Returns ((m, kk) d2 ascending f32, (m, kk) rows into
-        ``view.host``, -1 padded), kk = min(k, |trows|) — the same contract
-        as the host screens."""
+        in f64 (diff form — immune to cancellation, against the exact f32
+        mirror) and, for the exact tier, certifies every query against the
+        screen error bound — the classical f32 matmul term plus, for
+        quantized arenas, the storage-rounding term — falling back to the
+        provably exact host screen where certification fails. Returns
+        ((m, kk) d2 ascending f32, (m, kk) rows into ``view.host``, -1
+        padded), kk = min(k, |trows|) — the same contract as the host
+        screens."""
         from .execute import _rerank_slate, _screen_topk_exact  # lazy: no cycle
 
         trows = np.ascontiguousarray(trows, np.int64)
@@ -354,10 +513,15 @@ class VerifyEngine:
             return nv, nrows  # the slate IS the candidate set: always exact
         # certificate: anything screened out of the slate has screen d2 >=
         # the slate's worst, hence true d2 >= worst - 2*bound; a query whose
-        # exact kth distance clears that margin provably lost nothing
+        # exact kth distance clears that margin provably lost nothing. For
+        # quantized arenas the screen ranks x_stored = x + e, |e| <= qerr,
+        # which moves a distance by at most 2(|q| + |x|)|e| — widen the
+        # bound by that term (qerr = 0 keeps the pure-f32 certificate).
         qn = np.sqrt(np.einsum("mn,mn->m", Qc, Qc, dtype=np.float64))
-        bound = (4.0 * Q.shape[1] * np.finfo(np.float32).eps
-                 * qn * np.sqrt(max(view.xn2max, 0.0)))
+        xnmax = np.sqrt(max(view.xn2max, 0.0))
+        bound = (4.0 * Q.shape[1] * np.finfo(np.float32).eps * qn * xnmax)
+        if view.qerr > 0.0:
+            bound = bound + 2.0 * (qn + xnmax) * view.qerr
         kk = min(k, u)
         kth = nv[:, kk - 1] if nv.shape[1] >= kk else np.full(m, np.inf)
         certified = (srows >= 0).all(axis=1) & (
@@ -384,27 +548,30 @@ class VerifyEngine:
         return nv, nrows
 
     # ------------------------------------------------------------ warm-up
-    def prewarm(self, d: int, m: int, k: int, caps: list[int]) -> int:
+    def prewarm(self, d: int, m: int, k: int, caps: list[int],
+                dtype: Optional[str] = None) -> int:
         """Compile the bucket ladder up front: one dummy fused pass per
-        (arena capacity, candidate bucket) at the serving batch/k shape, so
-        steady-state traffic starts at zero retraces. Returns the number of
-        traces compiled."""
+        (arena capacity, candidate bucket) at the serving batch/k shape and
+        storage dtype, so steady-state traffic starts at zero retraces.
+        Returns the number of traces compiled."""
+        sd = self.dtype if dtype in (None, "") else resolve_screen_dtype(dtype)
         before = _TRACES[0]
         s = k + _SLACK
         mb = _bucket_batch(min(m, _CHUNK_M))
         for cap in sorted({_bucket_rows(c + 1) for c in caps}):
-            table = jnp.zeros((cap, d), jnp.float32)
+            table = jnp.zeros((cap, d), _SCREEN_DTYPES[sd])
             xn2 = jnp.full((cap,), kops.BIG_NORM2, jnp.float32)
+            scale = (jnp.ones((cap,), jnp.float32) if sd == "int8" else None)
             qc = jnp.zeros((mb, d), jnp.float32)
             b = _bucket_rows(min(s, cap))
             while b < cap:  # the gather ladder below full coverage
                 rows = jnp.zeros((b,), jnp.int32)
                 jax.block_until_ready(
-                    _fused_screen(table, xn2, rows, qc, min(s, b)))
+                    _fused_screen(table, xn2, scale, rows, qc, min(s, b)))
                 b = _bucket_rows(b + 1)
             mask = jnp.zeros((cap,), bool)  # the full-coverage variant
             jax.block_until_ready(
-                _fused_screen_full(table, xn2, mask, qc, s))
+                _fused_screen_full(table, xn2, scale, mask, qc, s))
         with self._lock:
             self.stats["traces"] = _TRACES[0]
         return _TRACES[0] - before

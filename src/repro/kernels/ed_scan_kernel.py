@@ -146,6 +146,38 @@ def _screen_select_body(
     _merge_topk_tile(vals_ref, idxs_ref, d2, tile_idx, k)
 
 
+def _screen_select_quant_body(
+    q_ref, x_ref, s_ref, xn2_ref, vals_ref, idxs_ref, qn2_ref, *, k: int,
+    block_n: int
+):
+    """The int8 screen body: identical to :func:`_screen_select_body`
+    except the candidate tile arrives as int8 values with per-row f32
+    scales. The tile upcasts in-register and the scale is applied AFTER
+    the MXU contraction (``<q, s*v> = s * <q, v>`` — one (bm, bn) VPU
+    multiply instead of rescaling the whole (bn, d) tile); ``xn2`` already
+    holds the dequantized norms, so no |x|^2 rescale is needed."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        vals_ref[...] = jnp.full_like(vals_ref, jnp.inf)
+        idxs_ref[...] = jnp.full_like(idxs_ref, _INT_MAX)
+
+    q = q_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)  # in-register int8 -> f32 upcast
+    qn2 = jnp.sum(q * q, axis=-1)  # (bm,) — the certificate's |q|^2 term
+    qn2_ref[...] = qn2  # idempotent across the candidate axis
+    g = jax.lax.dot_general(
+        q, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * s_ref[...][None, :]  # (bm, bn) dequantized cross term
+    d2 = qn2[:, None] + xn2_ref[...][None, :] - 2.0 * g
+    tile_idx = (
+        jax.lax.broadcasted_iota(jnp.int32, (d2.shape[0], block_n), 1)
+        + j * block_n
+    )
+    _merge_topk_tile(vals_ref, idxs_ref, d2, tile_idx, k)
+
+
 @functools.partial(
     jax.jit, static_argnames=("k", "block_m", "block_n", "interpret")
 )
@@ -239,6 +271,58 @@ def screen_select_pallas(
         ],
         interpret=interpret,
     )(q, x, xn2)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "block_m", "block_n", "interpret")
+)
+def screen_select_quant_pallas(
+    q: jnp.ndarray,
+    x: jnp.ndarray,
+    scale: jnp.ndarray,
+    xn2: jnp.ndarray,
+    k: int,
+    *,
+    block_m: int = 128,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """:func:`screen_select_pallas` over an int8-quantized candidate table.
+
+    q: (m, d) f32, x: (n, d) int8, scale: (n,) f32 per-row dequantization
+    scales, xn2: (n,) f32 squared norms of the dequantized rows. Tiles
+    upcast to f32 in-register; the scale lands on the contraction output,
+    so the screen computes exactly ``|q|^2 + |s v|^2 - 2 s <q, v>`` — the
+    f32 distance to the dequantized candidate. Shapes, tie semantics, and
+    sentinel behavior match :func:`screen_select_pallas`."""
+    m, d = q.shape
+    n, d2_ = x.shape
+    assert d == d2_ and m % block_m == 0 and n % block_n == 0, (q.shape, x.shape)
+    assert scale.shape == (n,), (scale.shape, n)
+    assert xn2.shape == (n,), (xn2.shape, n)
+    assert 1 <= k <= n, (k, n)
+    grid = (m // block_m, n // block_n)
+    return pl.pallas_call(
+        functools.partial(_screen_select_quant_body, k=k, block_n=block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_m,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.float32),
+            jax.ShapeDtypeStruct((m, k), jnp.int32),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, x, scale, xn2)
 
 
 @functools.partial(

@@ -7,18 +7,31 @@ the validation mode mandated for this repro.
 """
 from __future__ import annotations
 
+import os
+
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
 from ..core.summarization import SummarizationConfig, breakpoints
-from .ed_scan_kernel import min_ed_pallas, screen_select_pallas, topk_ed_pallas
+from .ed_scan_kernel import (
+    min_ed_pallas,
+    screen_select_pallas,
+    screen_select_quant_pallas,
+    topk_ed_pallas,
+)
 from .lb_kernel import mindist_pallas
 from .paa_kernel import paa_pallas
 from .sax_pack_kernel import sax_pack_pallas
 
-INTERPRET = jax.default_backend() != "tpu"
+# Compiled on TPU, interpret mode elsewhere. REPRO_PALLAS_COMPILED=1 is the
+# compiled-mode validation escape: it forces interpret=False even off-TPU so
+# the kernels' real Mosaic lowering is exercised wherever an accelerator is
+# attached; tests/test_pallas_compiled.py wraps it with a graceful skip on
+# backends that cannot compile the kernels (the CI leg is allowed to skip).
+INTERPRET = (jax.default_backend() != "tpu"
+             and os.environ.get("REPRO_PALLAS_COMPILED") != "1")
 
 # sentinel |x|^2 for pad candidates: dominates any real screened distance
 # without overflowing the f32 d2 arithmetic (see screen_select)
@@ -216,9 +229,16 @@ def screen_select(
     uses ``xn2``, not the rows, for the |x|^2 term, so the sentinel keeps
     pads out of every slate without f32 overflow) and surface as (inf, -1).
     Ties break toward the smaller candidate index (lexicographic (d2, index)
-    — the ``screen_select_ref`` oracle semantics)."""
+    — the ``screen_select_ref`` oracle semantics).
+
+    ``x`` may arrive in bf16 (a quantized arena): the storage dtype is
+    preserved through padding — halving the kernel's HBM traffic — and the
+    kernel body upcasts each tile to f32 in-register, so compute precision
+    is unchanged. Anything else is cast to f32 up front."""
     q = jnp.asarray(q, jnp.float32)
-    x = jnp.asarray(x, jnp.float32)
+    x = jnp.asarray(x)
+    if x.dtype != jnp.bfloat16:
+        x = x.astype(jnp.float32)
     xn2 = jnp.asarray(xn2, jnp.float32)
     m, d = q.shape
     n = x.shape[0]
@@ -246,6 +266,71 @@ def screen_select(
     xn2p, _ = _pad_rows(xn2, block_n, fill=BIG_NORM2)
     vals, idxs, qn2 = screen_select_pallas(
         qp, xp, xn2p, kk, block_m=block_m, block_n=block_n, interpret=INTERPRET
+    )
+    vals, idxs, qn2 = vals[:m], idxs[:m], qn2[:m]
+    invalid = idxs >= n  # row-pad candidates and never-filled (inf) slots
+    vals = jnp.where(invalid, jnp.inf, vals)
+    idxs = jnp.where(invalid, -1, idxs)
+    if kk < k:  # fewer candidates than requested slate slots
+        vals = jnp.concatenate(
+            [vals, jnp.full((m, k - kk), jnp.inf, vals.dtype)], axis=1)
+        idxs = jnp.concatenate(
+            [idxs, jnp.full((m, k - kk), -1, idxs.dtype)], axis=1)
+    return vals, idxs, qn2
+
+
+def screen_select_quant(
+    q: jnp.ndarray,
+    x: jnp.ndarray,
+    scale: jnp.ndarray,
+    xn2: jnp.ndarray,
+    k: int,
+    *,
+    block_m: int = 128,
+    block_n: int = 512,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """:func:`screen_select` over an int8 arena with per-row f32 scales.
+
+    q: (m, d) f32, x: (n, d) int8, scale: (n,) f32, xn2: (n,) f32 — the
+    squared norms of the DEQUANTIZED rows, so the screen is self-consistent
+    with the stored values. The kernel upcasts each int8 tile to f32
+    in-register and applies the scale after the MXU contraction (the cross
+    term ``<q, s*v> = s * <q, v>``), quartering HBM/h2d traffic while
+    keeping compute in f32. Same padding, sentinel, and tie semantics as
+    :func:`screen_select`; pad rows get scale 1 (their sentinel lives in
+    ``xn2``)."""
+    q = jnp.asarray(q, jnp.float32)
+    x = jnp.asarray(x, jnp.int8)
+    scale = jnp.asarray(scale, jnp.float32)
+    xn2 = jnp.asarray(xn2, jnp.float32)
+    m, d = q.shape
+    n = x.shape[0]
+    if m == 0:  # empty query batch
+        return (
+            jnp.zeros((0, k), jnp.float32),
+            jnp.zeros((0, k), jnp.int32),
+            jnp.zeros((0,), jnp.float32),
+        )
+    if n == 0:  # no candidates: every requested slot is explicit padding
+        return (
+            jnp.full((m, k), jnp.inf, jnp.float32),
+            jnp.full((m, k), -1, jnp.int32),
+            jnp.sum(q * q, axis=-1),
+        )
+    kk = max(1, min(k, n))
+    block_m = min(block_m, max(8, m))
+    block_n = min(block_n, max(8, n))
+    dp = (-d) % 128
+    if dp:  # zero-pad the contraction dim: adds 0 to every distance
+        q = jnp.concatenate([q, jnp.zeros((m, dp), q.dtype)], axis=1)
+        x = jnp.concatenate([x, jnp.zeros((n, dp), x.dtype)], axis=1)
+    qp, _ = _pad_rows(q, block_m)
+    xp, _ = _pad_rows(x, block_n)  # zero rows; the sentinel lives in xn2
+    sp, _ = _pad_rows(scale, block_n, fill=1.0)
+    xn2p, _ = _pad_rows(xn2, block_n, fill=BIG_NORM2)
+    vals, idxs, qn2 = screen_select_quant_pallas(
+        qp, xp, sp, xn2p, kk, block_m=block_m, block_n=block_n,
+        interpret=INTERPRET
     )
     vals, idxs, qn2 = vals[:m], idxs[:m], qn2[:m]
     invalid = idxs >= n  # row-pad candidates and never-filled (inf) slots

@@ -94,6 +94,28 @@ def screen_select_ref(
     return sv[:, :k], si[:, :k], qn2
 
 
+def screen_select_quant_ref(
+    q: jnp.ndarray, x: jnp.ndarray, scale: jnp.ndarray, xn2: jnp.ndarray,
+    k: int
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Oracle for the int8 fused screen: upcast the stored values to f32,
+    apply the per-row scale to the cross term AFTER the matmul (exactly the
+    kernel's dequantization order, so results are bit-comparable), and use
+    the precomputed dequantized norms.
+
+    q: (m, d) f32, x: (n, d) int8, scale: (n,) f32, xn2: (n,), 1 <= k <= n
+    -> ((m, k) f32 ascending, (m, k) int32, (m,) f32)."""
+    q = q.astype(jnp.float32)
+    g = (q @ x.astype(jnp.float32).T) * scale.astype(jnp.float32)[None, :]
+    qn2 = jnp.sum(q * q, -1)
+    d2 = qn2[:, None] + xn2.astype(jnp.float32)[None, :] - 2.0 * g
+    idx = jnp.broadcast_to(
+        jnp.arange(x.shape[0], dtype=jnp.int32)[None, :], d2.shape
+    )
+    sv, si = jax.lax.sort((d2, idx), num_keys=2, dimension=1)
+    return sv[:, :k], si[:, :k], qn2
+
+
 def mindist_ref(q_paa: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray, seg_len: int) -> jnp.ndarray:
     """Squared MINDIST between a query PAA (w,) and candidate regions (B, w)."""
     below = jnp.maximum(lo - q_paa[None, :], 0.0)

@@ -64,7 +64,8 @@ def serve_coconut(args):
         growth_factor=4, block_size=512, ingest=args.ingest,
         # getattr: programmatic callers (tests) build partial Namespaces
         storage=getattr(args, "storage", "auto"),
-        storage_dir=getattr(args, "storage_dir", None)))
+        storage_dir=getattr(args, "storage_dir", None),
+        screen_dtype=getattr(args, "screen_dtype", None)))
     if idx.storage is not None:
         print(f"[serve] file storage backend at {idx.storage.root} "
               "(WAL + manifest, crash-consistent)", flush=True)
@@ -77,7 +78,8 @@ def serve_coconut(args):
         # the ladder's actual capacity rungs)
         sizes = sorted({args.batch_size * (b + 1) for b in range(args.batches)})
         t0 = time.time()
-        n = engine.prewarm(args.series_len, args.query_batch, args.k, sizes)
+        n = engine.prewarm(args.series_len, args.query_batch, args.k, sizes,
+                           dtype=getattr(args, "screen_dtype", None))
         print(f"[serve] prewarmed {n} verification traces "
               f"({time.time()-t0:.1f}s) for stores up to {sizes[-1]} entries",
               flush=True)
@@ -209,6 +211,13 @@ def main():
                     help="file backend root directory (default: a fresh "
                          "temp dir); reopening the same dir recovers the "
                          "durable index state")
+    ap.add_argument("--screen-dtype", default=None,
+                    choices=["f32", "bf16", "int8", "auto"],
+                    help="device-arena storage dtype for the screen tier: "
+                         "bf16 halves / int8 quarters h2d traffic and "
+                         "arena footprint; answers stay exact via the "
+                         "widened certificate + f64 re-rank (default: the "
+                         "REPRO_SCREEN_DTYPE env var, f32)")
     ap.add_argument("--approx", action="store_true",
                     help="deprecated alias for --tier approx")
     ap.add_argument("--no-prewarm", dest="prewarm", action="store_false",

@@ -1,0 +1,24 @@
+"""Bad fixture: quantized storage leaking into the exact side, and
+dynamic dtypes inside quantization helpers."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def rerank_quantized(q, table):
+    q64 = q.astype(np.float64)
+    stored = table.astype(jnp.bfloat16)
+    return jnp.einsum("md,nd->mn", q64, stored)  # BAD: bf16 into re-rank
+
+
+def certify_int8_direct(q, x):
+    q64 = q.astype(np.float64)
+    return q64 @ x.astype(np.int8).T  # BAD: int8 operand, no f64 upcast
+
+
+def quantize_rows(rows, dt):
+    stored = rows.astype(dt)  # BAD: dynamic dtype in a quant helper
+    return stored
+
+
+def quantize_like(rows, ref):
+    return rows.astype(ref.dtype)  # BAD: dtype inherited at runtime

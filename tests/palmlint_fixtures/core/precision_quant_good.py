@@ -1,0 +1,23 @@
+"""Good fixture: quantized values stay on the screen side (upcast to f32
+in-register), the re-rank reads the f32 host mirror through explicit f64
+casts, and every cast in the quantization helper spells its dtype."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def screen_quantized(q, table, scale):
+    g = q @ table.astype(jnp.float32).T  # in-register upcast: f32 screen
+    return g * scale[None, :]
+
+
+def rerank_from_host(q, host):
+    q64 = q.astype(np.float64)
+    x64 = host.astype(np.float64)  # re-rank reads the f32 host mirror
+    return jnp.einsum("md,nd->mn", q64, x64)
+
+
+def quantize_rows(rows):
+    scale = np.abs(rows).max(axis=1) / 127.0
+    stored = np.clip(np.rint(rows / scale[:, None]), -127, 127).astype(np.int8)
+    deq = stored.astype(np.float64) * scale[:, None]
+    return stored, scale, deq

@@ -194,6 +194,64 @@ def test_screen_select_sentinel_norm_keeps_pads_out(rng):
     assert (np.asarray(i) >= 0).all() and (np.asarray(i) < 70).all()
 
 
+@pytest.mark.parametrize("k", [1, 5, 18])
+@pytest.mark.parametrize("m,n,d", [(8, 512, 128), (7, 333, 64), (1, 100, 96),
+                                   (16, 64, 128)])
+def test_screen_select_quant_matches_ref(m, n, d, k, rng):
+    """The int8 fused screen (per-row scales applied AFTER the contraction)
+    must reproduce its lexicographic oracle bit-for-bit, including on odd
+    shapes that exercise the scale/norm padding (fill 1.0 / sentinel)."""
+    q = rng.standard_normal((m, d)).astype(np.float32)
+    xf = rng.standard_normal((n, d)).astype(np.float32)
+    amax = np.abs(xf).max(axis=1)
+    scale = np.where(amax > 0, amax / 127.0, 1.0).astype(np.float32)
+    x = np.clip(np.rint(xf / scale[:, None]), -127, 127).astype(np.int8)
+    deq = x.astype(np.float64) * scale[:, None]
+    xn2 = np.einsum("nd,nd->n", deq, deq).astype(np.float32)
+    v, i, qn2 = ops.screen_select_quant(q, x, scale, xn2, k,
+                                        block_m=8, block_n=64)
+    kk = min(k, n)
+    rv, ri, rqn2 = ref.screen_select_quant_ref(
+        jnp.asarray(q), jnp.asarray(x), jnp.asarray(scale),
+        jnp.asarray(xn2), kk)
+    np.testing.assert_array_equal(np.asarray(i)[:, :kk], np.asarray(ri))
+    np.testing.assert_allclose(np.asarray(v)[:, :kk], np.asarray(rv),
+                               rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(qn2), np.asarray(rqn2), rtol=1e-6)
+    assert np.all(np.asarray(v)[:, kk:] == np.inf)
+    assert np.all(np.asarray(i)[:, kk:] == -1)
+
+
+def test_screen_select_bf16_candidates_match_f32_of_dequantized(rng):
+    """bf16 candidate tables ride through ``screen_select`` in their storage
+    dtype (half the HBM traffic) with an in-register f32 upcast: the result
+    must equal an f32 launch over the DEQUANTIZED values exactly."""
+    q = rng.standard_normal((8, 64)).astype(np.float32)
+    xb = jnp.asarray(rng.standard_normal((200, 64)).astype(np.float32)
+                     ).astype(jnp.bfloat16)
+    x32 = np.asarray(xb.astype(jnp.float32))
+    xn2 = np.einsum("nd,nd->n", x32, x32).astype(np.float32)
+    vb, ib, _ = ops.screen_select(q, xb, xn2, 7, block_m=8, block_n=64)
+    v32, i32, _ = ops.screen_select(q, x32, xn2, 7, block_m=8, block_n=64)
+    np.testing.assert_array_equal(np.asarray(ib), np.asarray(i32))
+    np.testing.assert_array_equal(np.asarray(vb), np.asarray(v32))
+
+
+def test_screen_select_quant_all_zero_rows_use_unit_scale(rng):
+    """All-zero candidates quantize to scale 1.0 / zero codes: they must
+    surface with plain |q|^2 distances, not NaN/overflow."""
+    q = rng.standard_normal((4, 64)).astype(np.float32)
+    x = np.zeros((70, 64), np.int8)
+    scale = np.ones(70, np.float32)
+    xn2 = np.zeros(70, np.float32)
+    v, i, qn2 = ops.screen_select_quant(q, x, scale, xn2, 3,
+                                        block_m=8, block_n=64)
+    np.testing.assert_allclose(np.asarray(v),
+                               np.asarray(qn2)[:, None].repeat(3, 1),
+                               rtol=1e-6)
+    assert (np.asarray(i) >= 0).all() and (np.asarray(i) < 70).all()
+
+
 # ---------------------------------------------------------------------------
 # bucketed launcher boundaries (the e == bucket fast path)
 # ---------------------------------------------------------------------------

@@ -105,6 +105,24 @@ def test_precision_good_fixture_is_clean():
     assert live == [] and suppressed == []
 
 
+def test_precision_quant_bad_fixture_exact_findings():
+    live, _ = lint_fixture("core/precision_quant_bad.py")
+    assert as_tuples(live) == [
+        ("precision-discipline", 10),  # bf16-tainted operand into re-rank
+        ("precision-discipline", 15),  # int8 operand in certify matmul
+        ("precision-discipline", 19),  # .astype(dt) in a quant helper
+        ("precision-discipline", 24),  # .astype(ref.dtype) in quant helper
+    ]
+    # the lowp findings are the new rule, not a re-fire of rule 2
+    assert "bf16/int8 operand" in live[0].message
+    assert "dtype-less cast in a quantization helper" in live[2].message
+
+
+def test_precision_quant_good_fixture_is_clean():
+    live, suppressed = lint_fixture("core/precision_quant_good.py")
+    assert live == [] and suppressed == []
+
+
 def test_precision_dtype_rule_is_path_scoped():
     # identical source outside core//kernels/: the dtype rule stays quiet
     src = "import jax.numpy as jnp\n\ndef f(n):\n    return jnp.zeros((n,))\n"

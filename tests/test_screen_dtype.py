@@ -1,0 +1,336 @@
+"""Mixed-precision screen tier: bf16/int8 device arenas must stay bitwise
+device==numpy on every index x tier (the widened certificate + f64 re-rank
+from the f32 host mirror absorb the quantization error), the bucket ladder
+and in-place extends must work under quantized dtypes (existing int8 scales
+never rewritten), and the engine's footprint accounting must show the
+promised compression."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    ADSConfig,
+    ADSIndex,
+    CLSM,
+    CLSMConfig,
+    CTree,
+    CTreeConfig,
+    RawStore,
+    StreamConfig,
+    StreamingIndex,
+    SummarizationConfig,
+    ed2,
+)
+from repro.core.verify_engine import (
+    _bucket_batch, _bucket_rows, _quantize_rows, get_engine,
+    resolve_screen_dtype,
+)
+
+CFG = SummarizationConfig(series_len=64, n_segments=8, card_bits=6)
+QDTYPES = ("bf16", "int8")
+
+
+def _data(n=6000, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, 64)).astype(np.float32).cumsum(axis=1)
+
+
+def _queries(m=32, seed=99):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((m, 64)).astype(np.float32).cumsum(axis=1)
+
+
+def _adversarial(n, seed=0, offset=3000.0, spread=0.01):
+    rng = np.random.default_rng(seed)
+    return (offset + spread * rng.standard_normal((n, 64))).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# dtype selector resolution
+# ---------------------------------------------------------------------------
+def test_resolve_screen_dtype_aliases_and_env(monkeypatch):
+    monkeypatch.delenv("REPRO_SCREEN_DTYPE", raising=False)
+    assert resolve_screen_dtype(None) == "f32"
+    assert resolve_screen_dtype("auto") == "f32"
+    for alias in ("f32", "float32", "fp32"):
+        assert resolve_screen_dtype(alias) == "f32"
+    for alias in ("bf16", "bfloat16", "BF16"):
+        assert resolve_screen_dtype(alias) == "bf16"
+    for alias in ("int8", "i8"):
+        assert resolve_screen_dtype(alias) == "int8"
+    monkeypatch.setenv("REPRO_SCREEN_DTYPE", "int8")
+    assert resolve_screen_dtype(None) == "int8"
+    assert resolve_screen_dtype("auto") == "int8"
+    assert resolve_screen_dtype("bf16") == "bf16"  # explicit beats env
+    with pytest.raises(ValueError, match="screen dtype"):
+        resolve_screen_dtype("fp8")
+
+
+def test_quantize_rows_contract():
+    rng = np.random.default_rng(3)
+    rows = rng.standard_normal((100, 64)).astype(np.float32)
+    stored, scale, xn2, qerr = _quantize_rows(rows, "f32")
+    assert stored is rows and scale is None and qerr == 0.0
+    stored, scale, xn2, qerr = _quantize_rows(rows, "int8")
+    assert stored.dtype == np.int8 and scale.dtype == np.float32
+    assert np.abs(stored).max() <= 127
+    deq = stored.astype(np.float64) * scale[:, None].astype(np.float64)
+    # xn2 is the norms of what the device actually holds, not the originals
+    np.testing.assert_allclose(xn2, np.einsum("nd,nd->n", deq, deq),
+                               rtol=1e-6)
+    err = np.sqrt(((deq - rows) ** 2).sum(axis=1)).max()
+    assert qerr == pytest.approx(err) and qerr > 0.0
+    # all-zero rows: scale pins to 1.0 instead of dividing by zero
+    z, zs, zn2, zq = _quantize_rows(np.zeros((3, 64), np.float32), "int8")
+    assert (z == 0).all() and (zs == 1.0).all() and zq == 0.0
+
+
+# ---------------------------------------------------------------------------
+# satellite: bucket-ladder boundaries, directly
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,want", [
+    (1, 64), (63, 64), (64, 64), (65, 96),       # the min bucket edge
+    (95, 96), (96, 96), (97, 128),               # mid-rung (3*2^(k-1)) edge
+    (127, 128), (128, 128), (129, 192),          # power-of-two edge
+    (3000, 3072), (3072, 3072), (3073, 4096),    # the arena-test sizes
+])
+def test_bucket_rows_ladder_boundaries(n, want):
+    assert _bucket_rows(n) == want
+
+
+@pytest.mark.parametrize("m,want", [
+    (1, 8), (7, 8), (8, 8), (9, 16), (16, 16), (17, 32), (64, 64),
+])
+def test_bucket_batch_boundaries(m, want):
+    assert _bucket_batch(m) == want
+
+
+# ---------------------------------------------------------------------------
+# device == numpy, bitwise, under quantized storage, every index x tier
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", QDTYPES)
+@pytest.mark.parametrize("mat", [True, False])
+def test_ctree_quantized_device_matches_numpy_bitwise(mat, dtype):
+    X, Q = _data(), _queries()
+    raw = RawStore(64, screen_dtype=dtype)
+    ct = CTree(CTreeConfig(summarization=CFG, block_size=512,
+                           materialized=mat, screen_dtype=dtype))
+    ct.bulk_build(X, raw.append(X))
+    calls0 = get_engine().stats["calls"]
+    vd, gd, sd = ct.knn_batch(Q, k=10, raw=raw)
+    vn, gn, sn = ct.knn_batch(Q, k=10, raw=raw, backend="numpy")
+    np.testing.assert_array_equal(vd, vn)
+    np.testing.assert_array_equal(gd, gn)
+    assert (sd.entries_verified, sd.blocks_visited) == (
+        sn.entries_verified, sn.blocks_visited)
+    assert get_engine().stats["calls"] > calls0
+    va, ga, _ = ct.knn_approx_batch(Q, k=10, n_blocks=3, raw=raw)
+    vb, gb, _ = ct.knn_approx_batch(Q, k=10, n_blocks=3, raw=raw,
+                                    backend="numpy")
+    np.testing.assert_array_equal(va, vb)
+    np.testing.assert_array_equal(ga, gb)
+
+
+@pytest.mark.parametrize("dtype", QDTYPES)
+def test_clsm_quantized_device_matches_numpy_bitwise(dtype):
+    X, Q = _data(5000, seed=3), _queries(24, seed=7)
+    raw = RawStore(64, screen_dtype=dtype)
+    lsm = CLSM(CLSMConfig(summarization=CFG, buffer_entries=1024,
+                          growth_factor=3, block_size=256, materialized=True,
+                          screen_dtype=dtype))
+    lsm.insert(X, raw.append(X), np.arange(len(X), dtype=np.int64))
+    vd, gd, _ = lsm.knn_batch(Q, k=7, raw=raw)
+    vn, gn, _ = lsm.knn_batch(Q, k=7, raw=raw, backend="numpy")
+    np.testing.assert_array_equal(vd, vn)
+    np.testing.assert_array_equal(gd, gn)
+
+
+@pytest.mark.parametrize("dtype", QDTYPES)
+@pytest.mark.parametrize("mode", ["full", "adaptive"])
+def test_ads_quantized_device_matches_numpy_bitwise(mode, dtype):
+    X, Q = _data(4000, seed=4), _queries(16, seed=9)
+    raw = RawStore(64, screen_dtype=dtype)
+    ids = raw.append(X)
+
+    def build():
+        ads = ADSIndex(ADSConfig(summarization=CFG, leaf_size=2048,
+                                 mode=mode, query_leaf_size=256,
+                                 screen_dtype=dtype))
+        ads.insert_batch(X, ids)
+        return ads
+
+    vd, gd, _ = build().knn_batch(Q, k=5, raw=raw)
+    vn, gn, _ = build().knn_batch(Q, k=5, raw=raw, backend="numpy")
+    np.testing.assert_array_equal(vd, vn)
+    np.testing.assert_array_equal(gd, gn)
+
+
+@pytest.mark.parametrize("dtype", QDTYPES)
+def test_streaming_quantized_device_matches_numpy_bitwise(dtype):
+    rng = np.random.default_rng(11)
+    idx = StreamingIndex(StreamConfig(scheme="BTP", summarization=CFG,
+                                      buffer_entries=1024, growth_factor=3,
+                                      block_size=256, materialized=False,
+                                      screen_dtype=dtype))
+    assert idx.raw.screen_dtype == dtype  # config reached the raw arena
+    for b in range(8):
+        x = rng.standard_normal((600, 64)).astype(np.float32).cumsum(axis=1)
+        idx.ingest(x, np.full(600, b, np.int64))
+    Q = _queries(16, seed=13)
+    vd, gd, _ = idx.window_knn_batch(Q, 2, 6, k=4)
+    vn, gn, _ = idx.window_knn_batch(Q, 2, 6, k=4, backend="numpy")
+    np.testing.assert_array_equal(vd, vn)
+    np.testing.assert_array_equal(gd, gn)
+
+
+# ---------------------------------------------------------------------------
+# the widened certificate: ill-conditioned data forces the host fallback,
+# and the answers are STILL exact
+# ---------------------------------------------------------------------------
+def _build_ctree(X, dtype):
+    raw = RawStore(64, screen_dtype=dtype)
+    ct = CTree(CTreeConfig(summarization=CFG, block_size=512,
+                           materialized=True, screen_dtype=dtype))
+    ct.bulk_build(X, raw.append(X))
+    return ct, raw
+
+
+def _assert_fallback_and_exact(X, Q, dtype, k=5):
+    ct, raw = _build_ctree(X, dtype)
+    eng = get_engine()
+    fb0 = eng.stats["fallbacks"]
+    vals, gids, _ = ct.knn_batch(Q, k=k, raw=raw)
+    # the screen cannot be certified here: the engine must take the
+    # provably exact host path instead of returning silently wrong ids
+    assert eng.stats["fallbacks"] > fb0
+    vn, gn, _ = ct.knn_batch(Q, k=k, raw=raw, backend="numpy")
+    np.testing.assert_array_equal(vals, vn)
+    np.testing.assert_array_equal(gids, gn)
+    X64 = X.astype(np.float64)
+    for i in range(len(Q)):
+        bf = ed2(Q[i].astype(np.float64), X64)
+        np.testing.assert_allclose(vals[i], np.sort(bf)[:k], rtol=1e-5)
+
+
+def test_int8_widened_term_fires_where_f32_certifies():
+    """On the PR 3 cancellation set the f32 eps term certifies every query,
+    but int8's quantization error dwarfs the tiny true distances — the
+    WIDENED term (2(|q|+|x|)qerr) is what forces the fallback."""
+    X = _adversarial(4000)
+    rng = np.random.default_rng(1)
+    Q = np.stack([X[i] + 0.001 * rng.standard_normal(64).astype(np.float32)
+                  for i in range(16)])
+    # control: the same data under f32 storage certifies (no new fallbacks)
+    ct, raw = _build_ctree(X, "f32")
+    eng = get_engine()
+    fb0 = eng.stats["fallbacks"]
+    ct.knn_batch(Q, k=5, raw=raw)
+    assert eng.stats["fallbacks"] == fb0
+    _assert_fallback_and_exact(X, Q, "int8")
+
+
+@pytest.mark.parametrize("dtype", QDTYPES)
+def test_near_duplicate_families_defeat_the_certificate(dtype):
+    """Near-duplicate families wider than the slate (16 copies > k + slack)
+    put sub-quantization-error gaps at the slack boundary: no storage dtype
+    can certify, and the host fallback still answers bitwise-exactly (the
+    1e-6 jitter keeps the f64 order unique, so tie-breaking is well
+    defined)."""
+    rng0 = np.random.default_rng(2)
+    base = _adversarial(250, seed=2)
+    X = (np.tile(base, (16, 1))
+         + 1e-6 * rng0.standard_normal((4000, 64))).astype(np.float32)
+    rng = np.random.default_rng(1)
+    Q = np.stack([X[i] + 0.001 * rng.standard_normal(64).astype(np.float32)
+                  for i in range(16)])
+    _assert_fallback_and_exact(X, Q, dtype)
+
+
+# ---------------------------------------------------------------------------
+# arena lifecycle under quantized dtypes: in-place extend across the chunk
+# ladder, scale-prefix reuse, rebuild past capacity
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", QDTYPES)
+def test_quantized_arena_extends_in_place_and_rebuilds(dtype):
+    X = _data(3000, seed=8)
+    raw = RawStore(64, screen_dtype=dtype)
+    ct = CTree(CTreeConfig(summarization=CFG, block_size=512,
+                           materialized=False, screen_dtype=dtype))
+    ct.bulk_build(X, raw.append(X))
+    Q = _queries(16, seed=3)
+    eng = get_engine()
+    ct.knn_batch(Q, k=5, raw=raw)
+    up0 = eng.stats["uploads"]
+    view0 = raw.device_view()
+    assert view0.dtype == dtype and view0.qerr > 0.0
+    assert view0.nbytes > 0
+    scale0 = None if view0.scale is None else np.asarray(view0.scale)
+    # growth that fits the bucketed capacity: in-place donated update
+    raw.append(_data(48, seed=12))
+    view1 = raw.device_view()
+    assert view1.n == 3048 and view1.cap == view0.cap
+    assert eng.stats["uploads"] == up0 + 1
+    assert view1.qerr >= view0.qerr  # the error bound only widens
+    if dtype == "int8":
+        # existing rows' scales are never rewritten by an extend
+        np.testing.assert_array_equal(np.asarray(view1.scale)[:3000],
+                                      scale0[:3000])
+    # growth past capacity: rebuild at the next ladder rung
+    raw.append(_data(500, seed=14))
+    view2 = raw.device_view()
+    assert view2.n == 3548 and view2.cap > view0.cap
+    assert view2.dtype == dtype  # the rebuild keeps the storage dtype
+    # the original index still answers exactly over its 3000 entries
+    q = Q[0]
+    res, _ = ct.knn_exact(q, k=3, raw=raw)
+    bf = np.sort(ed2(q, X))[:3]
+    np.testing.assert_allclose([d for d, _ in res], bf, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# footprint accounting: the stats must show the promised compression
+# ---------------------------------------------------------------------------
+def test_arena_bytes_accounting_and_compression_ratios():
+    eng = get_engine()
+    assert "arena_dtype" in eng.stats  # engine default is visible
+    X = _data(2000, seed=21)
+    views = {}
+    for dt in ("f32", "bf16", "int8"):
+        b0 = eng.stats["arena_bytes"]
+        h0 = eng.stats["h2d_bytes"]
+        v = eng.build_view(X, dtype=dt)
+        assert v.dtype == dt
+        assert eng.stats["arena_bytes"] - b0 == v.nbytes
+        assert eng.stats["h2d_bytes"] - h0 == v.nbytes  # upload == footprint
+        views[dt] = v
+    # same table, same ladder capacity: the ratios are pure dtype wins
+    assert views["f32"].nbytes / views["bf16"].nbytes >= 1.9
+    assert views["f32"].nbytes / views["int8"].nbytes >= 3.5
+    for v in views.values():
+        b0 = eng.stats["arena_bytes"]
+        eng.release_view(v)
+        assert b0 - eng.stats["arena_bytes"] == v.nbytes
+
+
+# ---------------------------------------------------------------------------
+# persistence: screen_dtype survives the file backend's meta roundtrip
+# ---------------------------------------------------------------------------
+def test_screen_dtype_survives_file_backend_recovery(tmp_path):
+    cfg = StreamConfig(scheme="BTP", summarization=CFG, buffer_entries=64,
+                       growth_factor=2, block_size=32, storage="file",
+                       storage_dir=str(tmp_path), screen_dtype="bf16")
+    idx = StreamingIndex(cfg)
+    assert idx.raw.screen_dtype == "bf16"  # FileStore raw inherits the cfg
+    rng = np.random.default_rng(5)
+    for b in range(4):  # enough to flush published runs
+        x = rng.standard_normal((64, 64)).astype(np.float32).cumsum(axis=1)
+        idx.ingest(x, np.arange(b * 64, (b + 1) * 64, dtype=np.int64))
+    runs = list(idx.lsm.registry.current().runs_newest_first())
+    assert runs and all(r.screen_dtype == "bf16" for r in runs)
+    idx.close()
+    rec = StreamingIndex.recover(
+        StreamConfig(scheme="BTP", summarization=CFG, buffer_entries=64,
+                     growth_factor=2, block_size=32, storage="file",
+                     screen_dtype="bf16"), str(tmp_path))
+    rruns = list(rec.lsm.registry.current().runs_newest_first())
+    assert rruns and all(r.screen_dtype == "bf16" for r in rruns)
+    rec.close()
