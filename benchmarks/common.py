@@ -19,6 +19,24 @@ def timeit(fn, *, repeat=3, number=1):
     return float(np.median(times)) * 1e6
 
 
+def timeit_pcts(fn, *, repeat=5, number=1):
+    """Per-call wall-time samples in microseconds: (median, p50, p99).
+
+    Unlike ``timeit`` this keeps the whole sample, so tail behavior is
+    reportable next to the median (the serving work makes percentiles the
+    headline metric). p99 degrades toward max at small ``repeat`` — use
+    enough repeats for the tail to mean something."""
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        for _ in range(number):
+            fn()
+        times.append((time.perf_counter() - t0) / number)
+    arr = np.array(times) * 1e6
+    return (float(np.median(arr)), float(np.percentile(arr, 50)),
+            float(np.percentile(arr, 99)))
+
+
 def _parse_derived(derived: str) -> dict:
     """``k=v;k=v`` derived columns as a typed dict (numbers where possible)."""
     out = {}

@@ -12,7 +12,7 @@ from repro.core import (
 )
 from repro.data.synthetic import random_walk
 
-from .common import row, timeit
+from .common import row, timeit, timeit_pcts
 
 N, LEN, NQ = 40_000, 128, 16
 BATCH_SIZES = (1, 8, 64, 256)
@@ -93,8 +93,8 @@ def main(smoke: bool = False):
             # between the batch and loop windows; more reps stabilize them
             reps = 7 if bsz <= 8 else 3
             es0 = dict(engine.stats)
-            us_batch = timeit(lambda: idx.knn_batch(Qb, k=10, raw=raw),
-                              repeat=reps)
+            us_batch, p50_b, p99_b = timeit_pcts(
+                lambda: idx.knn_batch(Qb, k=10, raw=raw), repeat=reps)
             es1 = dict(engine.stats)
             us_loop = timeit(
                 lambda: [idx.knn_exact(q, k=10, raw=raw) for q in Qb],
@@ -107,6 +107,7 @@ def main(smoke: bool = False):
                 us_batch / bsz,
                 f"speedup_vs_loop={us_loop / max(us_batch, 1e-9):.2f};"
                 f"loop_us_per_q={us_loop / bsz:.1f};"
+                f"p50_us={p50_b / bsz:.1f};p99_us={p99_b / bsz:.1f};"
                 f"verified={st.entries_verified};"
                 f"trace_count={es1['traces'] - es0['traces']};"
                 f"h2d_bytes={es1['h2d_bytes'] - es0['h2d_bytes']};"
@@ -125,9 +126,9 @@ def main(smoke: bool = False):
         for bsz in batch_sizes:
             Qb = QB[:bsz]
             for nb in approx_nb:
-                us_batch = timeit(
+                us_batch, p50_b, p99_b = timeit_pcts(
                     lambda: idx.knn_approx_batch(Qb, k=10, n_blocks=nb, raw=raw),
-                    repeat=3,
+                    repeat=5,
                 )
                 us_loop = timeit(
                     lambda: [idx.knn_approx(q, k=10, n_blocks=nb, raw=raw)
@@ -150,6 +151,7 @@ def main(smoke: bool = False):
                     us_batch / bsz,
                     f"speedup_vs_loop={us_loop / max(us_batch, 1e-9):.2f};"
                     f"loop_us_per_q={us_loop / bsz:.1f};"
+                    f"p50_us={p50_b / bsz:.1f};p99_us={p99_b / bsz:.1f};"
                     f"recall_at10={rb:.3f};loop_recall_at10={rl:.3f};"
                     f"seq_read_mb={seq_mb:.2f};verified={st.entries_verified};"
                     f"modeled_io_s={disk.modeled_seconds() / bsz:.5f}",
@@ -199,7 +201,8 @@ def main(smoke: bool = False):
             Qb = QB[:bsz]
             reps = 7 if bsz <= 8 else 3
             es0 = dict(engine.stats)
-            us = timeit(lambda: ct.knn_batch(Qb, k=10, raw=raw), repeat=reps)
+            us, p50_b, p99_b = timeit_pcts(
+                lambda: ct.knn_batch(Qb, k=10, raw=raw), repeat=reps)
             es1 = dict(engine.stats)
             _, got_ids, _ = ct.knn_batch(Qb, k=10, raw=raw)
             # fallback_rate = fraction of device-screened queries the
@@ -211,6 +214,7 @@ def main(smoke: bool = False):
             rec = recall_at_k(got_ids, oracle_ids[:bsz])
             assert rec == 1.0, f"screen dtype {dt} broke exactness: {rec}"
             row(f"query/screen_{dt}_knn_batch_b{bsz}", us / bsz,
+                f"p50_us={p50_b / bsz:.1f};p99_us={p99_b / bsz:.1f};"
                 f"recall_at10={rec:.3f};"
                 f"fallback_rate={fb / max(sc, 1):.3f};"
                 f"h2d_bytes={es1['h2d_bytes'] - es0['h2d_bytes']};"

@@ -19,7 +19,7 @@ import traceback
 ROW_RE = re.compile(r"^[^,\s][^,]*,\d+(\.\d+)?,[^,]*(;[^,]*)*$")
 
 # modules whose rows form the tracked perf trajectory
-ARTIFACT_MODS = ("query", "streaming")
+ARTIFACT_MODS = ("query", "streaming", "serving")
 
 
 def _engine_summary() -> dict:
@@ -28,7 +28,11 @@ def _engine_summary() -> dict:
     from compile/transfer regressions."""
     from repro.core.verify_engine import get_engine
 
-    return dict(get_engine().stats)
+    out = dict(get_engine().stats)
+    # copy the served-batch histogram so the artifact snapshot does not
+    # alias the engine's live (still-mutating) counter dict
+    out["batch_hist"] = {str(kk): v for kk, v in out["batch_hist"].items()}
+    return out
 
 
 def _write_artifact(name: str, rows: list, out_dir: str, smoke: bool) -> None:
@@ -61,9 +65,10 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from . import (common, construction, kernels_bench, memory, query, roofline,
-                   streaming)
+                   serving, streaming)
 
-    mods = [construction, query, streaming, memory, kernels_bench, roofline]
+    mods = [construction, query, streaming, serving, memory, kernels_bench,
+            roofline]
     if args.only:
         wanted = set(args.only.split(","))
         mods = [m for m in mods if m.__name__.split(".")[-1] in wanted]

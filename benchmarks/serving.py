@@ -1,0 +1,130 @@
+"""Closed-loop serving benchmark: the dynamic-batching gateway under a
+Poisson arrival sweep (offered QPS x deadline x tier mix).
+
+Each config drives ``core.gateway`` with an open-loop Poisson client
+stream against a pre-built streaming index and reports the client-observed
+latency-vs-throughput point: p50/p95/p99 latency, achieved QPS, shed rate,
+the formed-batch histogram, and the engine's post-warm-up retrace count —
+which must stay 0: the gateway's ladder rungs are exactly the engine's
+prewarmed batch buckets, so steady-state serving never compiles.
+
+The sweep shape is the paper's serving story: at low offered load p99
+stays under the deadline-flush bound (one deadline plus one batch service
+time); past saturation the gateway degrades gracefully — the shed rate
+rises and p99 stays bounded — instead of collapsing into an unbounded
+queue.
+"""
+import time
+
+import numpy as np
+
+from repro.core import (Gateway, GatewayConfig, StreamConfig, StreamingIndex,
+                        SummarizationConfig)
+from repro.core.verify_engine import get_engine
+
+from .common import row
+
+LEN = 128
+CFG = SummarizationConfig(series_len=LEN, n_segments=16, card_bits=8)
+N_BATCH, BSZ = 20, 1000
+K = 5
+SLO_P99_MS = 60.0
+# (offered qps, deadline_ms, mix): a latency-vs-throughput curve at fixed
+# deadline, a deadline-sensitivity pair at fixed load, and the tier mixes
+CONFIGS = (
+    (500, 5.0, "exact"),
+    (2000, 5.0, "exact"),
+    (8000, 5.0, "exact"),
+    (2000, 2.0, "exact"),
+    (2000, 10.0, "exact"),
+    (2000, 5.0, "mixed"),
+    (8000, 5.0, "mixed"),
+)
+SMOKE_CONFIGS = ((300, 5.0, "exact"), (300, 5.0, "mixed"))
+
+
+def _mix_kwargs(mix: str, rng, windows):
+    """Deterministic tenant mix. ``mixed`` adds recall-targeted requests,
+    conflicting recall+latency targets (always shed), and window
+    constraints (per-tier/per-window sub-batch splits)."""
+    kw = {}
+    if mix == "mixed":
+        r = rng.random()
+        if r < 0.2:
+            kw["target_recall"] = 0.9
+        elif r < 0.3:
+            kw.update(target_recall=0.9, latency_budget_ms=0.05)
+        if rng.random() < 0.5:
+            kw["window"] = windows
+    return kw
+
+
+def _drive(gw, Q, qps, mix, rng, windows, warmup, engine):
+    """Submit ``len(Q)`` requests at Poisson-offered ``qps``; returns the
+    measured (post-warm-up) responses, the wall time of the measured
+    phase, and the engine retraces during it."""
+    tickets = []
+    traces0 = None
+    t_meas0 = None
+    for i in range(Q.shape[0]):
+        tickets.append(gw.submit(Q[i], **_mix_kwargs(mix, rng, windows)))
+        if i + 1 == warmup:
+            for t in tickets:
+                t.result(timeout=300)  # drain: warm-up compiles settle
+            gw.reset_slo_window()  # compile latencies must not trip the gate
+            traces0 = engine.stats["traces"]
+            t_meas0 = time.perf_counter()
+        time.sleep(rng.exponential(1.0 / qps))
+    resps = [t.result(timeout=300) for t in tickets]
+    t_meas1 = time.perf_counter()
+    retraces = engine.stats["traces"] - (traces0 if traces0 is not None
+                                         else engine.stats["traces"])
+    return resps[warmup:], (t_meas1 - (t_meas0 or t_meas1)), retraces
+
+
+def main(smoke: bool = False):
+    n_batch, bsz = (6, 200) if smoke else (N_BATCH, BSZ)
+    n_req = 60 if smoke else 400
+    max_batch = 16 if smoke else 32
+    configs = SMOKE_CONFIGS if smoke else CONFIGS
+    idx = StreamingIndex(StreamConfig(
+        scheme="BTP", summarization=CFG, buffer_entries=1024 if smoke else 4096,
+        growth_factor=4, block_size=512))
+    for b in range(n_batch):
+        rng = np.random.default_rng(100 + b)
+        x = np.cumsum(rng.normal(size=(bsz, LEN)), axis=1,
+                      dtype=np.float64).astype(np.float32)
+        idx.ingest(x, np.full(bsz, b, np.int64))
+    engine = get_engine()
+    windows = (max(0, n_batch - 6), n_batch - 1)
+    caps = sorted({bsz * (b + 1) for b in range(n_batch)})
+    warmup = min(n_req // 4, 2 * max_batch)
+    for qps, deadline_ms, mix in configs:
+        gw = Gateway(idx, GatewayConfig(
+            deadline_ms=deadline_ms, slo_p99_ms=SLO_P99_MS,
+            max_batch=max_batch, k=K))
+        gw.prewarm(caps)
+        rng = np.random.default_rng(int(qps * 1000 + deadline_ms * 10))
+        Q = np.cumsum(rng.normal(size=(n_req, LEN)), axis=1,
+                      dtype=np.float64).astype(np.float32)
+        measured, wall_s, retraces = _drive(gw, Q, qps, mix, rng, windows,
+                                            warmup, engine)
+        gs = gw.snapshot_stats()
+        gw.close()
+        lat = np.array([r.latency_ms for r in measured])
+        shed_rate = float(np.mean([r.shed for r in measured]))
+        achieved = len(measured) / max(wall_s, 1e-9)
+        bhist = "|".join(f"{s}:{c}" for s, c in
+                         sorted(gs["batch_hist"].items()))
+        row(f"serving/qps{qps:g}_dl{deadline_ms:g}_{mix}",
+            float(lat.mean()) * 1e3,
+            f"offered_qps={qps:g};achieved_qps={achieved:.0f};"
+            f"p50_ms={np.percentile(lat, 50):.2f};"
+            f"p95_ms={np.percentile(lat, 95):.2f};"
+            f"p99_ms={np.percentile(lat, 99):.2f};"
+            f"shed_rate={shed_rate:.3f};trace_count={retraces};"
+            f"served={len(measured)};deadline_ms={deadline_ms:g};"
+            f"batches={gs['batches']};"
+            f"deadline_flushes={gs['deadline_flushes']};"
+            f"full_flushes={gs['full_flushes']};"
+            f"batch_hist={bhist}")

@@ -20,7 +20,7 @@ from repro.core import (StreamConfig, StreamingIndex, SummarizationConfig,
                         recall_at_k)
 from repro.data.synthetic import seismic
 
-from .common import row, timeit
+from .common import row, timeit, timeit_pcts
 
 LEN = 128
 CFG = SummarizationConfig(series_len=LEN, n_segments=16, card_bits=8)
@@ -153,7 +153,8 @@ def main(smoke: bool = False):
         t0, t1 = windows["mid"]
         for m in qb_sizes:
             Qb = QB[:m]
-            us_b = timeit(lambda: idx.window_knn_batch(Qb, t0, t1, k=5), repeat=2)
+            us_b, p50_b, p99_b = timeit_pcts(
+                lambda: idx.window_knn_batch(Qb, t0, t1, k=5), repeat=5)
             us_l = timeit(
                 lambda: [idx.window_knn(q2, t0, t1, k=5) for q2 in Qb], repeat=2
             )
@@ -162,6 +163,7 @@ def main(smoke: bool = False):
             idx.window_knn_batch(Qb, t0, t1, k=5)
             row(f"streaming/{scheme}_window_mid_batch_b{m}", us_b / m,
                 f"speedup_vs_loop={us_l / max(us_b, 1e-9):.2f};"
+                f"p50_us={p50_b / m:.1f};p99_us={p99_b / m:.1f};"
                 f"modeled_io_s={d.modeled_seconds() / m:.5f}")
 
         # batched approximate tier: batch x n_blocks with recall@5 vs exact
@@ -169,10 +171,10 @@ def main(smoke: bool = False):
         for m in qb_sizes:
             Qb = QB[:m]
             for nb in (1, 2):
-                us_b = timeit(
+                us_b, p50_b, p99_b = timeit_pcts(
                     lambda: idx.window_knn_approx_batch(Qb, t0, t1, k=5,
                                                         n_blocks=nb),
-                    repeat=2,
+                    repeat=5,
                 )
                 us_l = timeit(
                     lambda: [idx.window_knn(q2, t0, t1, k=5, exact=False,
@@ -186,6 +188,7 @@ def main(smoke: bool = False):
                 row(f"streaming/{scheme}_window_mid_approx_batch_b{m}_nb{nb}",
                     us_b / m,
                     f"speedup_vs_loop={us_l / max(us_b, 1e-9):.2f};"
+                    f"p50_us={p50_b / m:.1f};p99_us={p99_b / m:.1f};"
                     f"recall_at5={rec:.3f}")
 
     concurrent_sweep(smoke)

@@ -26,7 +26,7 @@ from .base import Checker, Finding, Module, Project, attr_chain, register
 #: classes whose instances are shared across threads behind an instance lock
 GUARDED_CLASSES = {
     "RunRegistry", "IngestPipeline", "VerifyEngine", "DiskModel", "RawStore",
-    "FileStore", "WriteAheadLog", "StorageEngine", "ReadaheadPool",
+    "FileStore", "WriteAheadLog", "StorageEngine", "ReadaheadPool", "Gateway",
 }
 
 #: lock attributes whose ``with`` blocks count as holding the lock

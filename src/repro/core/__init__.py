@@ -26,7 +26,10 @@ from .storage import (
 )
 from .streaming import StreamConfig, StreamingIndex
 from .adsplus import ADSConfig, ADSIndex
-from .recommender import Scenario, Recommendation, recommend
+from .recommender import (
+    Scenario, Recommendation, TierDecision, recommend, serving_tier,
+)
+from .gateway import Gateway, GatewayConfig, Response, Ticket
 
 __all__ = [
     "SummarizationConfig", "breakpoints", "paa", "sax", "sax_from_paa",
@@ -43,7 +46,9 @@ __all__ = [
     "BufferChunk", "RunRegistry", "RunSet", "IngestPipeline",
     "FileStore", "SimulatedCrash", "StorageEngine", "WriteAheadLog",
     "resolve_backend",
-    "ADSConfig", "ADSIndex", "Scenario", "Recommendation", "recommend",
+    "ADSConfig", "ADSIndex", "Scenario", "Recommendation", "TierDecision",
+    "recommend", "serving_tier",
+    "Gateway", "GatewayConfig", "Response", "Ticket",
 ]
 
 # Runtime sanitizer (lock-order assertions + snapshot seals): opt-in via

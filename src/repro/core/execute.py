@@ -535,71 +535,82 @@ def _exec_range(src: RangeSource, plan, Q, k, vals, ids, stats, backend):
         return vals, ids
     stats.entries_verified += int(upos.size)
     spans_u, inv = np.unique(np.stack([lo, hi], axis=1), axis=0, return_inverse=True)
-    # take the no-fetch device route only when some span group can actually
-    # clear the engine's floors — otherwise building/uploading an arena just
-    # to read its host mirror would cost more than the fetch it avoids
-    use_dev = (
-        backend == "device"
-        and ops.device_view is not None
-        and any(
-            _device_ready(ops, int(np.searchsorted(upos, ghi)
-                                   - np.searchsorted(upos, glo)),
-                          backend, int((inv == g).sum()))
-            for g, (glo, ghi) in enumerate(spans_u)
-        )
-    )
-    if ops.series is not None and upos.size == sum(r1 - r0 for r0, r1 in ranges):
+    n_groups = spans_u.shape[0]
+    qidx_g = [np.nonzero(inv == g)[0] for g in range(n_groups)]
+    # each group's slice of the (sorted, window-filtered) union positions
+    j01 = np.stack([np.searchsorted(upos, spans_u[:, 0]),
+                    np.searchsorted(upos, spans_u[:, 1])], axis=1)
+    contiguous = (ops.series is not None
+                  and upos.size == sum(r1 - r0 for r0, r1 in ranges))
+    # Route PER GROUP: a group takes the no-fetch device route only when it
+    # clears the engine's floors ITSELF. Routing the whole pass on "any
+    # group is device-ready" used to strand every small group on a
+    # per-group gather from the arena's host mirror — dozens of fancy
+    # gathers plus tiny device launches instead of one shared fetch (the
+    # b64/nb2 throughput collapse in BENCH_streaming).
+    dev = np.zeros(n_groups, bool)
+    if backend == "device" and ops.device_view is not None:
+        for g in range(n_groups):
+            dev[g] = _device_ready(ops, int(j01[g, 1] - j01[g, 0]), backend,
+                                   qidx_g[g].size)
+    data_h = gid_h = xsq_h = None
+    hmap = None  # upos index -> row in the shared host fetch
+    if contiguous:
         # contiguous materialized ranges: slice views per group below — no
         # 10s-of-MB union gather; only the I/O accounting happens here
-        data_u = None
-        gid_u = None
         if src.read_payload_ranges is not None:
             src.read_payload_ranges(ranges)
-    elif use_dev:
-        # device path: the engine reads the arena; only the modeled I/O of
-        # the sequential range fetch happens host-side
-        data_u = None
-        gid_u = None
-        _account_fetch(ops, upos)
     else:
-        data_u = ops.fetch(upos)  # (U, n)
-        gid_u = ops.ids[upos]
-    xsq_u = None
-    if backend != "kernel" and data_u is not None and ops.norms2 is not None:
-        xsq_u = ops.norms2(upos)  # cached |x|^2: nothing union-sized recomputed
-    for g, (glo, ghi) in enumerate(spans_u):
-        qidx = np.nonzero(inv == g)[0]
-        j0, j1 = np.searchsorted(upos, (glo, ghi))
+        # ONE shared fetch of exactly the rows the host-tail groups need
+        # (overlapping groups share rows); device groups account the
+        # modeled I/O of their remaining rows without materializing them
+        hsel = np.zeros(upos.size, bool)
+        for g in np.nonzero(~dev)[0]:
+            hsel[j01[g, 0]:j01[g, 1]] = True
+        if hsel.any():
+            hmap = np.full(upos.size, -1, np.int64)
+            hmap[hsel] = np.arange(int(hsel.sum()))
+            hpos = upos[hsel]
+            data_h = ops.fetch(hpos)
+            gid_h = ops.ids[hpos]
+            if backend != "kernel" and ops.norms2 is not None:
+                xsq_h = ops.norms2(hpos)  # cached |x|^2: fetched once
+        if dev.any():
+            dsel = np.zeros(upos.size, bool)
+            for g in np.nonzero(dev)[0]:
+                dsel[j01[g, 0]:j01[g, 1]] = True
+            dacct = dsel & ~hsel  # rows the host fetch already accounted
+            if dacct.any():
+                _account_fetch(ops, upos[dacct])
+    for g in range(n_groups):
+        qidx = qidx_g[g]
+        j0, j1 = int(j01[g, 0]), int(j01[g, 1])
         if j0 == j1:
             continue
-        pos_g = upos[j0:j1]
-        if _device_ready(ops, j1 - j0, backend, qidx.size):
+        if dev[g]:
             # fused arena pass for this distinct span's query group; the
             # approx tier keeps its slack-screen fallback semantics
-            nv, gi = _device_topk(Q[qidx], ops, pos_g, k, exact=False)
+            nv, gi = _device_topk(Q[qidx], ops, upos[j0:j1], k, exact=False)
             mv, mi = merge_topk_state(vals[qidx], ids[qidx], nv, gi)
             vals[qidx], ids[qidx] = mv, mi
             continue
-        if data_u is None and ops.series is not None:
+        if contiguous:
+            glo, ghi = int(spans_u[g, 0]), int(spans_u[g, 1])
             sub = ops.series[glo:ghi]  # contiguous materialized: a view
             gid = ops.ids[glo:ghi]
-        elif data_u is None:  # small device-tier group: host tail from the
-            view = ops.device_view()  # arena's host mirror, no store fetch
-            sub = view.host[ops.table_rows(pos_g) if ops.table_rows else pos_g]
-            gid = ops.ids[pos_g]
         else:
-            sub = data_u[j0:j1]
-            gid = gid_u[j0:j1]
+            rows = hmap[j0:j1]
+            sub = data_h[rows]
+            gid = gid_h[rows]
         if backend == "kernel":
             nv, ni = _kernel_topk_dists(Q[qidx], sub, k)
             gi = np.where(ni >= 0, gid[np.maximum(ni, 0)], -1)
         else:
-            if data_u is None and ops.series is not None:
-                xsq_g = ops.norms2(np.arange(glo, ghi)) if ops.norms2 else None
-            elif data_u is None:
-                xsq_g = ops.norms2(pos_g) if ops.norms2 else None
+            if contiguous:
+                xsq_g = (ops.norms2(np.arange(glo, ghi))
+                         if ops.norms2 is not None else None)
             else:
-                xsq_g = None if xsq_u is None else xsq_u[j0:j1]
+                xsq_g = None if xsq_h is None else xsq_h[rows]
             nv, ni = _screen_topk_slack(Q[qidx], sub, k, xsq=xsq_g)
             gi = gid[ni]
         mv, mi = merge_topk_state(vals[qidx], ids[qidx], nv, gi)

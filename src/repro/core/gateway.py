@@ -1,0 +1,395 @@
+"""SLO-aware dynamic-batching serving gateway.
+
+The engine serves *batches*; interactive traffic arrives as independent
+single queries. This module is the admission-control layer between them
+(the shape production inference stacks call continuous batching):
+
+* an admission queue coalesces arriving queries into the largest batch
+  rung available — the rungs are exactly the verify engine's query-batch
+  buckets (``_bucket_batch``: powers of two, min 8), so a prewarmed
+  gateway never compiles at serve time;
+* a **deadline flush** guarantees no query waits more than
+  ``deadline_ms`` in queue: when the oldest request's deadline expires the
+  batch is flushed as-is and padded up to the rung floor with copies of
+  real queries (padding rows are sliced off before results are returned —
+  prewarmed shapes make the padding compile-free, and per-query answers
+  are independent of batch composition, so padding never changes them);
+* **per-request tier selection** routes each request through the
+  recommender's serving-tier node (``target_recall`` /
+  ``latency_budget_ms`` per request): one formed batch fans out into
+  per-(tier, n_blocks, k, window) sub-batches, all answered against ONE
+  pinned epoch snapshot;
+* **backpressure sheds to the approximate tier** — not into an unbounded
+  queue: the admission queue is bounded (``max_queue``; ``submit``
+  blocks), and when the measured rolling p99 drifts past ``slo_p99_ms``
+  the gateway starts answering sheddable exact-tier requests on the
+  approximate tier instead, with hysteresis (``shed_exit_frac``) so it
+  recovers. Requests with ``target_recall >= 1.0`` are contractually
+  exact and are never shed; a recommender ``conflict`` (the latency cap
+  makes the recall target unreachable) is itself a shed signal.
+
+Every response carries provenance: ``tier_served``, ``shed``,
+``conflict``, ``queue_wait_ms``, the formed/padded batch shape, and the
+epoch the answer was pinned to.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from .recommender import Scenario, TierDecision, serving_tier
+from .verify_engine import _CHUNK_M, _bucket_batch, get_engine
+
+
+@dataclasses.dataclass(frozen=True)
+class GatewayConfig:
+    deadline_ms: float = 5.0  # max in-queue wait before a flush
+    slo_p99_ms: float = 50.0  # rolling-p99 target that triggers shedding
+    max_batch: int = 64  # largest formed batch (top ladder rung)
+    k: int = 5  # default neighbors per query
+    max_queue: int = 4096  # admission bound; submit() blocks beyond it
+    lat_window: int = 256  # completions in the rolling percentile window
+    min_shed_samples: int = 32  # completions before shedding may engage
+    shed_exit_frac: float = 0.7  # recover when p99 < frac * slo (hysteresis)
+    shed_n_blocks: int = 2  # approx recall knob for shed serves
+
+
+@dataclasses.dataclass
+class Response:
+    """One client answer + its serving provenance."""
+    vals: np.ndarray  # (k,) f64 squared distances, ascending
+    ids: np.ndarray  # (k,) int64 global ids (-1 padded)
+    tier_served: str  # "exact" | "approx"
+    n_blocks: int  # approx tier recall knob used (0 for exact)
+    shed: bool  # True when SLO pressure / a conflict downgraded the tier
+    conflict: bool  # recommender: latency cap made recall unreachable
+    queue_wait_ms: float  # admission -> batch dispatch
+    latency_ms: float  # admission -> answer
+    batch_size: int  # real queries in the formed batch
+    padded_to: int  # ladder rung the sub-batch was padded to
+    epoch: int  # pinned snapshot the whole formed batch answered against
+
+
+@dataclasses.dataclass
+class _Request:
+    q: np.ndarray
+    k: int
+    window: Optional[tuple]
+    target_recall: Optional[float]
+    latency_budget_ms: Optional[float]
+    t_arrive: float
+    ticket: "Ticket"
+
+
+class Ticket:
+    """Handle returned by ``Gateway.submit``; ``result()`` blocks until the
+    dispatcher resolves it."""
+
+    __slots__ = ("_ev", "_resp", "_err")
+
+    def __init__(self):
+        self._ev = threading.Event()
+        self._resp: Optional[Response] = None
+        self._err: Optional[BaseException] = None
+
+    def _resolve(self, resp: Optional[Response] = None,
+                 err: Optional[BaseException] = None) -> None:
+        self._resp, self._err = resp, err
+        self._ev.set()
+
+    def done(self) -> bool:
+        return self._ev.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> Response:
+        if not self._ev.wait(timeout):
+            raise TimeoutError("gateway response pending")
+        if self._err is not None:
+            raise self._err
+        return self._resp
+
+
+def ladder(max_batch: int) -> tuple:
+    """The gateway's batch rungs: the engine's query-batch buckets (pow2,
+    min 8) up to ``max_batch`` — shared so prewarm covers exactly the
+    shapes the dispatcher can form."""
+    rungs, m = [], 8
+    while m < max_batch:
+        rungs.append(m)
+        m *= 2
+    rungs.append(max_batch)
+    return tuple(rungs)
+
+
+class Gateway:
+    """Admission queue + dispatcher thread over a ``StreamingIndex``.
+
+    Thread-shared state (queue, rolling latencies, shed flag, stats,
+    tier-decision cache) is guarded by ``self._cond`` — palmlint's
+    lock-discipline checker enforces it. Device work (the engine passes)
+    runs OUTSIDE the lock so clients keep submitting while a batch
+    serves."""
+
+    def __init__(self, index, cfg: Optional[GatewayConfig] = None):
+        self._idx = index
+        self.cfg = cfg or GatewayConfig()
+        if self.cfg.max_batch > _CHUNK_M:
+            raise ValueError(
+                f"max_batch {self.cfg.max_batch} exceeds the engine's query "
+                f"chunk {_CHUNK_M}; larger formed batches would split into "
+                "multiple passes and defeat the ladder accounting")
+        self._cond = threading.Condition()
+        self._queue: deque = deque()
+        self._lat_ms: deque = deque(maxlen=self.cfg.lat_window)
+        self._shedding = False
+        self._closed = False
+        self._tier_cache: dict = {}
+        self.stats = {
+            "submitted": 0,
+            "served": 0,
+            "shed_served": 0,  # answers downgraded to approx (or conflicted)
+            "conflicts": 0,  # recommender recall/latency conflicts seen
+            "batches": 0,  # formed batches dispatched
+            "deadline_flushes": 0,  # batches flushed below the top rung
+            "full_flushes": 0,  # batches formed at the top rung
+            "batch_hist": {},  # formed (real) batch size -> count
+            "shed_transitions": 0,  # enter/exit events of the shed state
+        }
+        self._thread = threading.Thread(target=self._dispatch_loop,
+                                        name="gateway-dispatch", daemon=True)
+        self._thread.start()
+
+    # ------------------------------------------------------------ client API
+    def submit(self, q, *, k: Optional[int] = None,
+               window: Optional[tuple] = None,
+               target_recall: Optional[float] = None,
+               latency_budget_ms: Optional[float] = None) -> Ticket:
+        """Enqueue one query; returns immediately with a ``Ticket`` unless
+        the bounded admission queue is full (then blocks — backpressure)."""
+        q = np.asarray(q, np.float32).reshape(-1)
+        req = _Request(q=q, k=int(k if k is not None else self.cfg.k),
+                       window=None if window is None else
+                       (int(window[0]), int(window[1])),
+                       target_recall=target_recall,
+                       latency_budget_ms=latency_budget_ms,
+                       t_arrive=time.perf_counter(), ticket=Ticket())
+        with self._cond:
+            while len(self._queue) >= self.cfg.max_queue and not self._closed:
+                self._cond.wait(0.01)
+            if self._closed:
+                raise RuntimeError("gateway is closed")
+            self._queue.append(req)
+            self.stats["submitted"] += 1
+            self._cond.notify_all()
+        return req.ticket
+
+    def prewarm(self, caps, *, dtype: Optional[str] = None) -> int:
+        """Compile every (batch rung x table bucket) verification shape the
+        dispatcher can form, so steady-state serving runs with zero
+        retraces. ``caps`` — table sizes the stream will reach (the engine
+        dedupes them onto its capacity rungs)."""
+        eng = get_engine()
+        d = int(self._idx.cfg.summarization.series_len)
+        n = 0
+        for rung in ladder(self.cfg.max_batch):
+            n += eng.prewarm(d, rung, self.cfg.k, list(caps), dtype=dtype)
+        return n
+
+    def snapshot_stats(self) -> dict:
+        """Point-in-time copy of the gateway counters + rolling percentiles."""
+        with self._cond:
+            out = dict(self.stats)
+            out["batch_hist"] = dict(self.stats["batch_hist"])
+            lat = np.array(self._lat_ms, np.float64)
+            out["queue_depth"] = len(self._queue)
+            out["shedding"] = self._shedding
+            out["p50_ms"] = float(np.percentile(lat, 50)) if lat.size else 0.0
+            out["p99_ms"] = float(np.percentile(lat, 99)) if lat.size else 0.0
+            return out
+
+    def reset_slo_window(self) -> None:
+        """Drop the rolling latency window and leave the shed state.
+
+        Warm-up traffic pays one-time compiles whose multi-second
+        latencies would otherwise sit in the p99 window (``lat_window``
+        completions) and keep the shed gate engaged long into steady
+        state — at low arrival rates the window can take the whole run to
+        wash out. Harnesses that measure steady state (the serving
+        benchmark, ``serve.py --gateway``) call this once after draining
+        their warm-up requests."""
+        with self._cond:
+            self._lat_ms.clear()
+            if self._shedding:
+                self._shedding = False
+                self.stats["shed_transitions"] += 1
+
+    def close(self, timeout: float = 30.0) -> None:
+        """Stop admitting, drain the queue, stop the dispatcher."""
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+        self._thread.join(timeout)
+
+    # ------------------------------------------------------------ dispatcher
+    def _dispatch_loop(self) -> None:
+        while True:
+            formed = self._form_batch()
+            if formed is None:
+                return
+            batch, shed_now = formed
+            if not batch:
+                continue
+            try:
+                self._serve_batch(batch, shed_now)
+            except BaseException as e:  # resolve, or clients hang forever
+                for req in batch:
+                    req.ticket._resolve(err=e)
+
+    def _form_batch(self):
+        """Block until a batch is ready: either the top rung fills or the
+        oldest request's deadline expires (then flush whatever is queued).
+        Returns None when closed and drained."""
+        cfg = self.cfg
+        with self._cond:
+            while not self._queue and not self._closed:
+                self._cond.wait()
+            if not self._queue:
+                return None  # closed and drained
+            deadline = self._queue[0].t_arrive + cfg.deadline_ms / 1e3
+            while len(self._queue) < cfg.max_batch and not self._closed:
+                rem = deadline - time.perf_counter()
+                if rem <= 0:
+                    break
+                self._cond.wait(rem)
+                if not self._queue:
+                    return None if self._closed else ([], False)
+            take = min(len(self._queue), cfg.max_batch)
+            batch = [self._queue.popleft() for _ in range(take)]
+            self.stats["batches"] += 1
+            key = "full_flushes" if take >= cfg.max_batch else "deadline_flushes"
+            self.stats[key] += 1
+            hist = self.stats["batch_hist"]
+            hist[take] = hist.get(take, 0) + 1
+            shed_now = self._shedding
+            self._cond.notify_all()  # free space for blocked submitters
+        return batch, shed_now
+
+    def _route(self, req: _Request, shed_now: bool):
+        """(tier, n_blocks, shed, conflict) for one request. Strictly-exact
+        requests (target_recall >= 1.0) are never shed; a recommender
+        conflict marks the answer shed even when not under SLO pressure —
+        the latency cap already cost the client its recall target."""
+        tr, lb = req.target_recall, req.latency_budget_ms
+        strict = tr is not None and tr >= 1.0
+        if tr is None and lb is None:
+            tier, nb, conflict = "exact", 0, False
+        else:
+            dec = self._tier_decision(tr, lb)
+            tier, nb, conflict = dec.tier, dec.n_blocks, dec.conflict
+        shed = conflict
+        if shed_now and tier == "exact" and not strict:
+            tier, nb, shed = "approx", self.cfg.shed_n_blocks, True
+        return tier, nb, shed, conflict
+
+    def _tier_decision(self, tr, lb) -> TierDecision:
+        """Cached recommender serving-tier call. The live entry count is
+        quantized to its power-of-two bucket so the cache stays small and
+        decisions stay stable while ingest grows the store."""
+        n_live = max(1024, int(self._idx.raw.n))
+        n_q = 1 << (n_live - 1).bit_length()
+        key = (tr, lb, n_q)
+        with self._cond:
+            dec = self._tier_cache.get(key)
+        if dec is None:
+            dec = serving_tier(Scenario(
+                streaming=True, n_series=n_q,
+                series_len=int(self._idx.cfg.summarization.series_len),
+                uses_windows=True, target_recall=tr, latency_budget_ms=lb,
+                query_batch=self.cfg.max_batch))
+            with self._cond:
+                self._tier_cache[key] = dec
+        return dec
+
+    def _serve_batch(self, batch, shed_now: bool) -> None:
+        t_dispatch = time.perf_counter()
+        groups: dict = {}
+        routed = []
+        for i, req in enumerate(batch):
+            tier, nb, shed, conflict = self._route(req, shed_now)
+            routed.append((tier, nb, shed, conflict))
+            groups.setdefault((tier, nb, req.k, req.window), []).append(i)
+        answers: dict = {}
+        # ONE pinned epoch for the whole formed batch: every sub-batch
+        # answers against the same immutable snapshot even while background
+        # ingest publishes new epochs mid-serve
+        with self._idx.pin() as snap:
+            epoch = int(snap.epoch)
+            # deterministic sub-batch order: mixed-tenant batches always
+            # split and serve the same way for the same inputs
+            for key in sorted(groups, key=lambda t: (t[0], t[1], t[2],
+                                                     t[3] or (-1, -1))):
+                tier, nb, kk, window = key
+                idxs = groups[key]
+                Qg = np.stack([batch[i].q for i in idxs])
+                rung = _bucket_batch(len(idxs))
+                if rung > len(idxs):
+                    # pad to the rung floor with copies of a real query;
+                    # prewarmed shapes make this compile-free and the rows
+                    # are sliced off below — padding never leaks
+                    Qg = np.concatenate(
+                        [Qg, np.repeat(Qg[:1], rung - len(idxs), axis=0)])
+                if tier == "approx":
+                    if window is None:
+                        vals, gids, _ = self._idx.knn_approx_batch(
+                            Qg, k=kk, n_blocks=max(nb, 1), snapshot=snap)
+                    else:
+                        vals, gids, _ = self._idx.window_knn_approx_batch(
+                            Qg, window[0], window[1], k=kk,
+                            n_blocks=max(nb, 1), snapshot=snap)
+                else:
+                    if window is None:
+                        vals, gids, _ = self._idx.knn_batch(Qg, k=kk,
+                                                            snapshot=snap)
+                    else:
+                        vals, gids, _ = self._idx.window_knn_batch(
+                            Qg, window[0], window[1], k=kk, snapshot=snap)
+                for row_, i in enumerate(idxs):
+                    answers[i] = (vals[row_], gids[row_], rung)
+        t_done = time.perf_counter()
+        n_shed = n_conflict = 0
+        for i, req in enumerate(batch):
+            tier, nb, shed, conflict = routed[i]
+            vals, gids, rung = answers[i]
+            n_shed += int(shed)
+            n_conflict += int(conflict)
+            req.ticket._resolve(Response(
+                vals=vals, ids=gids, tier_served=tier, n_blocks=nb,
+                shed=shed, conflict=conflict,
+                queue_wait_ms=(t_dispatch - req.t_arrive) * 1e3,
+                latency_ms=(t_done - req.t_arrive) * 1e3,
+                batch_size=len(batch), padded_to=rung, epoch=epoch))
+        with self._cond:
+            self.stats["served"] += len(batch)
+            self.stats["shed_served"] += n_shed
+            self.stats["conflicts"] += n_conflict
+            for req in batch:
+                self._lat_ms.append((t_done - req.t_arrive) * 1e3)
+            self._update_shed_locked()
+
+    def _update_shed_locked(self) -> None:
+        """Recompute the shed state from the rolling p99 (caller holds the
+        lock). Hysteresis: enter above ``slo_p99_ms``, exit only below
+        ``shed_exit_frac * slo_p99_ms`` so the state does not flap."""
+        if len(self._lat_ms) < self.cfg.min_shed_samples:
+            return
+        p99 = float(np.percentile(np.array(self._lat_ms, np.float64), 99))
+        if not self._shedding and p99 > self.cfg.slo_p99_ms:
+            self._shedding = True
+            self.stats["shed_transitions"] += 1
+        elif self._shedding and p99 < self.cfg.shed_exit_frac * self.cfg.slo_p99_ms:
+            self._shedding = False
+            self.stats["shed_transitions"] += 1

@@ -45,6 +45,7 @@ class Recommendation:
     rationale: list[str] = dataclasses.field(default_factory=list)
     tier: str = "exact"  # "exact" | "approx" serving tier
     n_blocks: int = 0  # approx tier: adjacent blocks per (query, run)
+    conflict: bool = False  # latency cap makes the recall target unreachable
 
     def describe(self) -> str:
         mat = "materialized" if self.materialized else "non-materialized"
@@ -72,9 +73,35 @@ def _approx_recall_model(n_blocks: int) -> float:
     return 1.0 - 0.55 * (0.72 ** (n_blocks - 1))
 
 
-def _serving_tier(s: Scenario, r: list[str]) -> tuple[str, int]:
+@dataclasses.dataclass(frozen=True)
+class TierDecision:
+    """Structured serving-tier verdict for one request profile.
+
+    ``conflict`` is the machine-readable form of the "latency cap makes the
+    recall target unreachable" warning: admission layers (the serving
+    gateway) must treat it as a shed signal instead of relying on a string
+    buried in the rationale chain."""
+    tier: str  # "exact" | "approx"
+    n_blocks: int  # approx tier: adjacent blocks per (query, run)
+    conflict: bool
+    rationale: tuple[str, ...]
+
+
+def serving_tier(s: Scenario) -> TierDecision:
+    """Per-request tier selection: the serving-tier node of the decision
+    tree, standalone, with the recall/latency conflict surfaced as a flag.
+    Deterministic in ``s`` (``Scenario`` is frozen), so callers may cache
+    decisions per request profile."""
+    r: list[str] = []
+    tier, n_blocks, conflict = _serving_tier(s, r)
+    return TierDecision(tier, n_blocks, conflict, tuple(r))
+
+
+def _serving_tier(s: Scenario, r: list[str]) -> tuple[str, int, bool]:
     """Decision-tree node: pick the serving tier + its recall knob from the
-    target recall and per-query latency budget."""
+    target recall and per-query latency budget. Returns (tier, n_blocks,
+    conflict) where ``conflict`` is True when the latency cap forced
+    n_blocks below what the recall target needs."""
     n = s.n_series
     entry_bytes = s.series_len * _RAW_BYTES
     # modeled per-query exact cost: LB-surviving random fetches (amortized
@@ -83,13 +110,13 @@ def _serving_tier(s: Scenario, r: list[str]) -> tuple[str, int]:
     exact_rand_reads = n * _EXACT_VERIFIED_FRAC / batch_amort
     exact_ms = exact_rand_reads / _RAND_IOPS * 1e3
     if s.target_recall is None and s.latency_budget_ms is None:
-        return "exact", 0
+        return "exact", 0, False
     if s.target_recall is not None and s.target_recall >= 1.0:
         r.append(
             "target recall 1.0 -> only the exact tier guarantees it; "
             "the approximate tier is a strict subset of the exact answer"
         )
-        return "exact", 0
+        return "exact", 0, False
     if s.latency_budget_ms is not None and exact_ms <= s.latency_budget_ms \
             and s.target_recall is None:
         r.append(
@@ -97,7 +124,7 @@ def _serving_tier(s: Scenario, r: list[str]) -> tuple[str, int]:
             f"{s.latency_budget_ms:.2f} ms budget at batch {s.query_batch} "
             "-> keep exact answers"
         )
-        return "exact", 0
+        return "exact", 0, False
     # approximate tier: choose the smallest n_blocks whose modeled recall
     # clears the target and whose sequential bytes fit the budget
     target = s.target_recall if s.target_recall is not None else 0.9
@@ -110,6 +137,7 @@ def _serving_tier(s: Scenario, r: list[str]) -> tuple[str, int]:
         f"seek + {nb} adjacent block(s) read sequentially per (query, run) "
         f"(modeled recall ~{_approx_recall_model(nb):.2f})"
     )
+    conflict = False
     if s.latency_budget_ms is not None:
         uncapped = nb
         while nb > 1 and seq_ms > s.latency_budget_ms:
@@ -121,6 +149,7 @@ def _serving_tier(s: Scenario, r: list[str]) -> tuple[str, int]:
             f"exact would cost ~{exact_ms:.2f} ms"
         )
         if nb < uncapped and _approx_recall_model(nb) < target:
+            conflict = True
             r.append(
                 f"WARNING: at the capped n_blocks={nb} the modeled recall "
                 f"drops to ~{_approx_recall_model(nb):.2f}, below the "
@@ -133,7 +162,7 @@ def _serving_tier(s: Scenario, r: list[str]) -> tuple[str, int]:
             "vectorized key seek and coalesced sequential reads per run, so "
             "the per-query seek cost amortizes toward zero"
         )
-    return "approx", nb
+    return "approx", nb, conflict
 
 
 def recommend(s: Scenario) -> Recommendation:
@@ -184,9 +213,10 @@ def recommend(s: Scenario) -> Recommendation:
             "non-materialized; verification reads fetch from the raw log"
         )
         # node 1d: serving tier from the recall/latency targets
-        tier, n_blocks = _serving_tier(s, r)
+        tier, n_blocks, conflict = _serving_tier(s, r)
         return Recommendation(index, materialized, scheme, growth, 1.0,
-                              mem_entries, r, tier=tier, n_blocks=n_blocks)
+                              mem_entries, r, tier=tier, n_blocks=n_blocks,
+                              conflict=conflict)
 
     # --- static data ----------------------------------------------------------
     index = "ctree"
@@ -241,6 +271,6 @@ def recommend(s: Scenario) -> Recommendation:
         r.append("occasional updates expected -> leaf fill factor 0.8 leaves gaps")
 
     # node 5: serving tier from the recall/latency targets
-    tier, n_blocks = _serving_tier(s, r)
+    tier, n_blocks, conflict = _serving_tier(s, r)
     return Recommendation(index, materialized, scheme, 3, fill, mem_entries, r,
-                          tier=tier, n_blocks=n_blocks)
+                          tier=tier, n_blocks=n_blocks, conflict=conflict)

@@ -206,26 +206,29 @@ class StreamingIndex:
         return state_to_list(vals[0], gids[0]), stats
 
     def window_knn_batch(self, Q, t0: int, t1: int, k: int = 1, *,
-                         backend: str = "device", shard=None, mesh=None):
+                         backend: str = "device", shard=None, mesh=None,
+                         snapshot=None):
         """Batched exact window query: ((m, k) d2, (m, k) ids, stats).
 
         One batched pass per live run (see ``CLSM.knn_batch``); under PP
         run-level temporal skipping is disabled (``time_skip=False``) while
-        per-entry timestamp filtering stays on."""
+        per-entry timestamp filtering stays on. ``snapshot`` pins the query
+        to a caller-held epoch (see ``pin``)."""
         window = (int(t0), int(t1))
         return self.lsm.knn_batch(Q, k, raw=self.raw, window=window,
                                   backend=backend,
                                   time_skip=self._window_skip,
-                                  shard=shard, mesh=mesh)
+                                  shard=shard, mesh=mesh, snapshot=snapshot)
 
     def knn_batch(self, Q, k: int = 1, *, backend: str = "device", shard=None,
-                  mesh=None):
+                  mesh=None, snapshot=None):
         """Batched whole-history exact query: ((m, k) d2, (m, k) ids, stats)."""
         return self.lsm.knn_batch(Q, k, raw=self.raw, backend=backend,
-                                  shard=shard, mesh=mesh)
+                                  shard=shard, mesh=mesh, snapshot=snapshot)
 
     def window_knn_approx_batch(self, Q, t0: int, t1: int, k: int = 1, *,
-                                n_blocks: int = 1, backend: str = "device"):
+                                n_blocks: int = 1, backend: str = "device",
+                                snapshot=None):
         """Batched approximate window query — the approximate serving tier.
 
         Every run the window admits contributes one vectorized key seek and
@@ -238,13 +241,22 @@ class StreamingIndex:
         window = (int(t0), int(t1))
         return self.lsm.knn_approx_batch(Q, k, n_blocks=n_blocks, raw=self.raw,
                                          window=window, backend=backend,
-                                         time_skip=self._window_skip)
+                                         time_skip=self._window_skip,
+                                         snapshot=snapshot)
 
     def knn_approx_batch(self, Q, k: int = 1, *, n_blocks: int = 1,
-                         backend: str = "device"):
+                         backend: str = "device", snapshot=None):
         """Batched whole-history approximate query: ((m, k) d2, ids, stats)."""
         return self.lsm.knn_approx_batch(Q, k, n_blocks=n_blocks, raw=self.raw,
-                                         backend=backend)
+                                         backend=backend, snapshot=snapshot)
+
+    def pin(self):
+        """Context manager pinning the current epoch: yields an immutable
+        RunSet snapshot that every ``snapshot=``-taking query method accepts,
+        so a multi-query exchange (e.g. one gateway-formed batch fanned into
+        per-tier sub-batches) answers against ONE epoch while ingest keeps
+        publishing new ones."""
+        return self.lsm.registry.pin()
 
     def knn(self, q, k: int = 1, exact: bool = True, n_blocks: int = 1):
         """Whole-history query (no window)."""

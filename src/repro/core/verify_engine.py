@@ -301,6 +301,7 @@ class VerifyEngine:
             "released_bytes": 0,  # device bytes those arenas held
             "arena_bytes": 0,  # live device arena footprint (all dtypes)
             "arena_dtype": self.dtype,  # the engine's default storage dtype
+            "batch_hist": {},  # served batch bucket -> pass count (monotonic)
         }
 
     # ------------------------------------------------------------- arenas
@@ -435,6 +436,8 @@ class VerifyEngine:
         with self._lock:
             self.stats["calls"] += 1
             self.stats["screened"] += m
+            hist = self.stats["batch_hist"]
+            hist[mb] = hist.get(mb, 0) + 1
             before = _TRACES[0]
             bb = max(_bucket_rows(trows.size), _bucket_rows(s, 8))
             if bb >= view.cap:

@@ -102,11 +102,14 @@ def serve_coconut(args):
             es = engine.stats
             lag = idx.ingest_lag()
             lags.append(lag["lag_entries"])
+            bhist = ",".join(f"{mb}:{c}" for mb, c in
+                             sorted(es["batch_hist"].items()))
             line = (f"[serve] batch {b+1}: {args.query_batch} queries "
                     f"({tier}{'+mesh' if shard == 'mesh' else ''}), "
                     f"{dt*1e3:.2f} ms/query, "
                     f"partitions={idx.n_partitions}, "
                     f"traces={es['traces']}, hits={es['hits']}, "
+                    f"batch_hist={bhist or '-'}, "
                     f"epoch={lag['epoch']}, lag={lag['lag_entries']}, "
                     f"pending_merge={lag['runs_pending_merge']}, "
                     f"snap_age={lag['snapshot_age_s']:.2f}s")
@@ -150,6 +153,113 @@ def serve_coconut(args):
               f"{m['manifest_commits']} manifest commits, "
               f"{m['prefetch_spans']} readahead spans")
     print("[serve] access heat map:", render_heatmap(idx.raw.disk.heatmap()))
+
+
+def serve_gateway(args):
+    """Serve an *arrival stream* of independent single-query clients through
+    the dynamic-batching gateway (``core.gateway``) while background ingest
+    keeps publishing epochs.
+
+    A Poisson generator submits ``--requests`` single queries at
+    ``--arrival-rate`` QPS with a deterministic tenant mix (plain exact /
+    recall-targeted / conflicting recall+latency targets; half of each with
+    a recent-window constraint). The gateway coalesces them into
+    ladder-rung batches under ``--deadline-ms``, splits mixed batches into
+    per-tier sub-batches against one pinned epoch each, and sheds
+    sheddable exact traffic to the approximate tier when the rolling p99
+    passes ``--slo-p99-ms``. The summary reports client-observed latency
+    percentiles, shed rate, the formed-batch histogram, and the engine's
+    post-warm-up retrace count (zero when prewarmed)."""
+    import threading
+
+    from ..core import Gateway, GatewayConfig
+    from ..core.verify_engine import get_engine
+
+    scfg = SummarizationConfig(series_len=args.series_len, n_segments=16,
+                               card_bits=8)
+    idx = StreamingIndex(StreamConfig(
+        scheme=args.scheme, summarization=scfg, buffer_entries=4096,
+        growth_factor=4, block_size=512, ingest="async",
+        storage=getattr(args, "storage", "auto"),
+        storage_dir=getattr(args, "storage_dir", None),
+        screen_dtype=getattr(args, "screen_dtype", None)))
+    pre = max(1, (2 * args.batches) // 3)
+    for b in range(pre):
+        x = seismic(args.batch_size, args.series_len, seed=b)
+        idx.ingest(x, np.full(args.batch_size, b, np.int64))
+    idx.drain(timeout=300)
+    gw = Gateway(idx, GatewayConfig(
+        deadline_ms=args.deadline_ms, slo_p99_ms=args.slo_p99_ms,
+        max_batch=max(8, args.query_batch), k=args.k))
+    engine = get_engine()
+    if args.prewarm:
+        sizes = sorted({args.batch_size * (b + 1) for b in range(args.batches)})
+        t0 = time.time()
+        n = gw.prewarm(sizes, dtype=getattr(args, "screen_dtype", None))
+        print(f"[gateway] prewarmed {n} traces ({time.time()-t0:.1f}s) "
+              f"for stores up to {sizes[-1]} entries", flush=True)
+
+    stop = threading.Event()
+
+    def background_ingest():
+        for b in range(pre, args.batches):
+            if stop.is_set():
+                return
+            x = seismic(args.batch_size, args.series_len, seed=b)
+            idx.ingest(x, np.full(args.batch_size, b, np.int64))
+            time.sleep(0.01)
+
+    ingester = threading.Thread(target=background_ingest, daemon=True)
+    ingester.start()
+    rng = np.random.default_rng(12345)
+    Q = seismic(args.requests, args.series_len, seed=77_000)
+    warmup = min(args.requests // 4, 2 * max(8, args.query_batch))
+    tickets, kinds = [], []
+    traces_after_warmup = None
+    for i in range(args.requests):
+        r = rng.random()
+        kw = {}
+        if r < 0.2:
+            kw["target_recall"] = 0.9
+        elif r < 0.3:
+            kw.update(target_recall=0.9, latency_budget_ms=0.05)
+        if rng.random() < 0.5:
+            kw["window"] = (max(0, pre - args.window), pre - 1)
+        tickets.append(gw.submit(Q[i], **kw))
+        kinds.append("exact" if not kw.get("target_recall") else "approx")
+        if i + 1 == warmup:
+            for t in tickets:  # drain the warm-up phase before measuring
+                t.result(timeout=120)
+            gw.reset_slo_window()  # compile latencies must not trip the gate
+            traces_after_warmup = engine.stats["traces"]
+        time.sleep(rng.exponential(1.0 / max(args.arrival_rate, 1e-6)))
+    resps = [t.result(timeout=120) for t in tickets]
+    stop.set()
+    ingester.join(timeout=30)
+    idx.drain(timeout=300)
+    measured = resps[warmup:]
+    lat = np.array([r.latency_ms for r in measured])
+    waits = np.array([r.queue_wait_ms for r in measured])
+    shed_rate = float(np.mean([r.shed for r in measured]))
+    gs = gw.snapshot_stats()
+    retraces = engine.stats["traces"] - (traces_after_warmup
+                                         if traces_after_warmup is not None
+                                         else engine.stats["traces"])
+    bhist = ",".join(f"{s}:{c}" for s, c in sorted(gs["batch_hist"].items()))
+    print(f"[gateway] {len(measured)} measured requests @ "
+          f"{args.arrival_rate:.0f} QPS offered: "
+          f"p50={np.percentile(lat, 50):.2f} ms "
+          f"p95={np.percentile(lat, 95):.2f} ms "
+          f"p99={np.percentile(lat, 99):.2f} ms "
+          f"(queue wait p99={np.percentile(waits, 99):.2f} ms)")
+    print(f"[gateway] shed_rate={shed_rate:.3f} shedding={gs['shedding']} "
+          f"conflicts={gs['conflicts']} batches={gs['batches']} "
+          f"deadline_flushes={gs['deadline_flushes']} "
+          f"full_flushes={gs['full_flushes']} batch_hist={bhist}")
+    print(f"[gateway] post-warm-up retraces={retraces} "
+          f"(traces={engine.stats['traces']}, hits={engine.stats['hits']})")
+    gw.close()
+    idx.close()
 
 
 def serve_lm(args):
@@ -218,6 +328,23 @@ def main():
                          "arena footprint; answers stay exact via the "
                          "widened certificate + f64 re-rank (default: the "
                          "REPRO_SCREEN_DTYPE env var, f32)")
+    ap.add_argument("--gateway", action="store_true",
+                    help="serve a Poisson arrival stream of independent "
+                         "single-query clients through the dynamic-batching "
+                         "admission gateway (deadline flush + SLO shedding) "
+                         "instead of pre-formed query batches")
+    ap.add_argument("--arrival-rate", type=float, default=500.0,
+                    help="gateway mode: offered load in queries/second "
+                         "(Poisson arrivals)")
+    ap.add_argument("--deadline-ms", type=float, default=5.0,
+                    help="gateway mode: max in-queue wait before a partial "
+                         "batch is flushed (padded to the ladder rung)")
+    ap.add_argument("--slo-p99-ms", type=float, default=50.0,
+                    help="gateway mode: rolling-p99 latency target; past it "
+                         "sheddable exact traffic serves on the approx tier "
+                         "until p99 recovers (hysteresis)")
+    ap.add_argument("--requests", type=int, default=400,
+                    help="gateway mode: total client requests to submit")
     ap.add_argument("--approx", action="store_true",
                     help="deprecated alias for --tier approx")
     ap.add_argument("--no-prewarm", dest="prewarm", action="store_false",
@@ -230,10 +357,12 @@ def main():
     if args.shard == "mesh" and (args.approx or args.tier == "approx"):
         ap.error("--shard mesh serves the exact tier only (the approx "
                  "tier's seek/coalesce I/O model is host-side)")
-    if args.mode == "coconut":
-        serve_coconut(args)
-    else:
+    if args.mode != "coconut":
         serve_lm(args)
+    elif args.gateway:
+        serve_gateway(args)
+    else:
+        serve_coconut(args)
 
 
 if __name__ == "__main__":

@@ -297,3 +297,90 @@ def test_scalar_wrappers_share_executor_answers():
         vals, gids, _ = index.knn_batch(q[None], k=5, raw=raw)
         assert [d for d, _ in res] == [float(v) for v in vals[0]]
         assert [g for _, g in res] == [int(g) for g in gids[0]]
+
+
+# ---------------------------------------------------------------------------
+# Range-path device routing (the BENCH_streaming b64/nb2 collapse guard)
+# ---------------------------------------------------------------------------
+def _range_fixture(n=8192, m=64, seed=17):
+    """A RangeSource shaped like the collapsed bench cell: one device-ready
+    span group (>= MIN_DEVICE_CANDIDATES entries shared by >=
+    MIN_DEVICE_BATCH queries) plus many 1-query groups below the batch
+    floor. Counting closures record every host fetch."""
+    from repro.core.verify_engine import (MIN_DEVICE_BATCH,
+                                          MIN_DEVICE_CANDIDATES, get_engine)
+
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, 64)).astype(np.float32).cumsum(axis=1)
+    xsq = np.einsum("ij,ij->i", X.astype(np.float64), X.astype(np.float64))
+    Q = rng.standard_normal((m, 64)).astype(np.float32).cumsum(axis=1)
+    big = MIN_DEVICE_CANDIDATES
+    spans = np.empty((m, 2), np.int64)
+    nbig = MIN_DEVICE_BATCH + 3
+    spans[:nbig] = (0, big)  # ONE device-ready group
+    for i in range(nbig, m):  # singleton groups: small, distinct spans
+        lo = big + ((i - nbig) * 96) % (n - big - 256)
+        spans[i] = (lo, lo + 192)
+    calls = {"fetch": 0, "rows": 0, "acct": 0, "acct_rows": 0}
+
+    def fetch(pos):
+        calls["fetch"] += 1
+        calls["rows"] += int(pos.size)
+        return X[pos]
+
+    def fetch_account(pos):
+        calls["acct"] += 1
+        calls["acct_rows"] += int(pos.size)
+
+    from repro.core import RangeSource, SourceOps
+
+    view = get_engine().build_view(X)
+    ops = SourceOps(ids=np.arange(n, dtype=np.int64), fetch=fetch,
+                    norms2=lambda pos: xsq[pos],
+                    device_view=lambda: view,
+                    table_rows=lambda pos: pos,
+                    table_ids=lambda rows: rows.astype(np.int64),
+                    fetch_account=fetch_account)
+    src = RangeSource(ops=ops, spans=spans, logical_blocks=1)
+    return X, Q, src, calls
+
+
+def test_range_path_mixed_groups_share_one_host_fetch():
+    """Per-group device routing: when one span group goes to the device,
+    the remaining (small) groups must share ONE union host fetch — the old
+    whole-pass `use_dev` flag stranded every small group on its own
+    arena-mirror gather, collapsing b64/nb2 throughput 7x."""
+    from repro.core import QueryPlan, execute
+
+    X, Q, src, calls = _range_fixture()
+    (vals, gids), _ = execute(QueryPlan(m=Q.shape[0], sources=[src]), Q, k=5,
+                              backend="device")
+    # one shared fetch for every host-tail group, not one per group
+    assert calls["fetch"] == 1, calls
+    # the union fetch covers only host-group rows; the device group's rows
+    # are accounted (not gathered) exactly once
+    m = Q.shape[0]
+    host_rows = {p for i in range(12, m)
+                 for p in range(*src.spans[i])}
+    assert calls["rows"] == len(host_rows), calls
+    assert calls["acct"] == 1 and calls["acct_rows"] > 0, calls
+    # answers equal the pure-host reference
+    X2, Q2, src2, _ = _range_fixture()
+    src2.ops.device_view = None
+    (hv, hg), _ = execute(QueryPlan(m=Q2.shape[0], sources=[src2]), Q2, k=5,
+                          backend="device")
+    np.testing.assert_array_equal(gids, hg)
+    np.testing.assert_allclose(vals, hv, rtol=0, atol=0)
+
+
+def test_range_path_all_host_groups_single_fetch():
+    """No device-ready group at all: the pass keeps the single shared
+    union fetch (nb=1 behavior unchanged)."""
+    from repro.core import QueryPlan, execute
+
+    X, Q, src, calls = _range_fixture(m=8)  # every group under the floor
+    src.spans[:] = src.spans[len(src.spans) - 8:]
+    (vals, gids), _ = execute(QueryPlan(m=Q.shape[0], sources=[src]), Q, k=5,
+                              backend="device")
+    assert calls["fetch"] == 1 and calls["acct"] == 0, calls
+    assert (gids >= 0).all()

@@ -115,3 +115,52 @@ def test_approx_tier_renders_in_describe():
     rec = recommend(Scenario(streaming=True, n_series=10**6, uses_windows=True,
                              target_recall=0.8))
     assert "approx tier" in rec.describe()
+
+
+# ----------------------------------------------- structured tier decisions
+def test_conflict_is_a_structured_flag_not_just_a_string():
+    """The recall/latency conflict must surface as ``Recommendation.conflict``
+    (and ``TierDecision.conflict``) so admission layers can act on it — the
+    WARNING rationale line and the flag must agree."""
+    rec = recommend(Scenario(streaming=False, n_series=10**7,
+                             target_recall=0.95, latency_budget_ms=0.3))
+    warned = any("WARNING" in r for r in rec.rationale)
+    assert rec.conflict == warned
+    clean = recommend(Scenario(streaming=False, n_series=10**7,
+                               target_recall=0.9))
+    assert not clean.conflict
+    assert not any("WARNING" in r for r in clean.rationale)
+
+
+def test_serving_tier_standalone_matches_recommend():
+    from repro.core import serving_tier
+
+    s = Scenario(streaming=True, n_series=10**6, uses_windows=True,
+                 target_recall=0.95, latency_budget_ms=0.3)
+    dec = serving_tier(s)
+    rec = recommend(s)
+    assert (dec.tier, dec.n_blocks, dec.conflict) == \
+        (rec.tier, rec.n_blocks, rec.conflict)
+    assert dec.conflict == any("WARNING" in r for r in dec.rationale)
+
+
+def test_serving_tier_is_deterministic_per_profile():
+    """Mixed-tenant admission caches decisions per request profile: the
+    same Scenario must always produce the identical TierDecision."""
+    from repro.core import serving_tier
+
+    profiles = [
+        Scenario(streaming=True, n_series=10**6, target_recall=1.0),
+        Scenario(streaming=True, n_series=10**6, target_recall=0.9,
+                 latency_budget_ms=0.05),
+        Scenario(streaming=True, n_series=10**6, target_recall=0.8),
+        Scenario(streaming=True, n_series=10**6),
+    ]
+    first = [serving_tier(p) for p in profiles]
+    for _ in range(3):
+        assert [serving_tier(p) for p in profiles] == first
+    # strict recall is never conflicted; tight budgets under a recall
+    # target are — that split is what the gateway sheds on
+    assert first[0].tier == "exact" and not first[0].conflict
+    assert first[1].tier == "approx" and first[1].conflict
+    assert first[3] == serving_tier(profiles[3])
