@@ -7,6 +7,12 @@ import numpy as np
 # artifacts next to the human CSV on stdout
 ROWS: list[dict] = []
 
+# nested (non-row) artifact payloads: a benchmark module deposits JSON-able
+# blobs here (e.g. the serving sweep's adaptation traces) and the driver
+# embeds them into BENCH_<module>.json top-level keys, clearing between
+# modules. Keys must not collide with the driver's own payload fields.
+EXTRAS: dict = {}
+
 
 def timeit(fn, *, repeat=3, number=1):
     """Median wall time per call in microseconds."""

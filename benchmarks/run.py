@@ -35,7 +35,8 @@ def _engine_summary() -> dict:
     return out
 
 
-def _write_artifact(name: str, rows: list, out_dir: str, smoke: bool) -> None:
+def _write_artifact(name: str, rows: list, extras: dict, out_dir: str,
+                    smoke: bool) -> None:
     # smoke artifacts get their own (gitignored) name so CI runs never
     # overwrite the committed perf trajectory
     suffix = ".smoke.json" if smoke else ".json"
@@ -47,6 +48,11 @@ def _write_artifact(name: str, rows: list, out_dir: str, smoke: bool) -> None:
         "verify_engine": _engine_summary(),
         "rows": rows,
     }
+    for key, val in extras.items():
+        if key in payload:
+            raise AssertionError(f"EXTRAS key {key!r} collides with the "
+                                 "artifact's own payload fields")
+        payload[key] = val
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
         f.write("\n")
@@ -78,6 +84,7 @@ def main(argv=None) -> int:
     for mod in mods:
         name = mod.__name__.split(".")[-1]
         common.ROWS.clear()
+        common.EXTRAS.clear()
         try:
             if args.smoke:
                 buf = io.StringIO()
@@ -93,7 +100,8 @@ def main(argv=None) -> int:
             else:
                 mod.main()
             if name in ARTIFACT_MODS:
-                _write_artifact(name, list(common.ROWS), args.out_dir, args.smoke)
+                _write_artifact(name, list(common.ROWS), dict(common.EXTRAS),
+                                args.out_dir, args.smoke)
         except Exception:  # noqa: BLE001 — keep the harness running
             failures += 1
             print(f"{name}/ERROR,0.0,")

@@ -18,11 +18,11 @@ import time
 
 import numpy as np
 
-from repro.core import (Gateway, GatewayConfig, StreamConfig, StreamingIndex,
-                        SummarizationConfig)
+from repro.core import (AutoTunerConfig, Gateway, GatewayConfig, Knobs,
+                        StreamConfig, StreamingIndex, SummarizationConfig)
 from repro.core.verify_engine import get_engine
 
-from .common import row
+from .common import EXTRAS, row
 
 LEN = 128
 CFG = SummarizationConfig(series_len=LEN, n_segments=16, card_bits=8)
@@ -128,3 +128,223 @@ def main(smoke: bool = False):
             f"deadline_flushes={gs['deadline_flushes']};"
             f"full_flushes={gs['full_flushes']};"
             f"batch_hist={bhist}")
+    _adaptation_sweep(idx, smoke, n_batch)
+
+
+# ---------------------------------------------------------------- autotune
+# Scenario-diversity sweep for the online autotuner: each scenario drives
+# the SAME gateway serving path once with the tuner adapting and once per
+# fixed knob setting (AutoTunerConfig(forced=...) pins every decision, so
+# fixed arms share the identical batch-formation and recall-probe
+# machinery). Convergence claim: the adapted run's p99 lands within 10% of
+# the best fixed arm that meets the recall target, at equal-or-better
+# measured recall, and the full decision/observation trace goes into
+# BENCH_serving.json under `adaptation_traces`.
+ADAPT_TARGET = 0.9
+FIXED_ARMS = (Knobs("exact"), Knobs("approx", 1), Knobs("approx", 2),
+              Knobs("approx", 8))
+SMOKE_FIXED_ARMS = (Knobs("exact"), Knobs("approx", 2))
+
+
+def _adapt_drive(gw, Q, qps, kwfn, warmup, rng, on_submit=None):
+    """Submit ``len(Q)`` requests (kwargs from ``kwfn(i)``) at Poisson
+    ``qps``; returns measured responses + the tuner-trace index where the
+    measured phase starts."""
+    tickets, mark = [], 0
+    for i in range(Q.shape[0]):
+        if on_submit is not None:
+            on_submit(i)
+        tickets.append(gw.submit(Q[i], **kwfn(i)))
+        if i + 1 == warmup:
+            for t in tickets:
+                t.result(timeout=300)  # drain: warm-up compiles settle
+            gw.reset_slo_window()
+            mark = len(gw.tuner.trace())
+        time.sleep(rng.exponential(1.0 / qps))
+    resps = [t.result(timeout=300) for t in tickets]
+    return resps[warmup:], mark
+
+
+def _run_adapt(idx, caps, max_batch, Q, kwfn_for, warmup, seed, tuner_cfg,
+               qps, burst=None):
+    """One gateway run (adapted or fixed-arm) -> measured metrics dict."""
+    # a wide deadline keeps batches large at moderate offered load: the
+    # per-batch engine dispatch and the recall probes (one exact shadow
+    # query per probed group) amortize over ~qps*deadline requests, and
+    # steady-state p99 (~deadline + service) stays under the shed SLO —
+    # arms are compared on service cost, not on probe-induced queueing
+    # SLO shedding stays disarmed (high gate): the overload sweep above
+    # covers shed behavior; here a shed would reroute exact traffic and
+    # confound the adapted-vs-fixed-arm comparison with queueing noise
+    # deadline 40ms: partial batches form at ~1/deadline regardless of
+    # offered load, and each formed batch pays a ~15ms engine dispatch —
+    # a wide deadline keeps that batch rate (and so utilization) low
+    # enough that p99 measures arm service cost, not queue growth
+    gw = Gateway(idx, GatewayConfig(
+        deadline_ms=40.0, slo_p99_ms=250.0, max_batch=max_batch, k=K,
+        autotune=True, autotune_cfg=tuner_cfg))
+    gw.prewarm(caps)
+    rng = np.random.default_rng(seed)
+    on_submit = None
+    if burst is not None:
+        burst_at, burst_fn = burst
+
+        def on_submit(i):
+            if i in burst_at:
+                burst_fn()
+    measured, mark = _adapt_drive(gw, Q, qps, kwfn_for(seed), warmup,
+                                  rng, on_submit)
+    trace = gw.tuner.trace()
+    counters = gw.tuner.counters()
+    gw.close()
+    lat = np.array([r.latency_ms for r in measured])
+    # client-facing recall only: served observations (what clients got,
+    # probes measuring the served arm, shed overrides) — exploration
+    # shadows measure arms no client was served and must not count
+    obs = [e["observed_recall"] for e in trace[mark:]
+           if e["kind"] == "observe" and e["observed_recall"] is not None
+           and e.get("served", True)]
+    return {
+        "p50_ms": float(np.percentile(lat, 50)),
+        "p99_ms": float(np.percentile(lat, 99)),
+        "recall": float(np.mean(obs)) if obs else 1.0,
+        "trace": trace,
+        "counters": counters,
+    }
+
+
+def _adaptation_sweep(idx, smoke: bool, n_batch: int):
+    engine = get_engine()  # noqa: F841 — keeps the engine/caches alive
+    max_batch = 16 if smoke else 32
+    n_req = 80 if smoke else 400
+    # offered load BELOW the gateway's saturation point: the convergence
+    # comparison is about tier/knob choice, not queueing collapse (the
+    # saturation sweep above covers overload; past saturation every run
+    # measures queue growth plus probe/shadow overhead, not arm quality)
+    qps = 300.0 if smoke else 250.0
+    # the measured phase is the CONVERGED half: workload keys fragment by
+    # batch rung, so the bandit needs the first half of the run to re-fit
+    # every profile's models — the trace still records the whole run, and
+    # the convergence row compares post-adaptation behavior
+    warmup = n_req // 2
+    burst_bsz = 100 if smoke else 500
+    arms = SMOKE_FIXED_ARMS if smoke else FIXED_ARMS
+    d = int(idx.cfg.summarization.series_len)
+    base_rng = np.random.default_rng(777)
+    Qwalk = np.cumsum(base_rng.normal(size=(n_req, d)), axis=1,
+                      dtype=np.float64).astype(np.float32)
+    # skewed keys: most queries are small perturbations of STORED series —
+    # the approximate tier's measured recall runs far above its static
+    # prior curve, which is exactly the model mismatch the tuner must
+    # discover (the static tree would keep over-reading blocks)
+    stored = np.cumsum(np.random.default_rng(100).normal(
+        size=(n_req, d)), axis=1, dtype=np.float64).astype(np.float32)
+    Qskew = (stored + 0.01 * base_rng.normal(size=stored.shape)
+             ).astype(np.float32)
+    def ingest_burst():
+        b = ingest_burst.n
+        ingest_burst.n += 1
+        x = np.cumsum(np.random.default_rng(5_000 + b).normal(
+            size=(burst_bsz, d)), axis=1,
+            dtype=np.float64).astype(np.float32)
+        idx.ingest(x, np.full(burst_bsz, 1_000 + b, np.int64))
+    ingest_burst.n = 0
+
+    def kw_plain(target):
+        def mk(seed):
+            return lambda i: {"target_recall": target}
+        return mk
+
+    def kw_shifting(w1, w2):
+        def mk(seed):
+            return lambda i: {"target_recall": ADAPT_TARGET,
+                              "window": (w1 if i < n_req // 2 else w2)}
+        return mk
+
+    def kw_mixed(windows):
+        def mk(seed):
+            rng = np.random.default_rng(seed + 13)
+
+            def kw(i):
+                r = rng.random()
+                out = {}
+                if r < 0.5:
+                    out["target_recall"] = ADAPT_TARGET
+                elif r < 0.65:
+                    out.update(target_recall=ADAPT_TARGET,
+                               latency_budget_ms=0.05)  # conflicting tenant
+                if rng.random() < 0.4:
+                    out["window"] = windows
+                return out
+            return kw
+        return mk
+
+    t_lo, t_hi = 0, n_batch - 1  # ingest timestamps span 0..n_batch-1
+    windows = (max(0, t_hi - 6), t_hi)
+    scenarios = [
+        ("skewed_keys", Qskew, kw_plain(ADAPT_TARGET), None, ADAPT_TARGET),
+    ]
+    if not smoke:
+        # relaxed tenant: a target low enough that shallow approx arms are
+        # genuinely feasible once measured — the converged arm should be
+        # an approx depth, not exact (arm diversity across scenarios)
+        scenarios += [
+            ("relaxed_recall", Qskew, kw_plain(0.45), None, 0.45),
+            ("shifting_windows", Qwalk,
+             kw_shifting((max(0, t_hi - 3), t_hi), (t_lo, t_hi)), None,
+             ADAPT_TARGET),
+            ("mixed_tenants", Qwalk, kw_mixed(windows), None, ADAPT_TARGET),
+        ]
+    # bursty LAST: its ingest permanently grows the shared store, so any
+    # scenario after it would run against a slower exact tier
+    scenarios += [
+        ("bursty_ingest", Qwalk, kw_plain(ADAPT_TARGET),
+         ({n_req // 3, (2 * n_req) // 3}, ingest_burst), ADAPT_TARGET),
+    ]
+    traces: dict = {}
+    for name, Q, kwfn_for, burst, target in scenarios:
+        # caps must cover every store size the bursts will grow into over
+        # ALL of this scenario's runs (fixed arms + adapted, 2 bursts
+        # each) — an uncovered arena rung means mid-run compiles
+        n_runs = len(arms) + 1
+        caps = sorted({int(idx.raw.n) + j * burst_bsz
+                       for j in range(2 * n_runs + 1)})
+        fixed = {}
+        for arm in arms:  # fixed arms first, adapted last: the shared
+            # store only ever grows, so the adapted run faces the
+            # largest (slowest-exact) index — conservative for the claim
+            fixed[arm.label()] = _run_adapt(
+                idx, caps, max_batch, Q, kwfn_for, warmup, seed=901,
+                tuner_cfg=AutoTunerConfig(forced=arm), qps=qps,
+                burst=burst)
+        adapted = _run_adapt(
+            idx, caps, max_batch, Q, kwfn_for, warmup, seed=901,
+            tuner_cfg=AutoTunerConfig(seed=0), qps=qps, burst=burst)
+        ok = {a: m for a, m in fixed.items() if m["recall"] >= target}
+        if not ok:
+            # no fixed arm reaches the target: the fair baseline is the
+            # cheapest arm in the max-recall band (the tuner's conflict
+            # contract serves max recall), not the cheapest arm outright
+            top = max(m["recall"] for m in fixed.values())
+            ok = {a: m for a, m in fixed.items()
+                  if m["recall"] >= top - 0.02}
+        best = min(ok, key=lambda a: ok[a]["p99_ms"])
+        ratio = adapted["p99_ms"] / max(fixed[best]["p99_ms"], 1e-9)
+        traces[name] = {
+            "adapted": adapted["trace"][-800:],
+            "counters": adapted["counters"],
+            "fixed": {a: {"p99_ms": round(m["p99_ms"], 3),
+                          "recall": round(m["recall"], 4)}
+                      for a, m in fixed.items()},
+        }
+        row(f"serving/adapt_{name}", adapted["p50_ms"] * 1e3,
+            f"adapted_p99_ms={adapted['p99_ms']:.2f};"
+            f"adapted_recall={adapted['recall']:.4f};"
+            f"best_fixed={best};"
+            f"best_fixed_p99_ms={fixed[best]['p99_ms']:.2f};"
+            f"best_fixed_recall={fixed[best]['recall']:.4f};"
+            f"p99_vs_best={ratio:.3f};"
+            f"explores={adapted['counters']['explores']};"
+            f"probes={adapted['counters']['probes']};"
+            f"epoch_refits={adapted['counters']['epoch_refits']}")
+    EXTRAS["adaptation_traces"] = traces

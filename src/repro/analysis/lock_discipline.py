@@ -27,6 +27,7 @@ from .base import Checker, Finding, Module, Project, attr_chain, register
 GUARDED_CLASSES = {
     "RunRegistry", "IngestPipeline", "VerifyEngine", "DiskModel", "RawStore",
     "FileStore", "WriteAheadLog", "StorageEngine", "ReadaheadPool", "Gateway",
+    "AutoTuner",
 }
 
 #: lock attributes whose ``with`` blocks count as holding the lock

@@ -32,13 +32,19 @@ import ast
 from typing import Dict, Iterable, Optional
 
 from .base import (
-    Checker, Finding, Module, Project, annotation_names, attr_chain,
-    call_name, iter_functions, register,
+    Checker, Finding, Module, Project, attr_chain, call_name,
+    iter_functions, register,
 )
 
-#: type names whose instances must never mutate after construction
+#: type names whose instances must never mutate after construction.
+#: PR 10 grows the set with the decision-record family: the autotuner's
+#: feedback loop and the BENCH adaptation traces assume published
+#: decisions never change after the fact.
 def _is_protected_type(name: str) -> bool:
-    return (name in {"RunSet", "QueryPlan", "SourceOps"}
+    return (name in {"RunSet", "QueryPlan", "SourceOps",
+                     "Recommendation", "TierDecision", "RationaleEntry",
+                     "DecisionRecord", "Knobs", "WorkloadKey",
+                     "GatewayStats"}
             or name.endswith("Source"))
 
 
@@ -58,7 +64,9 @@ MUTATOR_METHODS = {
 CONSTRUCTORS = {"__init__", "__post_init__", "__new__"}
 
 #: classes the catalog requires to be frozen dataclasses
-MUST_BE_FROZEN = {"RunSet"}
+MUST_BE_FROZEN = {"RunSet", "Recommendation", "TierDecision",
+                  "RationaleEntry", "DecisionRecord", "Knobs",
+                  "WorkloadKey", "GatewayStats"}
 
 
 def _dataclass_frozen(cls: ast.ClassDef) -> Optional[bool]:
@@ -93,6 +101,30 @@ class _FnScope:
             # reassignment to an untyped value clears the binding
             self.types.pop(name, None)
             self.contents.pop(name, None)
+
+
+def _outer_annotation(node: Optional[ast.AST]) -> Optional[str]:
+    """The *outermost* type name of an annotation, unwrapping string
+    annotations and ``Optional[X]`` / ``Final[X]``. Containers OF a
+    protected type (``List[RationaleEntry]``, ``Dict[Knobs, _Arm]``) stay
+    untyped on purpose: the container is mutable even when its elements
+    are frozen — only a value whose own type is protected is guarded."""
+    if node is None:
+        return None
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        try:
+            node = ast.parse(node.value, mode="eval").body
+        except SyntaxError:
+            return None
+    if isinstance(node, ast.Subscript):
+        head = attr_chain(node.value)
+        if head and head.split(".")[-1] in {"Optional", "Final"}:
+            return _outer_annotation(node.slice)
+        return None
+    if isinstance(node, (ast.Name, ast.Attribute)):
+        chain = attr_chain(node)
+        return chain.split(".")[-1] if chain else None
+    return None
 
 
 def _infer_value_type(value: ast.AST) -> Optional[str]:
@@ -146,9 +178,9 @@ class SnapshotImmutabilityChecker(Checker):
         # non-constructor methods is itself protected
         args = fn.args
         for a in (args.posonlyargs + args.args + args.kwonlyargs):
-            for name in annotation_names(a.annotation):
-                if _is_protected_type(name):
-                    scope.types[a.arg] = name
+            name = _outer_annotation(a.annotation)
+            if name is not None and _is_protected_type(name):
+                scope.types[a.arg] = name
         if class_name is not None and _is_protected_type(class_name) \
                 and not in_ctor:
             scope.types["self"] = class_name
@@ -182,8 +214,9 @@ class SnapshotImmutabilityChecker(Checker):
         # --- learn types from assignments / for-loops first -------------
         if isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target,
                                                           ast.Name):
-            names = annotation_names(stmt.annotation)
-            prot = next((n for n in names if _is_protected_type(n)), None)
+            name = _outer_annotation(stmt.annotation)
+            prot = name if (name is not None
+                            and _is_protected_type(name)) else None
             scope.learn(stmt.target.id, prot)
         elif isinstance(stmt, ast.Assign):
             t = _infer_value_type(stmt.value)

@@ -27,9 +27,14 @@ from .storage import (
 from .streaming import StreamConfig, StreamingIndex
 from .adsplus import ADSConfig, ADSIndex
 from .recommender import (
-    Scenario, Recommendation, TierDecision, recommend, serving_tier,
+    RationaleEntry, Scenario, Recommendation, TierDecision, recommend,
+    serving_tier,
 )
-from .gateway import Gateway, GatewayConfig, Response, Ticket
+from .autotune import (
+    AutoTuner, AutoTunerConfig, DecisionRecord, Knobs, WorkloadKey,
+    knob_grid, workload_key,
+)
+from .gateway import Gateway, GatewayConfig, GatewayStats, Response, Ticket
 
 __all__ = [
     "SummarizationConfig", "breakpoints", "paa", "sax", "sax_from_paa",
@@ -47,8 +52,10 @@ __all__ = [
     "FileStore", "SimulatedCrash", "StorageEngine", "WriteAheadLog",
     "resolve_backend",
     "ADSConfig", "ADSIndex", "Scenario", "Recommendation", "TierDecision",
-    "recommend", "serving_tier",
-    "Gateway", "GatewayConfig", "Response", "Ticket",
+    "RationaleEntry", "recommend", "serving_tier",
+    "AutoTuner", "AutoTunerConfig", "DecisionRecord", "Knobs",
+    "WorkloadKey", "knob_grid", "workload_key",
+    "Gateway", "GatewayConfig", "GatewayStats", "Response", "Ticket",
 ]
 
 # Runtime sanitizer (lock-order assertions + snapshot seals): opt-in via

@@ -19,6 +19,11 @@ single queries. This module is the admission-control layer between them
   ``latency_budget_ms`` per request): one formed batch fans out into
   per-(tier, n_blocks, k, window) sub-batches, all answered against ONE
   pinned epoch snapshot;
+* with ``GatewayConfig(autotune=True)`` tier selection consults the
+  online :class:`~repro.core.autotune.AutoTuner` instead of the frozen
+  rule node: each sub-batch's measured service latency (and, on probed
+  servings, shadow-measured recall@k vs exact) feeds the per-workload
+  fitted models back after every formed batch;
 * **backpressure sheds to the approximate tier** — not into an unbounded
   queue: the admission queue is bounded (``max_queue``; ``submit``
   blocks), and when the measured rolling p99 drifts past ``slo_p99_ms``
@@ -42,6 +47,8 @@ from typing import Optional
 
 import numpy as np
 
+from .autotune import AutoTuner, AutoTunerConfig, Knobs, workload_key
+from .execute import recall_at_k
 from .recommender import Scenario, TierDecision, serving_tier
 from .verify_engine import _CHUNK_M, _bucket_batch, get_engine
 
@@ -57,6 +64,37 @@ class GatewayConfig:
     min_shed_samples: int = 32  # completions before shedding may engage
     shed_exit_frac: float = 0.7  # recover when p99 < frac * slo (hysteresis)
     shed_n_blocks: int = 2  # approx recall knob for shed serves
+    autotune: bool = False  # tier selection via the online AutoTuner
+    autotune_cfg: Optional[AutoTunerConfig] = None  # tuner knobs
+
+
+@dataclasses.dataclass(frozen=True)
+class GatewayStats:
+    """Typed point-in-time gateway snapshot.
+
+    The counter vocabulary lines up with ``VerifyEngine.stats`` where the
+    concepts overlap (histograms as value->count dicts, byte/event
+    counters as plain ints) so BENCH emitters and the autotuner consume
+    one documented schema; ``snapshot_stats()`` keeps returning the same
+    keys as a dict view for existing callers."""
+    submitted: int  # submit() admissions
+    served: int  # resolved responses
+    shed_served: int  # answers downgraded to approx (or conflicted)
+    conflicts: int  # recommender recall/latency conflicts seen
+    batches: int  # formed batches dispatched
+    deadline_flushes: int  # batches flushed below the top rung
+    full_flushes: int  # batches formed at the top rung
+    shed_transitions: int  # enter/exit events of the shed state
+    batch_hist: dict  # formed (real) batch size -> count
+    queue_depth: int  # requests waiting at snapshot time
+    shedding: bool  # shed state at snapshot time
+    p50_ms: float  # rolling window median latency
+    p99_ms: float  # rolling window tail latency (the SLO gate input)
+    autotune: bool  # online tuner active
+    tuner_decisions: int  # AutoTuner.decide() calls
+    tuner_explores: int  # decisions taken by the exploration branch
+    tuner_observations: int  # measured outcomes folded into the models
+    tuner_probes: int  # shadow exact recall measurements paid
 
 
 @dataclasses.dataclass
@@ -148,6 +186,9 @@ class Gateway:
         self._shedding = False
         self._closed = False
         self._tier_cache: dict = {}
+        self.tuner: Optional[AutoTuner] = None
+        if self.cfg.autotune:
+            self.tuner = AutoTuner(self.cfg.autotune_cfg)
         self.stats = {
             "submitted": 0,
             "served": 0,
@@ -199,17 +240,36 @@ class Gateway:
             n += eng.prewarm(d, rung, self.cfg.k, list(caps), dtype=dtype)
         return n
 
-    def snapshot_stats(self) -> dict:
-        """Point-in-time copy of the gateway counters + rolling percentiles."""
+    def snapshot(self) -> GatewayStats:
+        """Typed point-in-time snapshot of the gateway counters, rolling
+        percentiles, and (when autotuning) the tuner's loop counters."""
+        # gather tuner counters BEFORE taking self._cond: the tuner has
+        # its own lock and must never nest inside the gateway's
+        tc = self.tuner.counters() if self.tuner is not None else {}
         with self._cond:
-            out = dict(self.stats)
-            out["batch_hist"] = dict(self.stats["batch_hist"])
+            st = self.stats
             lat = np.array(self._lat_ms, np.float64)
-            out["queue_depth"] = len(self._queue)
-            out["shedding"] = self._shedding
-            out["p50_ms"] = float(np.percentile(lat, 50)) if lat.size else 0.0
-            out["p99_ms"] = float(np.percentile(lat, 99)) if lat.size else 0.0
-            return out
+            return GatewayStats(
+                submitted=st["submitted"], served=st["served"],
+                shed_served=st["shed_served"], conflicts=st["conflicts"],
+                batches=st["batches"],
+                deadline_flushes=st["deadline_flushes"],
+                full_flushes=st["full_flushes"],
+                shed_transitions=st["shed_transitions"],
+                batch_hist=dict(st["batch_hist"]),
+                queue_depth=len(self._queue), shedding=self._shedding,
+                p50_ms=float(np.percentile(lat, 50)) if lat.size else 0.0,
+                p99_ms=float(np.percentile(lat, 99)) if lat.size else 0.0,
+                autotune=self.tuner is not None,
+                tuner_decisions=tc.get("decisions", 0),
+                tuner_explores=tc.get("explores", 0),
+                tuner_observations=tc.get("observations", 0),
+                tuner_probes=tc.get("probes", 0))
+
+    def snapshot_stats(self) -> dict:
+        """Dict view of :meth:`snapshot` (back-compat for existing
+        callers; same keys, ``batch_hist`` keeps its int keys)."""
+        return dataclasses.asdict(self.snapshot())
 
     def reset_slo_window(self) -> None:
         """Drop the rolling latency window and leave the shed state.
@@ -278,22 +338,39 @@ class Gateway:
             self._cond.notify_all()  # free space for blocked submitters
         return batch, shed_now
 
-    def _route(self, req: _Request, shed_now: bool):
-        """(tier, n_blocks, shed, conflict) for one request. Strictly-exact
-        requests (target_recall >= 1.0) are never shed; a recommender
-        conflict marks the answer shed even when not under SLO pressure —
-        the latency cap already cost the client its recall target."""
+    def _route(self, req: _Request, shed_now: bool, *, epoch: int,
+               n_series: int):
+        """(tier, n_blocks, shed, conflict, tune) for one request —
+        ``tune`` is the ``(WorkloadKey, Knobs)`` pair to feed back to the
+        tuner after serving (None on the static path). Strictly-exact
+        requests (target_recall >= 1.0) are never shed; a conflict (the
+        latency cap makes the recall target unreachable) marks the answer
+        shed even when not under SLO pressure — it already cost the
+        client its recall target."""
         tr, lb = req.target_recall, req.latency_budget_ms
         strict = tr is not None and tr >= 1.0
+        tune = None
         if tr is None and lb is None:
             tier, nb, conflict = "exact", 0, False
+        elif self.tuner is not None:
+            wkey = workload_key(
+                target_recall=tr, latency_budget_ms=lb, k=req.k,
+                window=req.window, batch_rung=self.cfg.max_batch)
+            rec = self.tuner.decide(wkey, epoch=epoch, n_series=n_series)
+            tier, nb, conflict = rec.knobs.tier, rec.knobs.n_blocks, \
+                rec.conflict
+            tune = (wkey, rec.knobs, rec.shadow)
         else:
             dec = self._tier_decision(tr, lb)
             tier, nb, conflict = dec.tier, dec.n_blocks, dec.conflict
         shed = conflict
         if shed_now and tier == "exact" and not strict:
             tier, nb, shed = "approx", self.cfg.shed_n_blocks, True
-        return tier, nb, shed, conflict
+            if tune is not None:
+                # observations must credit the arm actually served; the
+                # shed serve preempts any exploration shadow
+                tune = (tune[0], Knobs("approx", nb), None)
+        return tier, nb, shed, conflict, tune
 
     def _tier_decision(self, tr, lb) -> TierDecision:
         """Cached recommender serving-tier call. The live entry count is
@@ -314,20 +391,43 @@ class Gateway:
                 self._tier_cache[key] = dec
         return dec
 
+    def _query_group(self, tier: str, nb: int, Qg, kk: int, window, snap):
+        """One engine pass for a padded sub-batch -> (vals, gids)."""
+        if tier == "approx":
+            if window is None:
+                vals, gids, _ = self._idx.knn_approx_batch(
+                    Qg, k=kk, n_blocks=max(nb, 1), snapshot=snap)
+            else:
+                vals, gids, _ = self._idx.window_knn_approx_batch(
+                    Qg, window[0], window[1], k=kk, n_blocks=max(nb, 1),
+                    snapshot=snap)
+        elif window is None:
+            vals, gids, _ = self._idx.knn_batch(Qg, k=kk, snapshot=snap)
+        else:
+            vals, gids, _ = self._idx.window_knn_batch(
+                Qg, window[0], window[1], k=kk, snapshot=snap)
+        return vals, gids
+
     def _serve_batch(self, batch, shed_now: bool) -> None:
         t_dispatch = time.perf_counter()
-        groups: dict = {}
-        routed = []
-        for i, req in enumerate(batch):
-            tier, nb, shed, conflict = self._route(req, shed_now)
-            routed.append((tier, nb, shed, conflict))
-            groups.setdefault((tier, nb, req.k, req.window), []).append(i)
-        answers: dict = {}
         # ONE pinned epoch for the whole formed batch: every sub-batch
         # answers against the same immutable snapshot even while background
-        # ingest publishes new epochs mid-serve
+        # ingest publishes new epochs mid-serve. Routing happens INSIDE the
+        # pin so tuner decisions are stamped with the epoch they serve.
         with self._idx.pin() as snap:
             epoch = int(snap.epoch)
+            n_series = max(1024, int(self._idx.raw.n))
+            groups: dict = {}
+            routed = []
+            for i, req in enumerate(batch):
+                tier, nb, shed, conflict, tune = self._route(
+                    req, shed_now, epoch=epoch, n_series=n_series)
+                routed.append((tier, nb, shed, conflict, tune))
+                groups.setdefault((tier, nb, req.k, req.window),
+                                  []).append(i)
+            n_shed = n_conflict = 0
+            lat_done = []
+            served = []  # (key, idxs, Qg, gids, dt_ms) for shadow work
             # deterministic sub-batch order: mixed-tenant batches always
             # split and serve the same way for the same inputs
             for key in sorted(groups, key=lambda t: (t[0], t[1], t[2],
@@ -342,43 +442,94 @@ class Gateway:
                     # are sliced off below — padding never leaks
                     Qg = np.concatenate(
                         [Qg, np.repeat(Qg[:1], rung - len(idxs), axis=0)])
-                if tier == "approx":
-                    if window is None:
-                        vals, gids, _ = self._idx.knn_approx_batch(
-                            Qg, k=kk, n_blocks=max(nb, 1), snapshot=snap)
-                    else:
-                        vals, gids, _ = self._idx.window_knn_approx_batch(
-                            Qg, window[0], window[1], k=kk,
-                            n_blocks=max(nb, 1), snapshot=snap)
-                else:
-                    if window is None:
-                        vals, gids, _ = self._idx.knn_batch(Qg, k=kk,
-                                                            snapshot=snap)
-                    else:
-                        vals, gids, _ = self._idx.window_knn_batch(
-                            Qg, window[0], window[1], k=kk, snapshot=snap)
+                t0 = time.perf_counter()
+                vals, gids = self._query_group(tier, nb, Qg, kk, window,
+                                               snap)
+                t_grp = time.perf_counter()
+                dt_ms = (t_grp - t0) * 1e3
+                # resolve this sub-batch's tickets NOW: a slower later
+                # group — or the shadow probe/exploration work below —
+                # never inflates these clients' latency
                 for row_, i in enumerate(idxs):
-                    answers[i] = (vals[row_], gids[row_], rung)
-        t_done = time.perf_counter()
-        n_shed = n_conflict = 0
-        for i, req in enumerate(batch):
-            tier, nb, shed, conflict = routed[i]
-            vals, gids, rung = answers[i]
-            n_shed += int(shed)
-            n_conflict += int(conflict)
-            req.ticket._resolve(Response(
-                vals=vals, ids=gids, tier_served=tier, n_blocks=nb,
-                shed=shed, conflict=conflict,
-                queue_wait_ms=(t_dispatch - req.t_arrive) * 1e3,
-                latency_ms=(t_done - req.t_arrive) * 1e3,
-                batch_size=len(batch), padded_to=rung, epoch=epoch))
+                    req = batch[i]
+                    shed, conflict = routed[i][2], routed[i][3]
+                    n_shed += int(shed)
+                    n_conflict += int(conflict)
+                    lat = (t_grp - req.t_arrive) * 1e3
+                    lat_done.append(lat)
+                    req.ticket._resolve(Response(
+                        vals=vals[row_], ids=gids[row_], tier_served=tier,
+                        n_blocks=nb, shed=shed, conflict=conflict,
+                        queue_wait_ms=(t_dispatch - req.t_arrive) * 1e3,
+                        latency_ms=lat, batch_size=len(batch),
+                        padded_to=rung, epoch=epoch))
+                served.append((key, idxs, Qg, gids, dt_ms))
+            feedback = self._shadow_work(served, routed, batch, snap) \
+                if self.tuner is not None else []
+        # feed outcomes back OUTSIDE the pin (and outside self._cond): the
+        # tuner has its own lock
+        for wkey, knobs, lat_ms, recall, was_served in feedback:
+            self.tuner.observe(wkey, knobs, lat_ms=lat_ms, epoch=epoch,
+                               recall=recall, n_series=n_series,
+                               served=was_served)
         with self._cond:
             self.stats["served"] += len(batch)
             self.stats["shed_served"] += n_shed
             self.stats["conflicts"] += n_conflict
-            for req in batch:
-                self._lat_ms.append((t_done - req.t_arrive) * 1e3)
+            self._lat_ms.extend(lat_done)
             self._update_shed_locked()
+
+    def _shadow_work(self, served, routed, batch, snap):
+        """Post-resolution tuner measurements for one formed batch ->
+        ``(wkey, knobs, lat_ms, recall, served)`` observations —
+        ``served`` is False for exploration shadows (arms the client was
+        not served), so trace consumers can score client-facing quality.
+
+        Runs AFTER every client ticket is resolved, still inside the pin:
+        recall probes (shadow exact on probed approx sub-batches) and
+        exploration shadows (the bandit's explored arm re-served on the
+        same padded sub-batch, timed, never returned to a client). All
+        shadow I/O runs unaccounted so the cost model only ever charges
+        work a client's answer needed. Padding rows are excluded from
+        every recall average."""
+        feedback = []
+        for key, idxs, Qg, gids, dt_ms in served:
+            tier, nb, kk, window = key
+            tuned = [routed[i][4] for i in idxs if routed[i][4] is not None]
+            if not tuned:
+                continue
+            n_real = len(idxs)
+            exact_gids = gids if tier == "exact" else None
+            recall = 1.0 if tier == "exact" else None
+            if tier == "approx" and self.tuner.should_probe(tuned[0][0],
+                                                            tuned[0][1]):
+                with self._idx.raw.disk.unaccounted():
+                    _, exact_gids = self._query_group("exact", 0, Qg, kk,
+                                                      window, snap)
+                recall = float(recall_at_k(gids[:n_real],
+                                           exact_gids[:n_real]))
+            for wkey, knobs, _shadow in tuned:
+                feedback.append((wkey, knobs, dt_ms, recall, True))
+            # exploration shadows: measure each explored arm on the same
+            # padded sub-batch (prewarmed shapes keep it compile-free);
+            # recall is scored when an exact reference is already in hand
+            for wkey, _knobs, shadow in tuned:
+                if shadow is None:
+                    continue
+                t0 = time.perf_counter()
+                with self._idx.raw.disk.unaccounted():
+                    _, s_gids = self._query_group(
+                        shadow.tier, shadow.n_blocks, Qg, kk, window, snap)
+                s_dt_ms = (time.perf_counter() - t0) * 1e3
+                if shadow.tier == "exact":
+                    s_recall = 1.0
+                elif exact_gids is not None:
+                    s_recall = float(recall_at_k(s_gids[:n_real],
+                                                 exact_gids[:n_real]))
+                else:
+                    s_recall = None
+                feedback.append((wkey, shadow, s_dt_ms, s_recall, False))
+        return feedback
 
     def _update_shed_locked(self) -> None:
         """Recompute the shed state from the rolling p99 (caller holds the

@@ -190,7 +190,8 @@ def serve_gateway(args):
     idx.drain(timeout=300)
     gw = Gateway(idx, GatewayConfig(
         deadline_ms=args.deadline_ms, slo_p99_ms=args.slo_p99_ms,
-        max_batch=max(8, args.query_batch), k=args.k))
+        max_batch=max(8, args.query_batch), k=args.k,
+        autotune=getattr(args, "autotune", False)))
     engine = get_engine()
     if args.prewarm:
         sizes = sorted({args.batch_size * (b + 1) for b in range(args.batches)})
@@ -232,6 +233,13 @@ def serve_gateway(args):
                 t.result(timeout=120)
             gw.reset_slo_window()  # compile latencies must not trip the gate
             traces_after_warmup = engine.stats["traces"]
+        if gw.tuner is not None and (i + 1) % 64 == 0:
+            st = gw.snapshot()
+            print(f"[autotune] req {i+1}: decisions={st.tuner_decisions} "
+                  f"explores={st.tuner_explores} "
+                  f"observations={st.tuner_observations} "
+                  f"probes={st.tuner_probes} batches={st.batches} "
+                  f"p99={st.p99_ms:.2f} ms", flush=True)
         time.sleep(rng.exponential(1.0 / max(args.arrival_rate, 1e-6)))
     resps = [t.result(timeout=120) for t in tickets]
     stop.set()
@@ -258,6 +266,19 @@ def serve_gateway(args):
           f"full_flushes={gs['full_flushes']} batch_hist={bhist}")
     print(f"[gateway] post-warm-up retraces={retraces} "
           f"(traces={engine.stats['traces']}, hits={engine.stats['hits']})")
+    if gw.tuner is not None:
+        snap = gw.tuner.snapshot()
+        for label, arms in snap["profiles"].items():
+            fitted = " ".join(
+                f"{arm}:p99={est['p99_ms']:.2f}ms,rec={est['recall']:.3f}"
+                for arm, est in sorted(arms.items())
+                if not arm.startswith("_"))
+            print(f"[autotune] profile {label} "
+                  f"({arms['_decisions']} decisions, "
+                  f"epoch {arms['_last_epoch']}): {fitted}", flush=True)
+        for entry in gw.tuner.advise_global(idx.ingest_lag(),
+                                            n_series=int(idx.raw.n)):
+            print(f"[autotune] [{entry.node_id}] {entry.text}", flush=True)
     gw.close()
     idx.close()
 
@@ -345,6 +366,12 @@ def main():
                          "until p99 recovers (hysteresis)")
     ap.add_argument("--requests", type=int, default=400,
                     help="gateway mode: total client requests to submit")
+    ap.add_argument("--autotune", action="store_true",
+                    help="gateway mode: per-request tier selection via the "
+                         "online autotuner (measured-feedback bandit over "
+                         "the tier/n_blocks grid) instead of the static "
+                         "recommender rule; adaptation state is logged "
+                         "every 64 requests")
     ap.add_argument("--approx", action="store_true",
                     help="deprecated alias for --tier approx")
     ap.add_argument("--no-prewarm", dest="prewarm", action="store_false",

@@ -1,0 +1,23 @@
+"""Bad fixture: the PR 10 decision-surface types (recommender verdicts,
+autotuner records, gateway stats) mutated or declared unfrozen."""
+import dataclasses
+
+
+@dataclasses.dataclass
+class TierDecision:  # BAD: catalog requires TierDecision frozen=True
+    tier: str = "exact"
+    n_blocks: int = 0
+
+
+def tweak(rec: "Recommendation", dec: TierDecision):
+    rec.materialized = True  # BAD: attribute write on a published verdict
+    dec.n_blocks = 4  # BAD: attribute write on a tier decision
+
+
+def relabel(entry: "RationaleEntry", d: "DecisionRecord"):
+    entry.text = "edited"  # BAD: rationale entries are append-only history
+    d.knobs = None  # BAD: decision records are immutable once traced
+
+
+def inflate(st: "GatewayStats"):
+    st.served += 1  # BAD: stats snapshots are point-in-time copies

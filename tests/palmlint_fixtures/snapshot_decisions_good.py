@@ -1,0 +1,28 @@
+"""Good fixture: decision types declared frozen, replaced instead of
+mutated — and containers OF protected types are ordinary variables (the
+container is not itself the protected object)."""
+import dataclasses
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class TierDecision:
+    tier: str = "exact"
+    n_blocks: int = 0
+
+
+def retier(dec: TierDecision) -> TierDecision:
+    return dataclasses.replace(dec, tier="approx", n_blocks=2)
+
+
+def collect(entries: List["RationaleEntry"],
+            arms: Dict["Knobs", float],
+            pending: Optional["DecisionRecord"]):
+    entries.append(None)  # a list OF entries may grow; entries may not
+    arms.clear()  # dict keyed by Knobs is plain mutable state
+    pending = None  # rebinding a local is never a mutation
+    return entries, arms, pending
+
+
+def read(st: "GatewayStats") -> int:
+    return st.served + st.batches  # reads are always fine

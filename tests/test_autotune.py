@@ -1,0 +1,306 @@
+"""Online autotuner: seeded determinism, model refit convergence,
+profile isolation, epoch forgetting, trace schema, and the gateway
+integration (tier selection consults the fitted model; observed outcomes
+feed back; answers stay bitwise-equal to the direct engine calls)."""
+import numpy as np
+import pytest
+
+from repro.core.autotune import (
+    DECISION_SCHEMA, N_BLOCKS_GRID, AutoTuner, AutoTunerConfig, Knobs,
+    knob_grid, workload_key,
+)
+from repro.core.recommender import Scenario, serving_tier
+
+K9 = dict(target_recall=0.9, k=5, batch_rung=16)
+
+
+def _env(knobs: Knobs):
+    """Synthetic ground truth: approx latency grows with n_blocks, exact
+    is expensive; recall follows a saturating curve steeper than the
+    static prior (the mismatch the tuner must discover)."""
+    if knobs.tier == "exact":
+        return 9.0, 1.0
+    return 0.8 + 0.45 * knobs.n_blocks, min(1.0, 0.82 + 0.05 * knobs.n_blocks)
+
+
+def _drive(tuner, key, n=250, epoch=0, n_series=10**6, jitter=None):
+    for i in range(n):
+        d = tuner.decide(key, epoch=epoch, n_series=n_series)
+        for kn in filter(None, (d.knobs, d.shadow)):
+            lat, rec = _env(kn)
+            if jitter is not None:
+                lat *= 1.0 + jitter * ((i % 7) - 3) / 10.0
+            tuner.observe(key, kn, lat_ms=lat, epoch=epoch, recall=rec)
+
+
+def test_knob_grid_shape():
+    arms = knob_grid()
+    assert arms[0] == Knobs("exact", 0)
+    assert tuple(a.n_blocks for a in arms[1:]) == N_BLOCKS_GRID
+    assert all(a.tier == "approx" for a in arms[1:])
+
+
+def test_workload_key_buckets_windows_pow2():
+    a = workload_key(target_recall=0.9, k=5, window=(0, 5), batch_rung=8)
+    b = workload_key(target_recall=0.9, k=5, window=(2, 7), batch_rung=8)
+    c = workload_key(target_recall=0.9, k=5, window=(0, 99), batch_rung=8)
+    assert a == b  # same width bucket -> same profile
+    assert a != c
+    assert workload_key(k=5, batch_rung=8).window_bucket == -1
+
+
+def test_seeded_determinism():
+    """Same seed + same observation sequence -> identical decision and
+    observation traces, bit for bit."""
+    runs = []
+    for _ in range(2):
+        t = AutoTuner(AutoTunerConfig(seed=42))
+        key = workload_key(**K9)
+        _drive(t, key, n=120)
+        runs.append(t.trace())
+    assert runs[0] == runs[1]
+
+
+def test_refit_converges_to_truly_best_arm():
+    """The static priors rank exact as expensive and shallow approx as
+    low-recall; the injected ground truth says approx@2 already clears
+    the target cheaply. The fitted models must converge there."""
+    t = AutoTuner(AutoTunerConfig(seed=7, epsilon=0.3))
+    key = workload_key(**K9)
+    _drive(t, key, n=300)
+    last = [e for e in t.trace() if e["kind"] == "decide"][-40:]
+    exploit = [e for e in last if not e["explore"]]
+    picks = {(e["tier"], e["n_blocks"]) for e in exploit}
+    assert picks == {("approx", 2)}, picks
+
+
+def test_refit_estimates_near_ground_truth():
+    t = AutoTuner(AutoTunerConfig(seed=1, epsilon=0.3))
+    key = workload_key(**K9)
+    _drive(t, key, n=300, jitter=0.1)
+    prof = t._profiles[key]
+    for kn, arm in prof.arms.items():
+        lat, rec = _env(kn)
+        if arm.lat_w < 6.0:  # unexplored arms keep their priors
+            continue
+        assert arm.lat_ms == pytest.approx(lat, rel=0.25)
+        assert arm.recall == pytest.approx(rec, abs=0.05)
+
+
+def test_profile_isolation():
+    """A misbehaving tenant's observations must not move another request
+    shape's fitted model."""
+    t = AutoTuner(AutoTunerConfig(seed=0))
+    good = workload_key(**K9)
+    bad = workload_key(target_recall=0.5, k=3, batch_rung=8)
+    _drive(t, good, n=150)
+    snap_before = {kn: (a.lat_ms, a.recall, a.lat_w, a.recall_w)
+                   for kn, a in t._profiles[good].arms.items()}
+    for _ in range(200):  # pathological outcomes on the OTHER profile
+        d = t.decide(bad, epoch=0, n_series=10**6)
+        t.observe(bad, d.knobs, lat_ms=500.0, epoch=0, recall=0.01)
+    snap_after = {kn: (a.lat_ms, a.recall, a.lat_w, a.recall_w)
+                  for kn, a in t._profiles[good].arms.items()}
+    assert snap_before == snap_after
+
+
+def test_strict_recall_is_always_exact():
+    """target_recall >= 1.0 is contractually exact: never bandit-routed,
+    never explored, even at epsilon=1."""
+    t = AutoTuner(AutoTunerConfig(seed=0, epsilon=1.0))
+    key = workload_key(target_recall=1.0, k=5, batch_rung=16)
+    for _ in range(50):
+        d = t.decide(key, epoch=0, n_series=10**6)
+        assert (d.knobs.tier, d.knobs.n_blocks, d.explore,
+                d.shadow) == ("exact", 0, False, None)
+    assert t.counters()["explores"] == 0
+
+
+def test_untargeted_workload_is_exact():
+    t = AutoTuner(AutoTunerConfig(seed=0, epsilon=1.0))
+    d = t.decide(workload_key(k=5, batch_rung=8), epoch=0, n_series=10**6)
+    assert d.knobs == Knobs("exact", 0)
+
+
+def test_forced_arm_pins_every_decision():
+    arm = Knobs("approx", 2)
+    t = AutoTuner(AutoTunerConfig(seed=0, forced=arm))
+    key = workload_key(**K9)
+    for _ in range(30):
+        d = t.decide(key, epoch=0, n_series=10**6)
+        assert d.knobs == arm and not d.explore and d.shadow is None
+
+
+def test_priors_match_static_tree_at_zero_observations():
+    """Before any measurement the tuner IS the static recommender: for a
+    store where exact is priced out, the first greedy decision lands on
+    the same n_blocks the frozen rule tree picks."""
+    s = Scenario(streaming=True, n_series=10**6, series_len=128,
+                 uses_windows=True, target_recall=0.9, query_batch=16)
+    dec = serving_tier(s)
+    t = AutoTuner(AutoTunerConfig(seed=0, epsilon=0.0))
+    d = t.decide(workload_key(**K9), epoch=0, n_series=10**6)
+    assert (d.knobs.tier, d.knobs.n_blocks) == (dec.tier, dec.n_blocks)
+
+
+def test_epoch_advance_decays_evidence():
+    t = AutoTuner(AutoTunerConfig(seed=0, epoch_forget=0.5))
+    key = workload_key(**K9)
+    _drive(t, key, n=100, epoch=3)
+    w_before = {kn: (a.lat_w, a.recall_w)
+                for kn, a in t._profiles[key].arms.items()}
+    t.decide(key, epoch=4, n_series=10**6)  # epoch moved -> refit decay
+    prof = t._profiles[key]
+    assert t.counters()["epoch_refits"] == 1
+    assert prof.last_epoch == 4
+    for kn, (lw, rw) in w_before.items():
+        assert prof.arms[kn].lat_w == pytest.approx(0.5 * lw)
+        assert prof.arms[kn].recall_w == pytest.approx(0.5 * rw)
+    # same epoch again: no further decay
+    t.decide(key, epoch=4, n_series=10**6)
+    assert t.counters()["epoch_refits"] == 1
+
+
+def test_exponential_forgetting_tracks_drift():
+    """After the environment shifts, the fitted latency walks to the new
+    level — old observations wash out at rate ``forget``."""
+    t = AutoTuner(AutoTunerConfig(seed=0, forget=0.8))
+    key = workload_key(**K9)
+    arm = Knobs("approx", 2)
+    for _ in range(50):
+        t.observe(key, arm, lat_ms=2.0, epoch=0, recall=0.95, n_series=10**6)
+    for _ in range(50):
+        t.observe(key, arm, lat_ms=20.0, epoch=0, recall=0.6, n_series=10**6)
+    fitted = t._profiles[key].arms[arm]
+    assert fitted.lat_ms == pytest.approx(20.0, rel=0.05)
+    assert fitted.recall == pytest.approx(0.6, abs=0.02)
+
+
+def test_conflict_when_nothing_feasible():
+    """Recall target above every arm's fitted recall except exact, budget
+    below exact's fitted cost -> the decision carries conflict=True (the
+    caller sheds/flags), mirroring the static tree's contract."""
+    t = AutoTuner(AutoTunerConfig(seed=0, epsilon=0.0))
+    key = workload_key(target_recall=0.99, latency_budget_ms=0.01, k=5,
+                       batch_rung=16)
+    d = t.decide(key, epoch=0, n_series=10**6)
+    assert d.conflict
+
+
+def test_trace_schema():
+    t = AutoTuner(AutoTunerConfig(seed=5))
+    key = workload_key(**K9)
+    _drive(t, key, n=80, epoch=2)
+    trace = t.trace()
+    assert trace, "trace must not be empty"
+    legal_nb = {0} | set(N_BLOCKS_GRID)
+    seqs = [e["seq"] for e in trace]
+    assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)
+    epochs = [e["epoch"] for e in trace]
+    assert epochs == sorted(epochs)
+    for e in trace:
+        assert e["schema"] == DECISION_SCHEMA
+        assert e["kind"] in ("decide", "observe")
+        assert e["tier"] in ("exact", "approx")
+        assert e["n_blocks"] in legal_nb
+        if e["tier"] == "exact":
+            assert e["n_blocks"] == 0
+        if e["kind"] == "observe":
+            assert isinstance(e["served"], bool)
+            if e["observed_recall"] is not None:
+                assert 0.0 <= e["observed_recall"] <= 1.0
+    assert any(e["kind"] == "observe" for e in trace)
+
+
+def test_trace_is_bounded():
+    t = AutoTuner(AutoTunerConfig(seed=0, max_trace=32))
+    key = workload_key(**K9)
+    _drive(t, key, n=100)
+    assert len(t.trace()) == 32
+
+
+def test_snapshot_is_jsonable():
+    import json
+
+    t = AutoTuner(AutoTunerConfig(seed=0))
+    _drive(t, workload_key(**K9), n=40)
+    json.dumps(t.snapshot())
+
+
+def test_advise_global_flags_lagging_ingest():
+    t = AutoTuner()
+    lagging = {"lag_entries": 5000, "runs_pending_merge": 3}
+    ids = [e.node_id for e in t.advise_global(lagging, n_series=1 << 21)]
+    assert "advise/ingest-async" in ids and "advise/shard-mesh" in ids
+    ids = [e.node_id for e in t.advise_global(
+        {"lag_entries": 0, "runs_pending_merge": 0}, n_series=1000)]
+    assert ids == ["advise/ingest-ok"]
+
+
+# ---------------------------------------------------------------- gateway
+@pytest.fixture(scope="module")
+def small_index():
+    from repro.core import StreamConfig, StreamingIndex, SummarizationConfig
+
+    scfg = SummarizationConfig(series_len=32, n_segments=8, card_bits=8)
+    idx = StreamingIndex(StreamConfig(
+        scheme="BTP", summarization=scfg, buffer_entries=256,
+        growth_factor=4, block_size=64))
+    rng = np.random.default_rng(0)
+    for b in range(3):
+        x = np.cumsum(rng.normal(size=(200, 32)), axis=1,
+                      dtype=np.float64).astype(np.float32)
+        idx.ingest(x, np.full(200, b, np.int64))
+    yield idx
+    idx.close()
+
+
+def test_gateway_autotune_parity_and_feedback(small_index):
+    """With the tuner routing, gateway answers stay bitwise-equal to the
+    direct engine call at whatever tier was served, and every served
+    batch feeds observations back into the tuner."""
+    from repro.core import Gateway, GatewayConfig
+
+    gw = Gateway(small_index, GatewayConfig(
+        deadline_ms=2.0, max_batch=8, k=3, autotune=True,
+        autotune_cfg=AutoTunerConfig(seed=0)))
+    try:
+        rng = np.random.default_rng(9)
+        Q = np.cumsum(rng.normal(size=(24, 32)), axis=1,
+                      dtype=np.float64).astype(np.float32)
+        resps = [gw.submit(Q[i], target_recall=0.9).result(timeout=60)
+                 for i in range(Q.shape[0])]
+        for i, r in enumerate(resps):
+            if r.tier_served == "exact":
+                vals, gids, _ = small_index.knn_batch(Q[i][None], k=3)
+            else:
+                vals, gids, _ = small_index.knn_approx_batch(
+                    Q[i][None], k=3, n_blocks=max(r.n_blocks, 1))
+            np.testing.assert_array_equal(r.ids, gids[0])
+            np.testing.assert_array_equal(r.vals, vals[0])
+        st = gw.snapshot()
+        assert st.autotune
+        assert st.tuner_decisions >= len(resps)
+        assert st.tuner_observations >= len(resps)
+        trace = gw.tuner.trace()
+        assert any(e["kind"] == "observe" for e in trace)
+        assert any(e["kind"] == "decide" for e in trace)
+    finally:
+        gw.close()
+
+
+def test_gateway_strict_requests_stay_exact_under_autotune(small_index):
+    from repro.core import Gateway, GatewayConfig
+
+    gw = Gateway(small_index, GatewayConfig(
+        deadline_ms=2.0, max_batch=8, k=3, autotune=True,
+        autotune_cfg=AutoTunerConfig(seed=0, epsilon=1.0)))
+    try:
+        rng = np.random.default_rng(2)
+        Q = np.cumsum(rng.normal(size=(10, 32)), axis=1,
+                      dtype=np.float64).astype(np.float32)
+        for i in range(Q.shape[0]):
+            r = gw.submit(Q[i], target_recall=1.0).result(timeout=60)
+            assert r.tier_served == "exact" and not r.shed
+    finally:
+        gw.close()

@@ -11,6 +11,44 @@ import pytest
 REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 ROW_RE = re.compile(r"^[^,\s][^,]*,\d+(\.\d+)?,[^,]*(;[^,]*)*$")
 
+LEGAL_NB = {0, 1, 2, 4, 8, 16}
+
+
+def _assert_adaptation_traces(payload):
+    """The serving artifact carries the autotuner's decision/observation
+    traces (DECISION_SCHEMA=1): per scenario, monotone seq, non-decreasing
+    epoch, legal knob values, recall in [0, 1] — the machine-readable
+    adaptation record downstream perf diffs consume."""
+    rows = {rec["name"] for rec in payload["rows"]}
+    adapt = {n for n in rows if n.startswith("serving/adapt_")}
+    assert adapt, f"adaptation sweep rows missing from {sorted(rows)}"
+    traces = payload["adaptation_traces"]
+    assert set(traces) == {n.split("serving/adapt_", 1)[1] for n in adapt}
+    for name, t in traces.items():
+        assert t["fixed"], f"{name}: fixed-arm baselines missing"
+        for metrics in t["fixed"].values():
+            assert 0.0 <= metrics["recall"] <= 1.0
+            assert metrics["p99_ms"] > 0.0
+        entries = t["adapted"]
+        assert entries, f"{name}: empty adaptation trace"
+        seqs = [e["seq"] for e in entries]
+        assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs), name
+        epochs = [e["epoch"] for e in entries]
+        assert epochs == sorted(epochs), f"{name}: epoch went backwards"
+        for e in entries:
+            assert e["schema"] == 1, e
+            assert e["kind"] in ("decide", "observe"), e
+            assert e["tier"] in ("exact", "approx"), e
+            assert e["n_blocks"] in LEGAL_NB, e
+            if e["tier"] == "exact":
+                assert e["n_blocks"] == 0, e
+            if e["kind"] == "observe":
+                assert isinstance(e["served"], bool), e
+                rec = e["observed_recall"]
+                assert rec is None or 0.0 <= rec <= 1.0, e
+        kinds = {e["kind"] for e in entries}
+        assert kinds == {"decide", "observe"}, f"{name}: {kinds}"
+
 
 @pytest.mark.slow
 def test_benchmarks_run_smoke_mode(tmp_path):
@@ -38,7 +76,7 @@ def test_benchmarks_run_smoke_mode(tmp_path):
         assert m and m.group(1) == m.group(2), line
     # machine-readable perf-trajectory artifacts are emitted per module
     # (smoke suffix so CI never clobbers the committed trajectory)
-    for mod in ("query", "streaming"):
+    for mod in ("query", "streaming", "serving"):
         path = tmp_path / f"BENCH_{mod}.smoke.json"
         assert path.exists(), f"missing artifact {path}"
         payload = json.loads(path.read_text())
@@ -54,12 +92,18 @@ def test_benchmarks_run_smoke_mode(tmp_path):
         if mod == "query":
             assert any("recall_at10" in rec for rec in payload["rows"])
             assert any("modeled_io_s" in rec for rec in payload["rows"])
+            # the exact-tier batched sweep only: the screen-dtype sweep's
+            # *_knn_batch_b* rows carry fallback/compression columns, not
+            # the engine-accounting trio
             batch_rows = [rec for rec in payload["rows"]
-                          if "_knn_batch_b" in rec["name"]]
+                          if "_knn_batch_b" in rec["name"]
+                          and not rec["name"].startswith("query/screen_")]
             assert batch_rows, "batched exact sweep missing"
             for rec in batch_rows:  # per-config engine accounting
                 assert all(key in rec for key in
                            ("trace_count", "h2d_bytes", "d2h_bytes")), rec
+        if mod == "serving":
+            _assert_adaptation_traces(payload)
         if mod == "streaming":
             # the storage-backend sweep: one row per backend, each with
             # modeled columns; the file row also has real measured bytes

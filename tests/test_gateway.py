@@ -370,3 +370,30 @@ def test_engine_batch_hist_is_monotonic(idx):
     h1 = dict(engine.stats["batch_hist"])
     assert all(h1.get(kk, 0) >= v for kk, v in h0.items())
     assert sum(h1.values()) >= sum(h0.values())
+
+
+# ------------------------------------------------------------ typed stats
+def test_snapshot_is_typed_and_dict_view_matches(idx):
+    """snapshot() returns the frozen GatewayStats; snapshot_stats() is its
+    exact dict rendering (the old surface, kept for log emitters)."""
+    import dataclasses as dc
+
+    from repro.core import GatewayStats
+
+    gw = _gateway(idx)
+    try:
+        for i in range(5):
+            gw.submit(_series(1, 40 + i)[0]).result(timeout=60)
+        snap = gw.snapshot()
+        assert isinstance(snap, GatewayStats)
+        assert dc.asdict(gw.snapshot()) == gw.snapshot_stats()
+        assert snap.served == 5 and snap.submitted == 5
+        assert not snap.autotune and snap.tuner_decisions == 0
+        with pytest.raises(dc.FrozenInstanceError):
+            snap.served = 0
+        # the dict view keeps the pre-redesign key set (+ the tuner block)
+        keys = set(gw.snapshot_stats())
+        assert {"served", "submitted", "batches", "queue_depth", "shedding",
+                "p50_ms", "p99_ms", "batch_hist", "autotune"} <= keys
+    finally:
+        gw.close()

@@ -247,3 +247,25 @@ def test_github_format_renders_error_annotations(capsys):
     assert rc == 1
     out = capsys.readouterr().out
     assert "::error file=tests/palmlint_fixtures/lock_bad.py" in out
+
+
+def test_snapshot_decision_types_bad_fixture_exact_findings():
+    """PR 10 decision surface: recommender verdicts, autotuner records,
+    and gateway stats snapshots are protected like run-set snapshots."""
+    live, _ = lint_fixture("snapshot_decisions_bad.py")
+    assert as_tuples(live) == [
+        ("snapshot-immutability", 7),   # TierDecision without frozen=True
+        ("snapshot-immutability", 13),  # rec.materialized = True
+        ("snapshot-immutability", 14),  # dec.n_blocks = 4
+        ("snapshot-immutability", 18),  # entry.text = "edited"
+        ("snapshot-immutability", 19),  # d.knobs = None
+        ("snapshot-immutability", 23),  # st.served += 1
+    ]
+
+
+def test_snapshot_decision_types_good_fixture_is_clean():
+    """Containers OF protected types (List[RationaleEntry],
+    Dict[Knobs, ...], Optional[DecisionRecord]) are not themselves
+    protected — only the outermost annotation name counts."""
+    live, suppressed = lint_fixture("snapshot_decisions_good.py")
+    assert live == [] and suppressed == []

@@ -164,3 +164,69 @@ def test_serving_tier_is_deterministic_per_profile():
     assert first[0].tier == "exact" and not first[0].conflict
     assert first[1].tier == "approx" and first[1].conflict
     assert first[3] == serving_tier(profiles[3])
+
+
+# --------------------------------------------- structured decision surface
+def test_rationale_entries_carry_stable_node_ids():
+    rec = recommend(Scenario(streaming=True, n_series=10**6, uses_windows=True,
+                             target_recall=0.9, latency_budget_ms=0.3))
+    ids = [e.node_id for e in rec.rationale]
+    assert all("/" in i for i in ids), ids
+    assert "ingest/streaming" in ids
+    assert any(i.startswith("serve/") for i in ids)
+    # node ids render in describe() so logs stay greppable by machine key
+    assert f"[{ids[0]}]" in rec.describe()
+
+
+def test_decision_objects_are_frozen():
+    import dataclasses as dc
+
+    import pytest
+
+    rec = recommend(Scenario(streaming=False, n_series=10**6,
+                             target_recall=0.8))
+    with pytest.raises(dc.FrozenInstanceError):
+        rec.index = "clsm"
+    with pytest.raises(dc.FrozenInstanceError):
+        rec.decision.tier = "exact"
+    with pytest.raises(dc.FrozenInstanceError):
+        rec.rationale[0].text = "x"
+
+
+def test_embedded_decision_matches_standalone_serving_tier():
+    from repro.core import serving_tier
+
+    s = Scenario(streaming=True, n_series=10**7, uses_windows=True,
+                 target_recall=0.85, query_batch=16)
+    assert recommend(s).decision == serving_tier(s)
+
+
+def test_embedded_decision_rationale_is_the_serving_slice():
+    """The embedded TierDecision carries ONLY its own serve/* steps, not
+    the whole tree's chain."""
+    rec = recommend(Scenario(streaming=True, n_series=10**6,
+                             uses_windows=True, target_recall=0.8))
+    assert rec.decision.rationale
+    assert all(e.node_id.startswith("serve/")
+               for e in rec.decision.rationale)
+    assert len(rec.decision.rationale) < len(rec.rationale)
+
+
+def test_rationale_entry_back_compat_reads_as_string():
+    e = recommend(Scenario(streaming=False, n_series=10**6)).rationale[0]
+    assert str(e) == e.text
+    assert e.text[:4] in e  # __contains__ matches the text
+
+
+def test_exact_fits_budget_beats_approx_regression():
+    """Regression (serving-tier bugfix): with a sub-1.0 recall target AND
+    a budget the exact tier fits, exact must win — the old tree jumped to
+    approx whenever target_recall < 1.0 and then flagged a phantom
+    conflict."""
+    from repro.core import serving_tier
+
+    dec = serving_tier(Scenario(streaming=False, n_series=10**4,
+                                target_recall=0.9, latency_budget_ms=100.0))
+    assert dec.tier == "exact" and dec.n_blocks == 0
+    assert not dec.conflict
+    assert "serve/exact-fits-budget" in [e.node_id for e in dec.rationale]
